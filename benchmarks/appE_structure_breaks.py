@@ -1,0 +1,57 @@
+"""Paper Appendix E: control-limit structure breaks in general cases.
+
+Cases 4-7: B_min > 1, nonlinear energy, size-dependent service — the SMDP
+solutions need NOT be control-limit policies (which is the argument for the
+general solver over threshold search).
+"""
+from __future__ import annotations
+
+from repro.core import ConstantProfile, LOG_ENERGY, ServiceModel, SMDPSpec, \
+    solve, GOOGLENET_P4_LATENCY, GOOGLENET_P4_ENERGY
+from repro.core.policies import is_control_limit
+
+from .common import emit, timed
+
+B = 8
+
+
+def run() -> None:
+    cases = {
+        # case 4: B_min = 5 (violates Assumption 2)
+        "case4_bmin5": dict(latency=ConstantProfile(2.4252), family="det",
+                            b_min=5, energy=GOOGLENET_P4_ENERGY),
+        # case 5: log energy (violates Assumption 3)
+        "case5_log_energy": dict(latency=ConstantProfile(2.4252), family="det",
+                                 b_min=1, energy=LOG_ENERGY),
+        # case 6/7: size-dependent service time (violates Assumption 1)
+        "case6_size_dep": dict(latency=GOOGLENET_P4_LATENCY, family="det",
+                               b_min=1, energy=GOOGLENET_P4_ENERGY),
+        "case7_general": dict(latency=GOOGLENET_P4_LATENCY, family="expo",
+                              b_min=3, energy=LOG_ENERGY),
+    }
+    for name, kw in cases.items():
+        broke = 0
+        total = 0
+
+        def sweep():
+            nonlocal broke, total
+            svc = ServiceModel(latency=kw["latency"], family=kw["family"])
+            mu = 1.0 / float(svc.mean(B))
+            for rho in (0.1, 0.3, 0.5, 0.7, 0.9):
+                for w2 in (0.0, 0.5, 1.0):
+                    spec = SMDPSpec(
+                        lam=rho * B * mu, service=svc, energy=kw["energy"],
+                        b_min=kw["b_min"], b_max=B, w1=1.0, w2=w2,
+                        s_max=100, c_o=100.0,
+                    )
+                    res = solve(spec, delta=1e-3, max_s_max=1024)
+                    total += 1
+                    is_cl, _ = is_control_limit(res.rvi.policy, res.spec.s_max, B)
+                    broke += int(not is_cl)
+
+        _, us = timed(sweep)
+        emit(f"appE_{name}", us / max(total, 1), f"non_control_limit={broke}/{total}")
+
+
+if __name__ == "__main__":
+    run()

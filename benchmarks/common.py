@@ -1,0 +1,51 @@
+"""Shared scenario builders + CSV emission for the benchmark suite.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (one per paper
+artifact it reproduces); `derived` carries the headline quantity that the
+paper's table/figure conveys.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core import (
+    GOOGLENET_P4_ENERGY,
+    GOOGLENET_P4_LATENCY,
+    ServiceModel,
+    SMDPSpec,
+)
+
+BMAX = 32
+
+
+def paper_spec(rho=0.7, w2=1.0, s_max=128, b_max=BMAX, c_o=100.0,
+               family="det", latency=None, energy=None, b_min=1):
+    svc = ServiceModel(latency=latency or GOOGLENET_P4_LATENCY, family=family)
+    lam = rho * b_max / float(svc.mean(b_max))
+    return SMDPSpec(
+        lam=lam, service=svc, energy=energy or GOOGLENET_P4_ENERGY,
+        b_min=b_min, b_max=b_max, w1=1.0, w2=w2, s_max=s_max, c_o=c_o,
+    )
+
+
+def energy_table(spec: SMDPSpec) -> np.ndarray:
+    return np.array(
+        [0.0] + [float(spec.energy(b)) for b in range(1, spec.b_max + 1)]
+    )
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    """Returns (result, microseconds per call)."""
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)

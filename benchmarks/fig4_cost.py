@@ -1,0 +1,33 @@
+"""Paper Fig. 4: average cost per unit time, SMDP vs benchmarks."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tradeoff import average_cost_grid
+
+from .common import emit, paper_spec, timed
+
+
+def run() -> None:
+    w2s = [0.0, 1.0, 3.0, 7.0, 15.0]
+    for rho in (0.1, 0.3, 0.7):
+        grid, us = timed(average_cost_grid, paper_spec(rho=rho), w2s)
+        smdp = np.asarray(grid["smdp"])
+        worst_violation = 0.0
+        best_gap = 0.0
+        for name, costs in grid.items():
+            if name == "smdp":
+                continue
+            c = np.asarray(costs)
+            worst_violation = max(worst_violation, float((smdp - c).max()))
+            best_gap = max(best_gap, float(np.nanmax((c - smdp) / smdp)))
+        emit(
+            f"fig4_avg_cost_rho{rho}",
+            us / len(w2s),
+            f"smdp_always_best={worst_violation <= 1e-9};"
+            f"max_bench_excess={best_gap:.1%}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Fig. 5: latency-energy tradeoff curves + Pareto dominance."""
+from __future__ import annotations
+
+from repro.core.tradeoff import benchmark_points, smdp_tradeoff_curve
+
+from .common import emit, paper_spec, timed
+
+W2S = [0.0, 0.3, 0.8, 1.3, 1.6, 2.2, 5.0, 15.0, 50.0]
+
+
+def run() -> None:
+    for rho in (0.3, 0.7):
+        spec = paper_spec(rho=rho)
+        curve, us = timed(smdp_tradeoff_curve, spec, W2S)
+        bench = benchmark_points(spec)
+        dominated_by_bench = 0
+        for pt in curve:
+            for w_b, p_b in bench.values():
+                if w_b < pt.w_bar - 1e-6 and p_b < pt.p_bar - 1e-6:
+                    dominated_by_bench += 1
+        pts = ";".join(f"w2={p.w2}:W={p.w_bar:.2f}ms:P={p.p_bar:.2f}W" for p in curve[:4])
+        emit(
+            f"fig5_tradeoff_rho{rho}",
+            us / len(W2S),
+            f"smdp_points_dominated={dominated_by_bench}/ {len(curve)};{pts}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Fig. 6 + Table I: latency distribution and percentile analysis.
+
+Paper anchors (rho = 0.7): static-8 -> (P, W, P50, P90, P95) =
+(46.27, 6.85, 6.51, 9.85, 11.34); SMDP w2=1.6 -> (44.96, 6.90, 6.83, 9.23,
+9.96); SMDP w2=2.2 -> (44.41, 7.81, 7.72, 10.45, 11.24).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import build_smdp, relative_value_iteration, static_policy
+from repro.core.simulate import simulate
+
+from .common import emit, energy_table, paper_spec, timed
+
+PAPER = {
+    "static8": (46.27, 6.85, 6.51, 9.85, 11.34),
+    "smdp_w2_1.6": (44.96, 6.90, 6.83, 9.23, 9.96),
+    "smdp_w2_2.2": (44.41, 7.81, 7.72, 10.45, 11.24),
+}
+
+
+def run(n_epochs: int = 150_000) -> None:
+    spec = paper_spec(rho=0.7)
+    en = energy_table(spec)
+    policies = {"static8": static_policy(8, spec.s_max)}
+    for w2 in (1.6, 2.2):
+        sp = dataclasses.replace(spec, w2=w2)
+        policies[f"smdp_w2_{w2}"] = relative_value_iteration(build_smdp(sp)).policy
+
+    for name, pol in policies.items():
+        sim, us = timed(
+            simulate, pol[:-1], spec.service, en, spec.lam, spec.b_max,
+            n_epochs=n_epochs, seed=0,
+        )
+        p50, p90, p95 = sim.percentile([50, 90, 95])
+        want = PAPER[name]
+        got = (sim.p_bar, sim.w_bar, p50, p90, p95)
+        max_rel = max(abs(g - w) / w for g, w in zip(got, want))
+        emit(
+            f"table1_{name}",
+            us / n_epochs,
+            f"P={sim.p_bar:.2f}W;W={sim.w_bar:.2f}ms;P50={p50:.2f};"
+            f"P90={p90:.2f};P95={p95:.2f};max_rel_err_vs_paper={max_rel:.1%}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Paper Fig. 8: logarithmic energy consumption (strong energy batching)."""
+from __future__ import annotations
+
+from repro.core import LOG_ENERGY
+from repro.core.tradeoff import benchmark_points, smdp_tradeoff_curve
+
+from .common import emit, paper_spec, timed
+
+W2S = [0.0, 0.3, 1.0, 3.0, 10.0]
+
+
+def run() -> None:
+    for rho in (0.3, 0.7):
+        spec = paper_spec(rho=rho, energy=LOG_ENERGY)
+        curve, us = timed(smdp_tradeoff_curve, spec, W2S)
+        bench = benchmark_points(spec)
+        dominated = sum(
+            1 for pt in curve for (w_b, p_b) in bench.values()
+            if w_b < pt.w_bar - 1e-6 and p_b < pt.p_bar - 1e-6
+        )
+        # paper claim: tradeoff is much steeper (big power range)
+        p_range = max(pt.p_bar for pt in curve) - min(pt.p_bar for pt in curve)
+        emit(
+            f"fig8_log_energy_rho{rho}",
+            us / len(W2S),
+            f"dominated={dominated};power_range={p_range:.2f}W",
+        )
+
+
+if __name__ == "__main__":
+    run()

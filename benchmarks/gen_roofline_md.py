@@ -1,0 +1,30 @@
+"""Render EXPERIMENTS.md §Roofline final table from artifacts (run once)."""
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def main():
+    rows = []
+    for p in sorted((ROOT / "artifacts" / "dryrun").glob("*__single_pod.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        dom = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        frac = rl["compute_s"] / dom if dom else 0.0
+        ur = r.get("useful_flops_ratio")
+        rows.append(
+            (r["arch"], r["shape"], rl["compute_s"], rl["memory_s"],
+             rl["collective_s"], rl["bottleneck"], frac,
+             "-" if ur is None else f"{min(ur, 9.99):.2f}")
+        )
+    print("| arch | shape | compute (s) | memory (s) | collective (s) | bottleneck | compute-fraction | 6ND/HLO |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a, s, c, m, co, b, f, u in rows:
+        print(f"| {a} | {s} | {c:.3g} | {m:.3g} | {co:.3g} | {b} | {f:.1%} | {u} |")
+
+
+if __name__ == "__main__":
+    main()

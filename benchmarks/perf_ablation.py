@@ -1,0 +1,61 @@
+"""§Perf ablation: baseline vs optimized substrate per dry-run cell.
+
+Reads artifacts/dryrun_baseline (pre-optimization) and artifacts/dryrun
+(optimized) and emits the before/after dominant-term comparison that backs
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+ROOT = Path(__file__).resolve().parent.parent
+BASE = ROOT / "artifacts" / "dryrun_baseline"
+OPT = ROOT / "artifacts" / "dryrun"
+
+
+def _load(d: Path):
+    out = {}
+    if not d.exists():
+        return out
+    for p in d.glob("*__single_pod.json"):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok":
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def run() -> None:
+    base = _load(BASE)
+    opt = _load(OPT)
+    if not base or not opt:
+        emit("perf_ablation", 0.0, "need both artifacts/dryrun_baseline and artifacts/dryrun")
+        return
+    total_speedup = []
+    for key in sorted(set(base) & set(opt)):
+        b, o = base[key]["roofline"], opt[key]["roofline"]
+        b_dom = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        o_dom = max(o["compute_s"], o["memory_s"], o["collective_s"])
+        speedup = b_dom / o_dom if o_dom > 0 else float("inf")
+        total_speedup.append(speedup)
+        if speedup >= 1.15 or speedup <= 0.87:
+            emit(
+                f"perf_{key[0]}_{key[1]}",
+                0.0,
+                f"bound:{b_dom:.3g}s({b['bottleneck']})->"
+                f"{o_dom:.3g}s({o['bottleneck']});speedup={speedup:.1f}x",
+            )
+    import numpy as np
+
+    emit(
+        "perf_ablation_geomean",
+        0.0,
+        f"step-bound_geomean_speedup={float(np.exp(np.mean(np.log(total_speedup)))):.2f}x"
+        f"_over_{len(total_speedup)}_cells",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def rows(mesh: str = "single_pod"):
+    out = []
+    if not ART.exists():
+        return out
+    for p in sorted(ART.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") != "ok":
+            continue
+        out.append(rec)
+    return out
+
+
+def run() -> None:
+    recs = rows()
+    if not recs:
+        emit("roofline_report", 0.0, "no_artifacts_run_launch.dryrun_first")
+        return
+    worst = None
+    for rec in recs:
+        r = rec["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / dom if dom > 0 else 0.0
+        name = f"roofline_{rec['arch']}_{rec['shape']}"
+        emit(
+            name,
+            rec["compile_s"] * 1e6,
+            f"compute={r['compute_s']:.2e}s;memory={r['memory_s']:.2e}s;"
+            f"collective={r['collective_s']:.2e}s;bottleneck={r['bottleneck']};"
+            f"compute_fraction={frac:.2%}",
+        )
+        if worst is None or frac < worst[1]:
+            worst = (name, frac)
+    emit("roofline_worst_compute_fraction", 0.0, f"{worst[0]}={worst[1]:.2%}")
+
+
+if __name__ == "__main__":
+    run()

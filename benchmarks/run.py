@@ -1,0 +1,76 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark suite entry point: every paper table/figure + beyond-paper runs.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on module names")
+    args = ap.parse_args()
+
+    from . import (
+        appE_structure_breaks,
+        perf_ablation,
+        fig3_policies,
+        fig4_cost,
+        fig5_tradeoff,
+        fig6_percentiles,
+        fig7_ideal_parallel,
+        fig8_log_energy,
+        fig9_cov,
+        fig10_abstract_cost,
+        kernel_micro,
+        mmpp_bursty,
+        roofline_report,
+        table3_iteration_algos,
+        tpu_profile_scenario,
+    )
+
+    suites = [
+        ("fig3_policies", fig3_policies.run),
+        ("fig4_cost", fig4_cost.run),
+        ("fig5_tradeoff", fig5_tradeoff.run),
+        ("fig6_percentiles", fig6_percentiles.run),
+        ("fig7_ideal_parallel", fig7_ideal_parallel.run),
+        ("fig8_log_energy", fig8_log_energy.run),
+        ("fig9_cov", fig9_cov.run),
+        ("fig10_abstract_cost", fig10_abstract_cost.run),
+        ("table3_iteration_algos", table3_iteration_algos.run),
+        ("appE_structure_breaks", appE_structure_breaks.run),
+        ("tpu_profile_scenario", tpu_profile_scenario.run),
+        ("mmpp_bursty", mmpp_bursty.run),
+        ("kernel_micro", kernel_micro.run),
+        ("roofline_report", roofline_report.run),
+        ("perf_ablation", perf_ablation.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(
+            f"# {name} finished in {time.perf_counter() - t0:.1f}s",
+            file=sys.stderr,
+            flush=True,
+        )
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

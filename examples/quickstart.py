@@ -1,0 +1,67 @@
+"""Quickstart: solve the paper's GoogLeNet/TESLA-P4 scenario end to end.
+
+    PYTHONPATH=src python examples/quickstart.py [--rho 0.7] [--w2 1.6]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import (
+    GOOGLENET_P4_ENERGY,
+    GOOGLENET_P4_LATENCY,
+    ServiceModel,
+    SMDPSpec,
+    build_smdp,
+    evaluate_policy,
+    greedy_policy,
+    solve,
+    static_policy,
+)
+from repro.core.simulate import simulate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rho", type=float, default=0.7, help="traffic intensity")
+    ap.add_argument("--w2", type=float, default=1.6, help="power weight")
+    ap.add_argument("--b-max", type=int, default=32)
+    args = ap.parse_args()
+
+    svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+    lam = args.rho * args.b_max / float(svc.mean(args.b_max))
+    spec = SMDPSpec(
+        lam=lam, service=svc, energy=GOOGLENET_P4_ENERGY,
+        b_min=1, b_max=args.b_max, w1=1.0, w2=args.w2, s_max=128,
+    )
+    print(f"scenario: GoogLeNet on TESLA P4, rho={args.rho}, lambda={lam:.3f}/ms")
+    print(f"l(b) = 0.3051 b + 1.0524 ms ; zeta(b) = 19.899 b + 19.603 mJ")
+
+    res = solve(spec)
+    print(f"\nSMDP policy (state -> batch size), s_max={res.spec.s_max}:")
+    tab = res.action_table(48)
+    print("  s:", " ".join(f"{s:3d}" for s in range(0, 49, 4)))
+    print("  a:", " ".join(f"{int(tab[s]):3d}" for s in range(0, 49, 4)))
+    print(f"\nanalytic:  W={res.eval.w_bar:.3f} ms  P={res.eval.p_bar:.2f} W  "
+          f"g={res.eval.g:.4f}  (tail delta={res.eval.delta:.1e})")
+
+    mdp = res.mdp
+    for name, pol in [
+        ("greedy", greedy_policy(res.spec.s_max, 1, args.b_max)),
+        ("static-8", static_policy(8, res.spec.s_max)),
+        ("static-32", static_policy(32, res.spec.s_max)),
+    ]:
+        try:
+            ev = evaluate_policy(mdp, pol)
+            print(f"{name:9s}: W={ev.w_bar:.3f} ms  P={ev.p_bar:.2f} W  g={ev.g:.4f}")
+        except RuntimeError:
+            print(f"{name:9s}: unstable at this load")
+
+    en = np.array([0.0] + [float(GOOGLENET_P4_ENERGY(b)) for b in range(1, args.b_max + 1)])
+    sim = simulate(res.policy[:-1], svc, en, lam, args.b_max, n_epochs=100_000, seed=0)
+    p50, p95, p99 = sim.percentile([50, 95, 99])
+    print(f"\nsimulated ({sim.n_served} requests): W={sim.w_bar:.3f} ms  "
+          f"P={sim.p_bar:.2f} W  P50={p50:.2f}  P95={p95:.2f}  P99={p99:.2f}")
+
+
+if __name__ == "__main__":
+    main()

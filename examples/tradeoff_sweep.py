@@ -1,0 +1,37 @@
+"""Generate the latency-power tradeoff curve (paper Fig. 5) as CSV.
+
+    PYTHONPATH=src python examples/tradeoff_sweep.py [--rho 0.7] > curve.csv
+"""
+import argparse
+import sys
+
+from repro.core import GOOGLENET_P4_ENERGY, GOOGLENET_P4_LATENCY, ServiceModel, SMDPSpec
+from repro.core.tradeoff import benchmark_points, smdp_tradeoff_curve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rho", type=float, default=0.7)
+    ap.add_argument("--b-max", type=int, default=32)
+    ap.add_argument(
+        "--w2", type=float, nargs="+",
+        default=[0.0, 0.2, 0.5, 0.8, 1.3, 1.6, 2.2, 3.5, 5.0, 8.0, 15.0, 50.0],
+    )
+    args = ap.parse_args()
+
+    svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+    lam = args.rho * args.b_max / float(svc.mean(args.b_max))
+    spec = SMDPSpec(lam=lam, service=svc, energy=GOOGLENET_P4_ENERGY,
+                    b_min=1, b_max=args.b_max, w1=1.0, w2=0.0, s_max=128)
+
+    print("policy,w2,W_ms,P_watt")
+    for pt in smdp_tradeoff_curve(spec, args.w2):
+        print(f"smdp,{pt.w2},{pt.w_bar:.4f},{pt.p_bar:.4f}")
+    for name, (w, p) in benchmark_points(spec).items():
+        print(f"{name},,{w:.4f},{p:.4f}")
+    print("# pareto frontier = smdp rows; benchmarks lie on/above it",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Core SMDP dynamic-batching library (the paper's contribution).
+
+Numerical fidelity of the solver requires float64; we enable x64 here.  All
+model/serving code specifies dtypes explicitly (bf16/f32), so this is safe.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from .service_models import (  # noqa: E402,F401
+    AffineProfile,
+    ConstantProfile,
+    LogProfile,
+    PiecewiseMaxProfile,
+    ServiceModel,
+    TableProfile,
+    GOOGLENET_P4_LATENCY,
+    GOOGLENET_P4_ENERGY,
+    IDEAL_PARALLEL_LATENCY,
+    LOG_ENERGY,
+)
+from .smdp import SMDPSpec, TruncatedSMDP, build_smdp  # noqa: E402,F401
+from .rvi import RVIResult, relative_value_iteration  # noqa: E402,F401
+from .policies import (  # noqa: E402,F401
+    static_policy,
+    greedy_policy,
+    q_policy,
+    optimal_q_closed_form,
+)
+from .evaluate import PolicyEval, evaluate_policy  # noqa: E402,F401
+from .solve import solve, SolveResult  # noqa: E402,F401

@@ -1,0 +1,334 @@
+"""Relative value iteration (Algorithm 1) and App.-F baselines (AVI / API).
+
+The discrete-time backup is
+
+    J_{i+1}(s) = min_{a in A_s} { c~(s,a) + sum_j m~(j|s,a) H_i(j) }      (29)
+    H_{i+1}(s) = J_{i+1}(s) - J_{i+1}(s*)
+
+with span-based stopping.  Two backup implementations:
+
+  * dense  — einsum against the (S, A, S) transition tensor;
+  * banded — exploits the transition structure m(j|s,a) = p^{[a]}_{j-s+a}:
+             per action the backup is a windowed correlation of H with the
+             arrival pmf, an O(A*S*K) computation instead of O(A*S^2).
+             This is the form the Pallas TPU kernel (kernels/bellman.py)
+             implements; here it doubles as its jnp oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .smdp import SMDPSpec, TruncatedSMDP, build_smdp
+
+
+@dataclasses.dataclass
+class RVIResult:
+    policy: np.ndarray  # (S,) batch-size action per truncated state
+    g: float  # average expected cost per unit time (g~ = g^)
+    h: np.ndarray  # (S,) relative value function of the DTMDP
+    iterations: int
+    span: float
+    converged: bool
+    wall_time_s: float
+
+
+# ---------------------------------------------------------------------------
+# Backups
+# ---------------------------------------------------------------------------
+
+
+def dense_backup(c_tilde: jnp.ndarray, m_tilde: jnp.ndarray, h: jnp.ndarray):
+    """Q(s,a) = c~(s,a) + sum_j m~(j|s,a) h(j); infeasible entries are +inf."""
+    return c_tilde + jnp.einsum("saj,j->sa", m_tilde, h)
+
+
+def banded_backup(
+    c_tilde: jnp.ndarray,  # (S, A), +inf at infeasible
+    pmfs: jnp.ndarray,  # (A, K+1) arrival pmfs (row 0 unused)
+    tails: jnp.ndarray,  # (A, T) overflow mass per base state t
+    scale: jnp.ndarray,  # (S, A) eta / y(s, a)
+    s_max: int,
+    h: jnp.ndarray,  # (S,) with h[-1] = h(S_o)
+):
+    """Structured backup; mathematically equal to dense_backup.
+
+    For a != 0 and base t = s - a:
+        (M^ h)(s) = sum_{k=0}^{s_max - t} p^{[a]}_k h(t + k) + tail(a,t) h(S_o)
+    For a == 0: (M^ h)(s) = h(min(s+1, s_max -> S_o)); S_o self-loops.
+    Discretized:  Q = c~ + scale * (M^ h) + (1 - scale) * h(s).
+    """
+    S = h.shape[0]
+    A = pmfs.shape[0]
+    T = s_max + 1  # base states 0..s_max
+    K = pmfs.shape[1] - 1
+    # windowed H matrix: Hwin[t, k] = h[t + k] masked to t + k <= s_max
+    t_idx = jnp.arange(T)[:, None]
+    k_idx = jnp.arange(K + 1)[None, :]
+    j = t_idx + k_idx
+    valid = j <= s_max
+    hwin = jnp.where(valid, h[jnp.minimum(j, s_max)], 0.0)
+    # G[t, a] = sum_k pmfs[a, k] hwin[t, k]  -> correlation as a matmul (MXU!)
+    G = hwin @ pmfs.T  # (T, A)
+    G = G + tails.T * h[S - 1]  # overflow mass towards S_o
+    # scatter to (S, A): for state s and action a, base t = s_val(s) - a
+    s_val = jnp.minimum(jnp.arange(S), s_max)  # S_o behaves as s_max
+    base = s_val[:, None] - jnp.arange(A)[None, :]  # (S, A); <0 -> infeasible
+    base_c = jnp.clip(base, 0, s_max)
+    mh_serve = G[base_c, jnp.arange(A)[None, :]]  # (S, A)
+    # a == 0 column: next state s+1 (or S_o)
+    nxt = jnp.where(jnp.arange(S) < s_max, jnp.arange(S) + 1, S - 1)
+    mh_wait = h[nxt]
+    mh = mh_serve.at[:, 0].set(mh_wait)
+    q = c_tilde + scale * mh + (1.0 - scale) * h[:, None]
+    return q
+
+
+def pallas_backup(
+    c_tilde, pmfs, tails, scale, s_max: int, h,
+):
+    """banded_backup with the windowed-matmul core on the Pallas TPU kernel.
+
+    Identical math; the G[t,a] correlation runs in kernels/bellman.py
+    (interpret mode on CPU).  Used by backup="pallas".
+    """
+    from repro.kernels import ops as kops
+
+    S = h.shape[0]
+    A = pmfs.shape[0]
+    T = s_max + 1
+    K = pmfs.shape[1]
+    h_main = jnp.zeros(T + K, dtype=jnp.float32).at[:T].set(h[:T].astype(jnp.float32))
+    G = kops.bellman_backup(h_main, pmfs, tails.T, h[S - 1])  # (T, A)
+    G = G.astype(h.dtype)
+    s_val = jnp.minimum(jnp.arange(S), s_max)
+    base = s_val[:, None] - jnp.arange(A)[None, :]
+    base_c = jnp.clip(base, 0, s_max)
+    mh_serve = G[base_c, jnp.arange(A)[None, :]]
+    nxt = jnp.where(jnp.arange(S) < s_max, jnp.arange(S) + 1, S - 1)
+    mh = mh_serve.at[:, 0].set(h[nxt])
+    return c_tilde + scale * mh + (1.0 - scale) * h[:, None]
+
+
+def make_banded_inputs(mdp: TruncatedSMDP):
+    """Precompute (pmfs, tails, scale) for banded_backup from a built SMDP."""
+    spec = mdp.spec
+    T = spec.s_max + 1
+    A = mdp.n_actions
+    pmfs = mdp.arrival_pmfs  # (A, K+1), K = s_max + 1
+    # truncate pmf columns to k <= s_max (k larger always lands in S_o)
+    pm = pmfs[:, : spec.s_max + 1].copy()
+    tails = np.zeros((A, T))
+    for a in range(1, A):
+        csum = np.cumsum(pm[a])
+        for t in range(T):
+            kmax_in = spec.s_max - t
+            tails[a, t] = max(0.0, 1.0 - csum[kmax_in])
+            # zero out pmf beyond window is handled by hwin mask
+    scale = mdp.eta / mdp.y
+    return (
+        jnp.asarray(pm, dtype=jnp.float64),
+        jnp.asarray(tails, dtype=jnp.float64),
+        jnp.asarray(scale, dtype=jnp.float64),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RVI driver
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("max_iter", "backup_kind", "s_max"))
+def _rvi_loop(
+    c_tilde,
+    m_tilde,
+    pmfs,
+    tails,
+    scale,
+    eps: float,
+    eps_rel: float,
+    max_iter: int,
+    backup_kind: str,
+    s_max: int,
+    ref_state: int = 0,
+):
+    S = c_tilde.shape[0]
+
+    def backup(h):
+        if backup_kind == "dense":
+            return dense_backup(c_tilde, m_tilde, h)
+        if backup_kind == "pallas":
+            return pallas_backup(c_tilde, pmfs, tails, scale, s_max, h)
+        return banded_backup(c_tilde, pmfs, tails, scale, s_max, h)
+
+    def cond(carry):
+        i, h, span, g = carry
+        # relative criterion: costs scale with w2, so a purely absolute span
+        # threshold stalls convergence detection for large weights
+        thresh = jnp.maximum(eps, eps_rel * jnp.abs(g))
+        return jnp.logical_and(i < max_iter, span >= thresh)
+
+    def body(carry):
+        i, h, _, _ = carry
+        q = backup(h)
+        j = jnp.min(q, axis=1)
+        g = j[ref_state]
+        h_new = j - g
+        diff = h_new - h
+        span = jnp.max(diff) - jnp.min(diff)
+        return i + 1, h_new, span, g
+
+    h0 = jnp.zeros(S, dtype=c_tilde.dtype)
+    i, h, span, g = jax.lax.while_loop(cond, body, (0, h0, jnp.inf, 0.0))
+    q = backup(h)
+    policy = jnp.argmin(q, axis=1)
+    return policy, g, h, i, span
+
+
+def relative_value_iteration(
+    mdp: TruncatedSMDP,
+    eps: float = 1e-2,
+    max_iter: int = 10_000,
+    backup: str = "banded",
+    eps_rel: float = 2e-4,
+) -> RVIResult:
+    """Solve the discretized MDP; the policy is eps-optimal for the SMDP."""
+    t0 = time.perf_counter()
+    c_tilde = jnp.asarray(mdp.c_tilde)
+    if backup == "dense":
+        m_tilde = jnp.asarray(mdp.m_tilde)
+        pmfs = tails = scale = jnp.zeros((1, 1))
+    else:
+        m_tilde = jnp.zeros((1, 1, 1))
+        pmfs, tails, scale = make_banded_inputs(mdp)
+    policy, g, h, it, span = _rvi_loop(
+        c_tilde,
+        m_tilde,
+        pmfs,
+        tails,
+        scale,
+        eps,
+        eps_rel,
+        max_iter,
+        backup,
+        mdp.spec.s_max,
+    )
+    policy = np.asarray(policy)
+    it = int(it)
+    return RVIResult(
+        policy=policy,
+        g=float(g),
+        h=np.asarray(h),
+        iterations=it,
+        span=float(span),
+        converged=it < max_iter,
+        wall_time_s=time.perf_counter() - t0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Appendix-F baselines: approximate value / policy iteration on the
+# *untruncated* associated DTMDP with an expanding state window.
+# ---------------------------------------------------------------------------
+
+
+def _untruncated_arrays(spec: SMDPSpec, n_states: int):
+    """c~, p_k, y for states 0..n_states-1 of the untruncated DTMDP."""
+    big = dataclasses.replace(spec, s_max=max(n_states - 2, spec.b_max), c_o=0.0)
+    mdp = build_smdp(big)
+    return mdp
+
+
+def avi(
+    spec: SMDPSpec,
+    n_outer: int = 400,
+    n0: int = 8,
+    growth: int = 1,
+    eval_s_max: int = 160,
+) -> RVIResult:
+    """Thomas–Stengos Scheme I: VI with an expanding state window.
+
+    Iteration i backs up states {0..n0 + growth*i}; values outside the
+    current window are taken as the boundary value (h of the largest known
+    state), which mirrors the scheme's 'latter states see fewer backups'.
+    """
+    t0 = time.perf_counter()
+    n_final = n0 + growth * n_outer + spec.b_max + 2
+    mdp = _untruncated_arrays(spec, n_final + 2)
+    n_states = mdp.n_states  # n_final + 2 (incl. S_o)
+    c = np.where(mdp.feasible, mdp.c_tilde, np.inf)[: n_final + 1]
+    m = mdp.m_tilde[: n_final + 1, :, :]  # (n_final+1, A, n_states)
+    h = np.zeros(n_states)
+    g = 0.0
+    for i in range(n_outer):
+        n_i = min(n0 + growth * i, n_final)
+        q = c[: n_i + 1] + np.einsum("saj,j->sa", m[: n_i + 1, :, :], h)
+        j = np.min(q, axis=1)
+        g = j[0]
+        h[: n_i + 1] = j - g
+    q = c + np.einsum("saj,j->sa", m, h)
+    policy = np.argmin(q, axis=1)
+    pol = policy[: eval_s_max + 2].copy()
+    pol[-1] = pol[eval_s_max]  # overflow state mirrors s_max
+    return RVIResult(
+        policy=pol,
+        g=float(g),
+        h=h[: eval_s_max + 2],
+        iterations=n_outer,
+        span=float("nan"),
+        converged=True,
+        wall_time_s=time.perf_counter() - t0,
+    )
+
+
+def api(
+    spec: SMDPSpec,
+    n_outer: int = 12,
+    inner_per_outer: int = 20,
+    n0: int = 8,
+    growth: int = 1,
+    eval_s_max: int = 160,
+) -> RVIResult:
+    """Thomas–Stengos Scheme IV: policy iteration with AVI inner evaluation."""
+    t0 = time.perf_counter()
+    max_inner = sum(inner_per_outer * (i + 1) for i in range(n_outer))
+    n_final = n0 + growth * max_inner + spec.b_max + 2
+    mdp = _untruncated_arrays(spec, n_final + 2)
+    n_states = mdp.n_states
+    c = np.where(mdp.feasible, mdp.c_tilde, np.inf)[: n_final + 1]
+    m = mdp.m_tilde[: n_final + 1, :, :]
+    policy = np.zeros(n_final + 1, dtype=np.int64)  # initial: always wait
+    h = np.zeros(n_states)
+    g = 0.0
+    step = 0
+    for outer in range(n_outer):
+        # inner: approximate evaluation of `policy` with expanding window
+        for _ in range(inner_per_outer * (outer + 1)):
+            n_i = min(n0 + growth * step, n_final)
+            step += 1
+            rows = np.arange(n_i + 1)
+            cp = c[rows, policy[: n_i + 1]]
+            mp = m[rows, policy[: n_i + 1], :]
+            j = cp + mp @ h
+            g = j[0]
+            h[: n_i + 1] = j - g
+        # improvement
+        q = c + np.einsum("saj,j->sa", m, h)
+        policy = np.argmin(q, axis=1)
+    pol = policy[: eval_s_max + 2].copy()
+    pol[-1] = pol[eval_s_max]
+    return RVIResult(
+        policy=pol,
+        g=float(g),
+        h=h[: eval_s_max + 2],
+        iterations=step,
+        span=float("nan"),
+        converged=True,
+        wall_time_s=time.perf_counter() - t0,
+    )

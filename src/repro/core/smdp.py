@@ -1,0 +1,187 @@
+"""SMDP construction: truncation, abstract cost, discretization (paper Sec. IV-V).
+
+State space  S_hat = {0, 1, ..., s_max, S_o}; index S_o = s_max + 1.
+Action space A     = {0} U {B_min..B_max}; action index == batch size.
+
+Pipeline (paper Sec. V):
+  build_smdp()   -> truncated continuous-time SMDP  (m_hat, c_hat, y)  [eq. 18-19]
+  discretize()   -> associated discrete-time MDP    (m_tilde, c_tilde) [eq. 23-25]
+
+All tensors are dense numpy on the host (S ~ O(100), A ~ O(33)); the iteration
+itself (rvi.py) runs in JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .service_models import ServiceModel, Profile
+
+
+@dataclasses.dataclass(frozen=True)
+class SMDPSpec:
+    """Problem definition (paper Sec. III-IV)."""
+
+    lam: float  # Poisson arrival rate
+    service: ServiceModel  # G_b family + l(b)
+    energy: Profile  # zeta(b)
+    b_min: int = 1
+    b_max: int = 32
+    w1: float = 1.0  # weight on average response time (via holding cost)
+    w2: float = 0.0  # weight on average power
+    s_max: int = 128  # truncation level (>= b_max)
+    c_o: float = 100.0  # abstract overflow-cost rate (paper Sec. V-A)
+
+    def __post_init__(self):
+        if self.s_max < self.b_max:
+            raise ValueError("s_max must be >= b_max (paper Sec. V-A)")
+        if not (0 < self.b_min <= self.b_max):
+            raise ValueError("need 0 < b_min <= b_max")
+        rho = self.rho
+        if not (0.0 < rho < 1.0):
+            raise ValueError(f"instability: rho={rho:.3f} not in (0,1)")
+
+    @property
+    def rho(self) -> float:
+        """Normalized traffic intensity lam / (B_max * mu^[B_max])."""
+        return self.lam * float(self.service.mean(self.b_max)) / self.b_max
+
+
+@dataclasses.dataclass
+class TruncatedSMDP:
+    """Dense truncated SMDP (eq. 18-19) and its discretized MDP (eq. 23)."""
+
+    spec: SMDPSpec
+    n_states: int  # s_max + 2
+    n_actions: int  # b_max + 1
+    feasible: np.ndarray  # (S, A) bool
+    y: np.ndarray  # (S, A) expected sojourn times
+    c_hat: np.ndarray  # (S, A) expected costs (with abstract cost at S_o)
+    m_hat: np.ndarray  # (S, A, S) transition probs
+    # discretized
+    eta: float
+    c_tilde: np.ndarray  # (S, A)
+    m_tilde: np.ndarray  # (S, A, S)
+    # component costs for objective decomposition (same layout as c_hat)
+    c_hold: np.ndarray  # w1-free holding cost integral  E[int s(t) dt]/lam
+    c_energy: np.ndarray  # zeta(a) (0 for a=0)
+    arrival_pmfs: np.ndarray  # (A, K+1) p_k per action (0 row for a=0)
+
+    @property
+    def s_o(self) -> int:
+        return self.n_states - 1
+
+
+def build_smdp(spec: SMDPSpec, pmf_tol: float = 1e-12) -> TruncatedSMDP:
+    """Construct the truncated SMDP per eq. (18)-(19)."""
+    S = spec.s_max + 2
+    A = spec.b_max + 1
+    s_o = S - 1
+    lam = spec.lam
+
+    # state value (number of requests) represented by each state index
+    s_val = np.arange(S, dtype=np.float64)
+    s_val[s_o] = spec.s_max  # S_o counts as s_max requests (paper Sec. V-A)
+
+    actions = np.arange(A)
+    feasible = np.zeros((S, A), dtype=bool)
+    feasible[:, 0] = True
+    for a in range(spec.b_min, spec.b_max + 1):
+        feasible[:, a] = s_val >= a  # a <= s; S_o has s_val = s_max >= b_max
+
+    # --- sojourn times y(s, a)  (eq. 9) ---
+    y = np.zeros((S, A))
+    y[:, 0] = 1.0 / lam
+    for a in range(1, A):
+        y[:, a] = float(spec.service.mean(a))
+
+    # --- arrival pmfs p_k^{[a]} ---
+    # k support: transitions only distinguish k <= s_max (rest lumps into S_o),
+    # but we keep enough mass for tail accounting.
+    K = spec.s_max + 1
+    pmfs = np.zeros((A, K + 1))
+    for a in range(1, A):
+        pmfs[a] = spec.service.arrival_pmf(a, lam, K)
+
+    # --- transitions m_hat (eq. 18) ---
+    m_hat = np.zeros((S, A, S))
+    # a = 0: deterministic +1 (S_o self-loops; s_max -> S_o)
+    for s in range(S):
+        if s < spec.s_max:
+            m_hat[s, 0, s + 1] = 1.0
+        else:  # s == s_max or S_o
+            m_hat[s, 0, s_o] = 1.0
+    # a != 0: base state s - a, arrivals k land at j = base + k
+    for s in range(S):
+        base_val = int(s_val[s])
+        for a in range(1, A):
+            if not feasible[s, a]:
+                continue
+            base = base_val - a
+            # j in [base, s_max] gets p_{j - base}; rest to S_o
+            kmax_in = spec.s_max - base
+            ks = np.arange(0, kmax_in + 1)
+            m_hat[s, a, base : spec.s_max + 1] = pmfs[a, ks]
+            m_hat[s, a, s_o] = max(0.0, 1.0 - pmfs[a, : kmax_in + 1].sum())
+    # normalize tiny numerical drift
+    row_sums = m_hat.sum(axis=-1, keepdims=True)
+    np.divide(m_hat, row_sums, out=m_hat, where=row_sums > pmf_tol)
+
+    # --- costs (eq. 11, 19) ---
+    e2 = np.zeros(A)
+    zeta = np.zeros(A)
+    for a in range(1, A):
+        e2[a] = float(spec.service.second_moment(a))
+        zeta[a] = float(spec.energy(a))
+
+    c_hold = np.zeros((S, A))  # = E[int_0^gamma s(t) dt] / lam  (w1 multiplies)
+    c_energy = np.zeros((S, A))  # = zeta(a)                    (w2 multiplies)
+    # a = 0: c = s / lam^2
+    c_hold[:, 0] = s_val / lam**2
+    for a in range(1, A):
+        # c = w2 zeta(a) + w1 (s l(a)/lam + E[G^2]/2)
+        c_hold[:, a] = s_val * y[:, a] / lam + 0.5 * e2[a]
+        c_energy[:, a] = zeta[a]
+
+    c_hat = spec.w1 * c_hold + spec.w2 * c_energy
+    # abstract cost at the overflow state (eq. 19): + c_o * y(s, a)
+    c_hat[s_o, :] = c_hat[s_o, :] + spec.c_o * y[s_o, :]
+
+    # --- discretization (eq. 23-25) ---
+    diag = m_hat[np.arange(S)[:, None], actions[None, :], np.arange(S)[:, None]]
+    with np.errstate(divide="ignore"):
+        bound = np.where(
+            (diag < 1.0) & feasible, y / np.maximum(1.0 - diag, 1e-300), np.inf
+        )
+    eta = 0.999 * float(bound.min())
+    if not np.isfinite(eta) or eta <= 0:
+        raise RuntimeError("degenerate eta bound")
+
+    c_tilde = np.where(feasible, c_hat / y, np.inf)
+    scale = eta / y  # (S, A)
+    m_tilde = m_hat * scale[:, :, None]
+    idx = np.arange(S)
+    m_tilde[idx[:, None], actions[None, :], idx[:, None]] += 1.0 - scale
+    # infeasible rows: harmless self-loop (masked out in the backup anyway)
+    inf_mask = ~feasible
+    m_tilde[inf_mask] = 0.0
+    sI, aI = np.nonzero(inf_mask)
+    m_tilde[sI, aI, sI] = 1.0
+
+    return TruncatedSMDP(
+        spec=spec,
+        n_states=S,
+        n_actions=A,
+        feasible=feasible,
+        y=y,
+        c_hat=c_hat,
+        m_hat=m_hat,
+        eta=eta,
+        c_tilde=c_tilde,
+        m_tilde=m_tilde,
+        c_hold=c_hold,
+        c_energy=c_energy,
+        arrival_pmfs=pmfs,
+    )

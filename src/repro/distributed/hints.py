@@ -1,0 +1,49 @@
+"""Activation sharding hints that no-op outside a mesh context.
+
+Model code calls hint(x, BATCH, None, "model", ...) — entries are mesh axis
+names (or tuples of them) per dim.  Under `jax.sharding.set_mesh(mesh)` (the
+dry-run / launcher path) this emits with_sharding_constraint; in single-device
+smoke tests it is a no-op.  Every entry is divisibility-guarded so the same
+model code serves every arch on the fixed production meshes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+#: batch-dim axes (pod-major); filtered to the axes the current mesh has
+BATCH: Tuple[str, ...] = ("pod", "data")
+
+Entry = Union[None, str, Tuple[str, ...]]
+
+
+def hint(x, *entries: Entry):
+    """with_sharding_constraint(x, P(*entries)) guarded by mesh context."""
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or am.empty:
+        return x
+    if len(entries) != x.ndim:
+        raise ValueError(f"hint arity {len(entries)} != ndim {x.ndim}")
+    resolved = []
+    used: set = set()
+    for dim, e in enumerate(entries):
+        if e is None:
+            resolved.append(None)
+            continue
+        cand = e if isinstance(e, tuple) else (e,)
+        axes = tuple(a for a in cand if a in am.axis_names and a not in used)
+        # greedily drop leading axes until the product divides the dim
+        while axes:
+            size = math.prod(am.shape[a] for a in axes)
+            if size > 1 and x.shape[dim] % size == 0:
+                break
+            axes = axes[1:]
+        if not axes:
+            resolved.append(None)
+            continue
+        used.update(axes)
+        resolved.append(axes if len(axes) > 1 else axes[0])
+    return jax.lax.with_sharding_constraint(x, P(*resolved))

@@ -1,0 +1,236 @@
+"""Sharding rules: FSDP('data') x TP('model') x EP(MoE) x SP(sequence).
+
+Design (DESIGN.md Sec. 4):
+  * params     — FSDP over 'data' + tensor-parallel over 'model'; replicated
+                 across 'pod' (gradient all-reduce crosses pods once/step).
+  * batch      — sharded over ('pod','data') when divisible.
+  * attention  — head-parallel when head counts divide 'model'; otherwise the
+                 KV cache / sequence dim is sharded over 'model' (SP); XLA
+                 inserts the partial-softmax collectives.
+  * MoE        — expert-parallel over 'model' when n_experts divides it,
+                 else tensor-parallel inside each expert.
+
+Every rule is divisibility-guarded: a dim is only sharded when evenly
+divisible by the axis size, so the same rules drive every assigned arch on
+the fixed (16, 16) / (2, 16, 16) meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# params whose last path segment means "replicate"
+_REPLICATED_NAMES = {
+    "s", "b", "ln_x", "mu_r", "mu_k", "mu_v", "mu_g", "mu_w", "mu_ck", "mu_cr",
+    "dt_bias", "a_log", "d_skip", "w_base", "u_bonus", "enc_pos", "step",
+}
+
+
+def _axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis]
+
+
+def _spec(mesh: Mesh, shape, assignments) -> P:
+    """Build a PartitionSpec from (dim, axis) assignments with divisibility
+    and one-use-per-axis guards.  Negative dims allowed."""
+    entries: list = [None] * len(shape)
+    used = set()
+    for dim, axis in assignments:
+        d = dim % len(shape)
+        if axis in used or entries[d] is not None:
+            continue
+        if shape[d] % _axis_size(mesh, axis) == 0 and shape[d] >= _axis_size(mesh, axis):
+            entries[d] = axis
+            used.add(axis)
+    return P(*entries)
+
+
+def _path_names(path) -> list:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return out
+
+
+def param_spec(mesh: Mesh, path, shape, n_experts: int = 0) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    if name.startswith("x_"):
+        name = name[2:]  # whisper cross-attention mirrors self-attention
+    nd = len(shape)
+    if name in _REPLICATED_NAMES or nd <= 1:
+        return P()
+    if name == "embed":
+        return _spec(mesh, shape, [(0, "model"), (1, "data")])
+    if name == "out":
+        return _spec(mesh, shape, [(0, "data"), (1, "model")])
+    if name in ("wq", "wk", "wv"):  # (..., d, H, hd)
+        return _spec(mesh, shape, [(-3, "data"), (-2, "model")])
+    if name in ("bq", "bk", "bv"):  # (..., H, hd)
+        return _spec(mesh, shape, [(-2, "model")])
+    if name == "wo":  # (..., H, hd, d)
+        return _spec(mesh, shape, [(-3, "model"), (-1, "data")])
+    if name in ("w1", "w3"):
+        if nd == 4 and n_experts:  # (L, E, d, ff): EP else TP-ff
+            return _spec(mesh, shape, [(1, "model"), (2, "data"), (3, "model")])
+        return _spec(mesh, shape, [(-2, "data"), (-1, "model")])
+    if name == "w2":
+        if nd == 4 and n_experts:  # (L, E, ff, d)
+            return _spec(mesh, shape, [(1, "model"), (2, "model"), (3, "data")])
+        return _spec(mesh, shape, [(-2, "model"), (-1, "data")])
+    if name in ("sw1", "sw3", "ck"):
+        return _spec(mesh, shape, [(-2, "data"), (-1, "model")])
+    if name in ("sw2", "cv"):
+        return _spec(mesh, shape, [(-2, "model"), (-1, "data")])
+    if name == "router":  # (L, d, E)
+        return _spec(mesh, shape, [(-2, "data")])
+    if name == "in_proj":  # (L, d, proj)
+        return _spec(mesh, shape, [(-2, "data"), (-1, "model")])
+    if name == "out_proj":  # (L, d_inner, d)
+        return _spec(mesh, shape, [(-2, "model"), (-1, "data")])
+    if name == "conv_w":  # (L, K, C)
+        return _spec(mesh, shape, [(-1, "model")])
+    if name in ("wr", "wg"):  # rwkv (L, d, H, P)
+        return _spec(mesh, shape, [(-3, "data"), (-2, "model"), (-1, "model")])
+    if name == "cr":  # (L, d, d)
+        return _spec(mesh, shape, [(-2, "data"), (-1, "model")])
+    if name == "w_lora_a":
+        return _spec(mesh, shape, [(-2, "data")])
+    if name == "w_lora_b":
+        return _spec(mesh, shape, [(-1, "model")])
+    # default: try to shard the two largest trailing dims
+    return _spec(mesh, shape, [(-2, "data"), (-1, "model")])
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def batch_axis(mesh: Mesh, batch: int):
+    """The mesh axes to shard the batch dim over (largest divisible prefix)."""
+    axes = dp_axes(mesh)
+    if batch % int(np.prod([mesh.shape[a] for a in axes])) == 0:
+        return axes
+    if len(axes) == 2 and batch % mesh.shape[axes[1]] == 0:
+        return (axes[1],)
+    return None
+
+
+def param_shardings(mesh: Mesh, params_abstract: PyTree, n_experts: int = 0) -> PyTree:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(mesh, path, leaf.shape, n_experts)
+        ),
+        params_abstract,
+    )
+
+
+def serving_param_shardings(
+    mesh: Mesh, params_abstract: PyTree, n_experts: int = 0
+) -> PyTree:
+    """Decode/serving layout: TP over 'model', REPLICATED over 'data'.
+
+    FSDP is a training optimization (weights amortize against optimizer
+    state); at decode it forces an all-gather of every layer's weights per
+    token.  When the TP-sharded weights fit HBM, each data-rank keeps a full
+    copy — 16 independent serving replicas per pod, zero weight collectives.
+    """
+
+    model_n = mesh.shape["model"]
+
+    def strip_data(sh: NamedSharding, leaf) -> NamedSharding:
+        entries = []
+        for e in sh.spec:
+            if e == "data":
+                entries.append(None)
+            elif isinstance(e, tuple):
+                kept = tuple(a for a in e if a != "data")
+                entries.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+            else:
+                entries.append(e)
+        while len(entries) < len(leaf.shape):
+            entries.append(None)
+        # a big leaf left fully replicated (e.g. 40 q-heads don't divide the
+        # 16-way model axis): shard its d_model/contraction dim over 'model'
+        # instead — GSPMD then emits a tiny per-layer psum of the projection
+        # output rather than holding GBs of replicated weights
+        if all(x is None for x in entries) and leaf.size * 2 > (1 << 26):
+            for dim in range(1, len(leaf.shape)):
+                if leaf.shape[dim] % model_n == 0 and leaf.shape[dim] >= model_n:
+                    entries[dim] = "model"
+                    break
+        return NamedSharding(mesh, P(*entries))
+
+    base = param_shardings(mesh, params_abstract, n_experts)
+    return jax.tree.map(strip_data, base, params_abstract)
+
+
+def batch_shardings(mesh: Mesh, batch_abstract: PyTree) -> PyTree:
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        ba = batch_axis(mesh, leaf.shape[0])
+        entries = [ba] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_abstract)
+
+
+def cache_shardings(mesh: Mesh, cache_abstract: PyTree) -> PyTree:
+    """KV/state caches: batch over dp when divisible; seq/state over 'model'."""
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if leaf.ndim == 0 or name == "length":
+            return NamedSharding(mesh, P())
+        if name in ("k", "v"):
+            # (L, B, S, KV, hd) stacked or (B, S, KV, hd) per-occurrence
+            off = leaf.ndim - 4
+            entries = [None] * leaf.ndim
+            ba = batch_axis(mesh, leaf.shape[off])
+            entries[off] = ba
+            if leaf.shape[off + 1] % _axis_size(mesh, "model") == 0:
+                entries[off + 1] = "model"
+            return NamedSharding(mesh, P(*entries))
+        if name == "enc_out":  # (B, T, d)
+            ba = batch_axis(mesh, leaf.shape[0])
+            return NamedSharding(mesh, P(ba, None, None))
+        if name == "ssm":  # (L, B, H, P, N)
+            ba = batch_axis(mesh, leaf.shape[1])
+            h_ok = leaf.shape[2] % _axis_size(mesh, "model") == 0
+            return NamedSharding(mesh, P(None, ba, "model" if h_ok else None, None, None))
+        if name == "conv":  # (L, B, K-1, C)
+            ba = batch_axis(mesh, leaf.shape[1])
+            c_ok = leaf.shape[3] % _axis_size(mesh, "model") == 0
+            return NamedSharding(mesh, P(None, ba, None, "model" if c_ok else None))
+        if name == "wkv":  # (L, B, H, P, P)
+            ba = batch_axis(mesh, leaf.shape[1])
+            p_ok = leaf.shape[3] % _axis_size(mesh, "model") == 0
+            return NamedSharding(mesh, P(None, ba, None, "model" if p_ok else None, None))
+        if name in ("tshift", "cshift"):  # (L, B, 1, d)
+            ba = batch_axis(mesh, leaf.shape[1])
+            d_ok = leaf.shape[3] % _axis_size(mesh, "model") == 0
+            return NamedSharding(mesh, P(None, ba, None, "model" if d_ok else None))
+        # fallback: replicate
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(spec, cache_abstract)
+
+
+def replicated(mesh: Mesh, tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

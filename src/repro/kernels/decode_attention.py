@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: GQA flash-decode (one new token vs an S-deep KV cache).
+
+Decode attention is memory-bound: per (batch, kv-head) we stream the cache
+once through VMEM while the G grouped q-heads ride along (GQA means each KV
+block is reused G times by the MXU — the only reuse available).  Grid
+(B*KV, S/bk); the last dim iterates KV blocks sequentially with online
+softmax in VMEM scratch.  Valid-length masking uses the per-batch `lengths`
+vector (cache is a ring of capacity S, filled to lengths[b]).
+
+Oracle: repro.kernels.ref.decode_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, bk: int, nk: int, kv_heads: int, softcap,
+):
+    bh = pl.program_id(0)
+    kj = pl.program_id(1)
+    b = bh // kv_heads
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # (G, d)
+    k = k_ref[0]  # (bk, d)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (1.0 / math.sqrt(q.shape[-1]))  # (G, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = k_pos < len_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q,  # (B, H, D) — one token per sequence
+    k_cache,  # (B, S, KV, D)
+    v_cache,
+    lengths,  # (B,) int32 valid prefix per sequence
+    *,
+    softcap=None,
+    block_k: int = 256,
+    interpret: bool = True,
+):
+    B, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    bk = min(block_k, max(8, S))
+    s_pad = -(-S // bk) * bk
+    qh = q.reshape(B * KV, G, D)
+    kh = jnp.moveaxis(k_cache, 2, 1).reshape(B * KV, S, D)
+    vh = jnp.moveaxis(v_cache, 2, 1).reshape(B * KV, S, D)
+    if s_pad != S:
+        kh = jnp.pad(kh, ((0, 0), (0, s_pad - S), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, s_pad - S), (0, 0)))
+    nk = s_pad // bk
+    grid = (B * KV, nk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda bh, kj, lens: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, kj, lens: (bh, kj, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, kj, lens: (bh, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda bh, kj, lens: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, nk=nk, kv_heads=KV, softcap=softcap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, D), q.dtype),
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qh, kh, vh)
+    return out.reshape(B, H, D)

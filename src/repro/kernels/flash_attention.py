@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: blockwise flash attention (prefill / train forward).
+
+Tiling: grid (B*H, Sq/bq, Sk/bk).  The last grid dim iterates KV blocks with
+('arbitrary') sequential semantics; online-softmax stats (m, l) and the
+output accumulator live in VMEM scratch and persist across KV iterations.
+GQA is handled in the k/v index_map (q head h reads kv head h // G).
+f32 accumulation; bf16/f32 inputs.
+
+Oracle: repro.kernels.ref.attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, bq: int, bk: int, nk: int, causal: bool, softcap, sq: int, sk: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # (bq, d)
+    k = k_ref[0]  # (bk, d)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (1.0 / math.sqrt(q.shape[-1]))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < sk  # padding mask
+    mask &= q_pos < sq
+    if causal:
+        mask &= k_pos <= q_pos + (sk - sq)  # bottom-right aligned causal
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_scr[...] = acc_scr[...] * corr + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q,  # (B, Sq, H, D)
+    k,  # (B, Sk, KV, D)
+    v,
+    *,
+    causal: bool = True,
+    softcap=None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Sk))
+    sq_pad = -(-Sq // bq) * bq
+    sk_pad = -(-Sk // bk) * bk
+    # layout: (B*H, S, D) with heads folded into the batch grid dim
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, D)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * KV, Sk, D)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * KV, Sk, D)
+    if sq_pad != Sq:
+        qh = jnp.pad(qh, ((0, 0), (0, sq_pad - Sq), (0, 0)))
+    if sk_pad != Sk:
+        kh = jnp.pad(kh, ((0, 0), (0, sk_pad - Sk), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, sk_pad - Sk), (0, 0)))
+    nk = sk_pad // bk
+    grid = (B * H, sq_pad // bq, nk)
+
+    def kv_index(bh, qi, kj):
+        b, h = bh // H, bh % H
+        return (b * KV + h // G, kj, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq, bk=bk, nk=nk, causal=causal, softcap=softcap,
+            sq=Sq, sk=Sk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, sq_pad, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qh, kh, vh)
+    return jnp.moveaxis(out[:, :Sq].reshape(B, H, Sq, D), 1, 2)

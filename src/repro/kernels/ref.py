@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose vs these)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def bellman_banded_ref(h_main, pmfs, tails, h_overflow):
+    """G[t, a] = sum_k pmfs[a, k] * h_main[t + k] + tails[t, a] * h_overflow.
+
+    h_main: (T + K,) f32 — value function over states 0..s_max, zero-padded.
+    pmfs:   (A, K) f32 — arrival pmfs per action.
+    tails:  (T, A) f32 — overflow mass towards S_o per (base state, action).
+    """
+    T = tails.shape[0]
+    K = pmfs.shape[1]
+    idx = jnp.arange(T)[:, None] + jnp.arange(K)[None, :]
+    hwin = h_main[idx]  # (T, K)
+    return hwin @ pmfs.T + tails * h_overflow
+
+
+def attention_ref(
+    q, k, v, *, causal=True, softcap: Optional[float] = None, kv_len=None
+):
+    """Naive masked softmax attention.  q: (B,Sq,H,D), k/v: (B,Sk,KV,D)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None] + (Sk - Sq)
+    if kv_len is not None:
+        mask &= k_pos[None, :] < kv_len
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, softcap=None):
+    """Single-token GQA decode.  q: (B,H,D); caches: (B,S,KV,D); lengths: (B,)."""
+    B, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) / math.sqrt(D)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]  # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

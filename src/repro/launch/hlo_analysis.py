@@ -1,0 +1,305 @@
+"""Trip-count-aware roofline analysis of partitioned HLO text.
+
+XLA's HloCostAnalysis (compiled.cost_analysis()) counts while-loop bodies
+ONCE — a 64-layer lax.scan model under-reports FLOPs by ~64x.  This module
+re-derives per-device roofline numerators from the compiled module text:
+
+  * computations are parsed into ops with a local symbol table (shapes);
+  * `while` ops get static trip counts (scan bounds appear as s32 constants
+    in the loop condition); multipliers propagate down the call graph;
+  * FLOPs   — 2 * prod(out_dims) * prod(contracting_dims) per dot op;
+  * HBM traffic — fusion-boundary bytes (operands + outputs of top-level
+    ops, skipping no-traffic ops like tuple/bitcast/get-tuple-element);
+  * collective bytes — per op kind, trip-multiplied.
+
+Caveat (documented in EXPERIMENTS.md): on the CPU dry-run backend, bf16
+arithmetic is legalized to f32, which inflates byte counts vs real TPU by
+<= 2x on bf16-heavy programs; FLOP counts are dtype-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# ops that move no HBM bytes of their own
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "opt-barrier", "optimization-barrier", "partition-id",
+    "replica-id", "iota", "while", "conditional", "call", "custom-call",
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# shape: either a tuple type "(s32[], bf16[..]{..}, ...)" or a single array type
+_TUPLE_SHAPE = r"\((?:[^()]|\([^()]*\))*\)"
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(" + _TUPLE_SHAPE + r"|\S+)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(")
+_OPERAND_RE = re.compile(r"(%[\w.\-]+)")
+
+
+def _split_params(region: str):
+    """Split 'a: shape, b: (tuple, shape)' on top-level commas."""
+    parts, depth, cur = [], 0, []
+    for ch in region:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of possibly-tuple shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return ()
+    return tuple(int(d) for d in m.group(2).split(",") if d)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str  # output shape string
+    opcode: str
+    rest: str  # operand list + attributes (raw)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    params: Dict[str, str]  # %param name -> shape string
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        is_header = (
+            ("->" in stripped)
+            and stripped.endswith("{")
+            and "=" not in stripped.split("->")[0].split("(")[0]
+            and _COMP_HDR_RE.match(stripped)
+        )
+        if is_header:
+            hdr = _COMP_HDR_RE.match(stripped)
+            name = hdr.group(1).lstrip("%")
+            lparen = stripped.index("(")
+            arrow = stripped.rfind("->")
+            region = stripped[lparen + 1 : stripped.rfind(")", lparen, arrow)]
+            params = {}
+            for part in _split_params(region):
+                m = re.match(r"([\w.\-]+)\s*:\s*(.+)", part)
+                if m:
+                    params["%" + m.group(1)] = m.group(2)
+            cur = Computation(name=name, ops=[], params=params)
+            comps[name] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(Op(name=m.group(1), shape=m.group(2),
+                              opcode=m.group(3), rest=m.group(4)))
+    return comps
+
+
+def _symbol_table(comp: Computation) -> Dict[str, str]:
+    table = dict(comp.params)
+    for op in comp.ops:
+        table[op.name] = op.shape
+    return table
+
+
+def _while_info(comp: Computation) -> List[Tuple[str, str, str]]:
+    """(while_op_name, body_comp, condition_comp) triples in `comp`."""
+    out = []
+    for op in comp.ops:
+        if op.opcode == "while":
+            bm = re.search(r"body=(%?[\w.\-]+)", op.rest)
+            cm = re.search(r"condition=(%?[\w.\-]+)", op.rest)
+            if bm and cm:
+                out.append((op.name, bm.group(1).lstrip("%"), cm.group(1).lstrip("%")))
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest s32 scalar constant in the condition — the scan bound."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant" and op.shape.startswith("s32[]"):
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _fusion_callees(comp: Computation) -> List[str]:
+    out = []
+    for op in comp.ops:
+        if op.opcode == "fusion":
+            m = re.search(r"calls=(%?[\w.\-]+)", op.rest)
+            if m:
+                out.append(m.group(1).lstrip("%"))
+    return out
+
+
+def _dot_flops(op: Op, table: Dict[str, str]) -> float:
+    out_elems = max(1, math.prod(_shape_dims(op.shape)))
+    lhs_m = _OPERAND_RE.search(op.rest)
+    if not lhs_m:
+        return 0.0
+    lhs_shape = table.get(lhs_m.group(1))
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    if lhs_shape and cm:
+        dims = _shape_dims(lhs_shape)
+        for d in cm.group(1).split(","):
+            if d and int(d) < len(dims):
+                contract *= dims[int(d)]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class RooflineCounts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    dot_flops_by_comp: dict = dataclasses.field(default_factory=dict)
+
+
+def analyze(hlo: str, entry_hint: str = "main") -> RooflineCounts:
+    comps = parse_computations(hlo)
+    # multipliers: start at 1 for the entry; propagate through whiles/fusions
+    mult: Dict[str, float] = defaultdict(float)
+    entry = None
+    for name in comps:
+        if entry_hint in name:
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    # BFS through the call graph
+    mult[entry] = 1.0
+    frontier = [entry]
+    seen = set()
+    while frontier:
+        cname = frontier.pop()
+        if cname in seen:
+            continue
+        seen.add(cname)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for (_, body, cond) in _while_info(comp):
+            trips = _trip_count(comps.get(cond, Computation(cond, [], {})))
+            mult[body] = max(mult[body], m * trips)
+            mult[cond] = max(mult[cond], m * trips)
+            frontier.append(body)
+        for callee in _fusion_callees(comp):
+            mult[callee] = max(mult[callee], m)
+            # fusion bodies are not traversed for traffic, but their dots
+            # still execute: traverse for flops only (handled below)
+            frontier.append(callee)
+        for op in comp.ops:
+            for attr in ("to_apply", "body", "condition", "calls"):
+                for mm in re.finditer(attr + r"=(%?[\w.\-]+)", op.rest):
+                    callee = mm.group(1).lstrip("%")
+                    if callee in comps and callee not in seen:
+                        mult[callee] = max(mult[callee], m)
+                        frontier.append(callee)
+
+    counts = RooflineCounts()
+    counts.collectives = {k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        table = _symbol_table(comp)
+        is_fusion_body = cname.startswith("fused_") or ".fused" in cname
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                f = _dot_flops(op, table) * m
+                counts.flops += f
+                counts.dot_flops_by_comp[cname] = (
+                    counts.dot_flops_by_comp.get(cname, 0.0) + f
+                )
+            if is_fusion_body:
+                continue  # traffic counted at the fusion boundary
+            if op.opcode in _NO_TRAFFIC:
+                continue
+            out_b = _shape_bytes(op.shape)
+            operand_bytes = []
+            for om in _OPERAND_RE.finditer(op.rest.split(")")[0]):
+                shp = table.get(om.group(1))
+                if shp:
+                    operand_bytes.append(_shape_bytes(shp))
+            # slice-like ops read only the sliced region, not the whole
+            # operand (a lax.scan slicing stacked weights per layer would
+            # otherwise count the full stack once per iteration)
+            if op.opcode in ("slice", "dynamic-slice", "gather"):
+                in_b = out_b
+            elif op.opcode in ("dynamic-update-slice", "scatter"):
+                upd = operand_bytes[1] if len(operand_bytes) > 1 else out_b
+                in_b = 2 * upd  # read region + read update; write counted below
+                out_b = upd  # in-place write of the region
+            elif op.opcode == "fusion":
+                # fusion bodies may slice big operands internally; cap each
+                # operand's contribution (elementwise/matmul fusions are
+                # unaffected; stack-slicing fusions stop overcounting)
+                cap = max(8 * out_b, 1 << 20)
+                in_b = sum(min(b, cap) for b in operand_bytes)
+            else:
+                in_b = sum(operand_bytes)
+            kind = None
+            for c in _COLLECTIVES:
+                if op.opcode == c or op.opcode.startswith(c + "-"):
+                    kind = c
+                    break
+            if kind and not op.opcode.endswith("-done"):
+                counts.collectives[kind]["count"] += int(m)
+                counts.collectives[kind]["bytes"] += out_b * m
+                counts.collective_bytes += out_b * m
+            counts.bytes += (out_b + in_b) * m
+    return counts

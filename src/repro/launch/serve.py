@@ -1,0 +1,58 @@
+"""Serving driver: SMDP-batched serving of --arch <id>.
+
+Profiled-clock mode (default) runs the paper's queue against the TPU-v5e
+roofline profile of the chosen architecture; --executor runs a real reduced
+model under wall clock (see examples/serve_llm.py for the guided version).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --rho 0.6
+"""
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--rho", type=float, default=0.6)
+    ap.add_argument("--w2", type=float, default=1.0)
+    ap.add_argument("--b-max", type=int, default=32)
+    ap.add_argument("--chips", type=int, default=8, help="serving replica size")
+    ap.add_argument("--epochs", type=int, default=50_000)
+    ap.add_argument("--slo-ms", type=float, default=None)
+    args = ap.parse_args()
+
+    from benchmarks.tpu_profile_scenario import arch_workload  # reuse
+    from repro.configs import get_config
+    from repro.core import SMDPSpec, solve
+    from repro.core.profiles import tpu_service_model
+    from repro.serving import (GreedyScheduler, ServingEngine, SMDPScheduler,
+                               StaticScheduler)
+
+    cfg = get_config(args.arch)
+    svc, energy = tpu_service_model(arch_workload(cfg, chips=args.chips))
+    lam = args.rho * args.b_max / float(svc.mean(args.b_max))
+    print(f"[serve] {args.arch} on {args.chips} v5e chips; "
+          f"l(1)={float(svc.mean(1)):.2f}ms l({args.b_max})="
+          f"{float(svc.mean(args.b_max)):.2f}ms lambda={lam:.4f}/ms")
+    spec = SMDPSpec(lam=lam, service=svc, energy=energy, b_min=1,
+                    b_max=args.b_max, w1=1.0, w2=args.w2, s_max=128)
+    sol = solve(spec)
+    print(f"[serve] SMDP policy head: {sol.action_table(24).tolist()}")
+    en = np.array([0.0] + [float(energy(b)) for b in range(1, args.b_max + 1)])
+
+    for sched in [SMDPScheduler(sol), GreedyScheduler(1, args.b_max),
+                  StaticScheduler(8)]:
+        eng = ServingEngine(sched, lam=lam, b_max=args.b_max, service=svc,
+                            energy_table=en, slo=args.slo_ms, seed=0)
+        rep = eng.run(args.epochs)
+        slo = (f" slo_miss={rep.n_slo_miss / max(rep.n_served, 1):.2%}"
+               if args.slo_ms else "")
+        print(f"[serve] {sched.name:9s} W={rep.latencies.mean():8.3f}ms "
+              f"P95={rep.percentile(95):8.3f}ms P={rep.power:6.1f}W "
+              f"mean_batch={rep.mean_batch:5.1f}{slo}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

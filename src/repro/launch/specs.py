@@ -1,0 +1,66 @@
+"""Assigned input-shape cells and their ShapeDtypeStruct stand-ins.
+
+Every (arch x shape) pair is a dry-run cell:
+  train_4k    : seq 4,096   global_batch 256  -> train_step
+  prefill_32k : seq 32,768  global_batch 32   -> prefill
+  decode_32k  : seq 32,768  global_batch 128  -> serve_step (1 new token)
+  long_500k   : seq 524,288 global_batch 1    -> serve_step; SSM/hybrid only
+                (full-attention archs skip this cell; see DESIGN.md)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skip).  long_500k needs sub-quadratic decode state."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k-context cell skipped (DESIGN.md)"
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(
+    cfg: ModelConfig, shape: str, dtype=jnp.bfloat16
+) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cell = SHAPES[shape]
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = sds((B, cfg.encoder_len, cfg.d_model), dtype)
+        if cfg.n_patches:
+            batch["patches"] = sds((B, cfg.n_patches, cfg.d_model), dtype)
+        return {"batch": batch}
+    # decode: one new token against a seq_len-deep cache
+    cache = M.abstract_cache(cfg, B, S, dtype=dtype)
+    if cfg.family == "encdec":
+        cache["enc_out"] = sds((B, cfg.encoder_len, cfg.d_model), dtype)
+    return {"tokens": sds((B, 1), jnp.int32), "cache": cache}

@@ -1,0 +1,56 @@
+"""Training driver: --arch <id> on the local device or the production mesh.
+
+Local (CPU smoke, reduced config):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b --steps 20
+
+Production lowering check (512 host placeholders, full config, no execution):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b --dry-run
+"""
+import argparse
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="checkpoints/train")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile the FULL config on the production mesh")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # delegate: dryrun.py must own process start (device-count env var)
+        from repro.launch import dryrun  # noqa: F401  (sets XLA_FLAGS first)
+        import subprocess
+
+        return subprocess.call([
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", args.arch, "--shape", "train_4k", "--mesh", "both",
+        ])
+
+    from repro.configs import get_config
+    from repro.training.data import DataConfig
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_loop import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch).reduced()
+    print(f"[train] {args.arch} (reduced: ~{cfg.n_params()/1e6:.1f}M params) "
+          f"{args.steps} steps of {args.batch}x{args.seq}")
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, seed=0)
+    tcfg = TrainerConfig(steps=args.steps, ckpt_every=max(5, args.steps // 4),
+                         ckpt_dir=args.ckpt_dir, log_every=5,
+                         n_micro=args.n_micro)
+    trainer = Trainer(cfg, data, AdamWConfig(lr=args.lr), tcfg)
+    _, _, losses = trainer.run(seed=0)
+    print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,648 @@
+"""Model-zoo building blocks (pure JAX, dtype-explicit).
+
+Attention is implemented blockwise (online-softmax over KV chunks) so that
+32k-token prefill and 4k training lower without materializing (S, S) logits.
+This jnp implementation doubles as the oracle for the Pallas kernels in
+repro.kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import BATCH, hint
+
+from .config import ModelConfig
+
+from repro.distributed import collectives as C
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mean) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, x, scale, bias=None):
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, scale)
+    return layer_norm(x, scale, bias)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) int."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Multimodal RoPE (qwen2-vl): positions3 (3, B, S) for (t, h, w);
+    `sections` split the D/2 frequency dims among the three components."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    secs = jnp.concatenate(
+        [jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)]
+    )  # (D/2,) component selector in {0, 1, 2}
+    pos_sel = jnp.take(positions3.astype(jnp.float32), secs, axis=0)  # (D/2, B, S)
+    pos = jnp.moveaxis(pos_sel, 0, -1)  # (B, S, D/2)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — jnp reference implementation
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _attn_mask(q_pos, k_pos, *, causal, window, chunk):
+    """(Sq, Sk) boolean mask. window: sliding-window width; chunk: local-chunk."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    if chunk is not None:
+        m &= (q_pos[:, None] // chunk) == (k_pos[None, :] // chunk)
+    return m
+
+
+def flash_attention(
+    q,  # (B, Sq, H, D)
+    k,  # (B, Sk, KV, D)
+    v,  # (B, Sk, KV, D)
+    *,
+    causal: bool = True,
+    q_offset=0,  # scalar or (B,) — absolute position of q[0]
+    kv_len=None,  # scalar or (B,) — valid KV prefix length (cache decode)
+    window: Optional[int] = None,
+    chunk: Optional[int] = None,
+    softcap: Optional[float] = None,
+    chunk_kv: int = 1024,
+    chunk_q: int = 1024,
+):
+    """Blockwise online-softmax attention; f32 accumulation.
+
+    Tiled over BOTH q (outer lax.map) and kv (inner lax.scan) so no (Sq, Sk)
+    tensor is ever materialized — 32k-token prefill lowers with O(cq*ck)
+    transients.  GQA folds H into (KV, G).  The kv body is remat'd so the
+    backward pass recomputes per-chunk probabilities.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    valid_len = jnp.broadcast_to(jnp.asarray(Sk if kv_len is None else kv_len), (B,))
+    q_pos_all = jnp.asarray(q_offset)[..., None] + jnp.arange(Sq)[None, :]
+    q_pos_all = jnp.broadcast_to(q_pos_all, (B, Sq))
+
+    cq = min(chunk_q, Sq)
+    nq = (Sq + cq - 1) // cq
+    pad_q = nq * cq - Sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos_all = jnp.pad(q_pos_all, ((0, 0), (0, pad_q)))
+    qg = q.reshape(B, nq, cq, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_pos_all.reshape(B, nq, cq).transpose(1, 0, 2)
+
+    ck = min(chunk_kv, Sk)
+    nk = max(1, (Sk + ck - 1) // ck)
+    pad_k = nk * ck - Sk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kc = jnp.moveaxis(k.reshape(B, nk, ck, KV, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, ck, KV, D), 1, 0)
+
+    def q_block(args):
+        qi, q_pos = args  # (B, cq, KV, G, D), (B, cq)
+
+        @jax.checkpoint
+        def body(carry, inp):
+            m, l, acc = carry
+            kj, vj, j = inp
+            k_pos = j * ck + jnp.arange(ck)  # (ck,)
+            # bf16 operands, f32 accumulation via preferred_element_type: an
+            # explicit astype(f32) on kj would be hoisted out of the scan by
+            # XLA into a full-cache f32 copy (4 GiB/layer at 32k decode).
+            s = jnp.einsum(
+                "bqkgd,bckd->bkgqc", qi, kj, preferred_element_type=jnp.float32
+            ) * scale  # (B, KV, G, cq, ck)
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            mask = jnp.ones((B, cq, ck), dtype=bool)
+            if causal:
+                mask &= k_pos[None, None, :] <= q_pos[:, :, None]
+            if window is not None:
+                mask &= q_pos[:, :, None] - k_pos[None, None, :] < window
+            if chunk is not None:
+                mask &= (q_pos[:, :, None] // chunk) == (k_pos[None, None, :] // chunk)
+            mask &= k_pos[None, None, :] < valid_len[:, None, None]
+            s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, cq), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((B, KV, G, cq), dtype=jnp.float32)
+        a0 = jnp.zeros((B, KV, G, cq, D), dtype=jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, cq, D)
+        return out
+
+    if nq == 1:
+        outs = q_block((qg[0], qp[0]))[None]
+    else:
+        outs = jax.lax.map(q_block, (qg, qp))  # (nq, B, KV, G, cq, D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * cq, KV * G, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + flash)
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    cfg: ModelConfig,
+    p,  # dict: wq (d,H,hd), wk (d,KV,hd), wv, wo (H,hd,d) [+ bq/bk/bv]
+    x,  # (B, S, d)
+    *,
+    layer_is_local=False,
+    positions=None,  # (B, S) or (3, B, S) for mrope
+    kv_cache=None,  # dict(k, v, length) for decode/prefill-append
+    causal=True,
+    fresh_cache=False,  # static: cache length is known-0 (first prefill)
+):
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = hint(q, BATCH, None, "model", None)
+    k = hint(k, BATCH, None, "model", None)
+    v = hint(v, BATCH, None, "model", None)
+
+    if positions is None:
+        base = 0 if kv_cache is None else kv_cache["length"]
+        positions = jnp.asarray(base)[..., None] + jnp.arange(S)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+    if cfg.mrope_sections is not None:
+        pos3 = positions if positions.ndim == 3 else jnp.broadcast_to(positions, (3, B, S))
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+        q_off = pos3[0, :, 0]
+    elif cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        q_off = positions[:, 0]
+    else:
+        q_off = positions[:, 0]
+
+    window = cfg.sliding_window if layer_is_local else None
+    chunk = cfg.chunk_size if layer_is_local and cfg.layer_pattern == "chunked_full" else None
+    if cfg.layer_pattern == "chunked_full" and layer_is_local:
+        window = None  # llama4 local layers use chunked, not sliding
+
+    if kv_cache is None:
+        n_prev = (
+            C.sharded_window_applicable(window, S)
+            if (window is not None and causal and cfg.sharded_decode_attn)
+            else 0
+        )
+        if n_prev:
+            # halo-exchange sliding-window attention (§Perf E): fetch only
+            # the predecessor shards the window can reach instead of the
+            # full-sequence all-gather GSPMD would emit
+            out = C.sharded_window_prefill_attention(
+                q, k, v, window=window, n_prev=n_prev, softcap=cfg.attn_softcap
+            )
+        else:
+            out = flash_attention(
+                q, k, v,
+                causal=causal,
+                q_offset=0,
+                window=window,
+                chunk=chunk,
+                softcap=cfg.attn_softcap,
+                chunk_kv=cfg.attn_chunk_kv,
+            )
+        new_cache = None
+    else:
+        # append this step's K/V at position `length` then attend over prefix
+        length = kv_cache["length"]
+        zero = jnp.zeros((), dtype=jnp.asarray(length).dtype)
+        idx = (zero, jnp.asarray(length, zero.dtype), zero, zero)
+        kbuf = jax.lax.dynamic_update_slice(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), idx
+        )
+        vbuf = jax.lax.dynamic_update_slice(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), idx
+        )
+        kbuf = hint(kbuf, BATCH, "model", None, None)
+        vbuf = hint(vbuf, BATCH, "model", None, None)
+        # fresh-cache prefill (length statically 0): attention over the
+        # buffer == attention over the current segment, so the halo
+        # sliding-window path applies here too (§Perf E)
+        fresh = fresh_cache or (
+            (not isinstance(length, jax.core.Tracer)) and int(length) == 0
+        )
+        n_prev_pf = (
+            C.sharded_window_applicable(window, S)
+            if (fresh and S > 1 and window is not None and causal
+                and cfg.sharded_decode_attn)
+            else 0
+        )
+        if n_prev_pf:
+            out = C.sharded_window_prefill_attention(
+                q, k, v, window=window, n_prev=n_prev_pf,
+                softcap=cfg.attn_softcap,
+            )
+        elif (
+            cfg.sharded_decode_attn
+            and S == 1
+            and C.sharded_decode_applicable(q.shape, kbuf.shape[1])
+        ):
+            # seq-sharded flash-decode: O(B*H*D) wire cost instead of the
+            # full-cache all-gather GSPMD would otherwise emit per layer
+            out = C.sharded_flash_decode(
+                q, kbuf, vbuf, length + S,
+                softcap=cfg.attn_softcap, window=window, chunk=chunk,
+            )
+        else:
+            out = flash_attention(
+                q, kbuf, vbuf,
+                causal=causal,
+                q_offset=length,
+                kv_len=length + S,
+                window=window,
+                chunk=chunk,
+                softcap=cfg.attn_softcap,
+                chunk_kv=cfg.attn_chunk_kv,
+            )
+        new_cache = {"k": kbuf, "v": vbuf, "length": length + S}
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    # residual stream is sequence-sharded over 'model' (Megatron-SP style):
+    # activations per chip shrink 16x, which is what lets 4k-seq training of
+    # 32B+ models fit v5e HBM (see EXPERIMENTS.md §Perf).
+    return hint(out, BATCH, "model", None), new_cache
+
+
+def cross_attention(cfg: ModelConfig, p, x, enc_out):
+    """Whisper decoder cross-attention (no mask, no rope)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(x.dtype))
+    out = flash_attention(q, k, v, causal=False, chunk_kv=cfg.attn_chunk_kv)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp(cfg: ModelConfig, p, x):
+    if cfg.act in ("swiglu", "geglu"):
+        gate = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype))
+        up = jnp.einsum("bsd,df->bsf", x, p["w3"].astype(x.dtype))
+        act = jax.nn.silu(gate) if cfg.act == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:  # plain gelu MLP
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype)))
+    h = hint(h, BATCH, None, "model")
+    return hint(jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype)), BATCH, "model", None)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — grouped one-hot dispatch (GShard-style, SPMD-friendly)
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (B, S, d).  Experts dim is shardable over 'model'."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    capacity_factor = cfg.moe_capacity_factor
+    T = B * S
+    g = min(cfg.moe_group_size, T)
+    # pad T to a multiple of g
+    G = (T + g - 1) // g
+    pad = G * g - T
+    xt = x.reshape(T, d)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xg = hint(xt.reshape(G, g, d), BATCH, None, None)
+
+    logits = jnp.einsum("Ggd,de->Gge", xg, p["router"].astype(x.dtype)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)  # (G, g, E)
+    cap = int(max(4, math.ceil(g * k / E * capacity_factor)))
+
+    combine = jnp.zeros((G, g, E, cap), dtype=jnp.float32)
+    gates_left = gates
+    base = jnp.zeros((G, 1, E), dtype=jnp.float32)  # slots used by prior rounds
+    for _ in range(k):
+        idx = jnp.argmax(gates_left, axis=-1)  # (G, g)
+        gate_val = jnp.take_along_axis(gates_left, idx[..., None], axis=-1)[..., 0]
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (G, g, E)
+        pos = (jnp.cumsum(onehot, axis=1) - 1.0 + base) * onehot  # slot in expert
+        in_cap = (pos < cap) & (onehot > 0)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        combine = combine + (
+            gate_val[..., None, None] * onehot[..., None] * pos_oh * in_cap[..., None]
+        )
+        base = base + jnp.sum(onehot, axis=1, keepdims=True)
+        gates_left = gates_left * (1.0 - onehot)  # mask chosen expert
+    combine = hint(combine, BATCH, None, None, None)
+    dispatch = (combine > 0).astype(x.dtype)  # (G, g, E, C)
+
+    # dispatch tokens to experts: (E, G, C, d).  EP when E divides 'model'
+    # (llama4: 16 experts); otherwise d is TP-sharded (grok: 8 experts).
+    xe = hint(
+        jnp.einsum("GgEC,Ggd->EGCd", dispatch, xg), "model", BATCH, None, "model"
+    )
+    # expert FFN, vmapped over E via einsum with stacked weights
+    if cfg.act in ("swiglu", "geglu"):
+        gate_h = jnp.einsum("EGCd,Edf->EGCf", xe, p["w1"].astype(x.dtype))
+        up_h = jnp.einsum("EGCd,Edf->EGCf", xe, p["w3"].astype(x.dtype))
+        act = jax.nn.silu(gate_h) if cfg.act == "swiglu" else jax.nn.gelu(gate_h)
+        h = act * up_h
+    else:
+        h = jax.nn.gelu(jnp.einsum("EGCd,Edf->EGCf", xe, p["w1"].astype(x.dtype)))
+    h = hint(h, "model", BATCH, None, "model")
+    ye = hint(
+        jnp.einsum("EGCf,Efd->EGCd", h, p["w2"].astype(x.dtype)),
+        "model", BATCH, None, "model",
+    )
+    # combine back
+    y = hint(jnp.einsum("GgEC,EGCd->Ggd", combine.astype(x.dtype), ye), BATCH, None, None)
+    # (reshaped back to (B, S, d) below; the block-output hint re-shards seq)
+    y = y.reshape(G * g, d)[:T].reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(cfg, {"w1": p["sw1"], "w3": p.get("sw3"), "w2": p["sw2"]}, x)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, chunked) — zamba2 backbone
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv along seq. x: (B, S, C), w: (K, C).
+
+    state: (B, K-1, C) trailing inputs from the previous segment (decode).
+    Returns (y, new_state)."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), dtype=x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + S, :] * w[i][None, None, :].astype(x.dtype) for i in range(K))
+    new_state = xp[:, S:, :] if K > 1 else state
+    return y, new_state
+
+
+def mamba2_block(cfg: ModelConfig, p, x, *, ssm_state=None, conv_state=None, chunk: int = 128):
+    """Mamba2 block via the chunked SSD algorithm.
+
+    x: (B, S, d).  State: (B, H, P, N) with H = n_ssm_heads, P = ssm_head_dim,
+    N = ssm_state.  Returns (y, new_ssm_state, new_conv_state).
+    """
+    B, S, d = x.shape
+    H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.d_inner_ssm
+
+    zxbcdt = hint(
+        jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype)), BATCH, None, "model"
+    )
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * N], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)  # (B,S,di),(B,S,N),(B,S,N)
+    xs = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,) negative
+    # per-step log decay
+    dA = dt * a[None, None, :]  # (B, S, H)  (log decay, <= 0)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, H, P, N), dtype=jnp.float32)
+
+    # pad S to multiple of chunk
+    L = chunk if S >= chunk else S
+    n_ch = (S + L - 1) // L
+    pad = n_ch * L - S
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    def chunk_body(state, inp):
+        xc, bc, cc, dac, dtc = inp  # (B,L,H,P),(B,L,N),(B,L,N),(B,L,H),(B,L,H)
+        cum = jnp.cumsum(dac, axis=1)  # (B, L, H) cumulative log decay
+        # intra-chunk: Att[i, j] = C_i . B_j * exp(cum_i - cum_j) * dt_j, j <= i
+        cb = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        dec = cum[:, :, None, :] - cum[:, None, :, :]  # (B, L, L, H)
+        li = jnp.tril(jnp.ones((L, L), dtype=bool))
+        att = cb[..., None] * jnp.exp(jnp.where(li[None, :, :, None], dec, -jnp.inf))
+        att = att * dtc[:, None, :, :]  # weight by dt_j
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att, xc.astype(jnp.float32))
+        # inter-chunk: y_i += C_i . state * exp(cum_i)
+        y_inter = jnp.einsum(
+            "bin,bhpn,bih->bihp", cc.astype(jnp.float32), state, jnp.exp(cum)
+        )
+        # state update: state = state * exp(cum_L) + sum_j exp(cum_L - cum_j) dt_j x_j B_j
+        tot = cum[:, -1, :]  # (B, H)
+        w_j = jnp.exp(tot[:, None, :] - cum) * dtc  # (B, L, H)
+        state_new = state * jnp.exp(tot)[:, :, None, None] + jnp.einsum(
+            "blh,blhp,bln->bhpn", w_j, xc.astype(jnp.float32), bc.astype(jnp.float32)
+        )
+        return state_new, y_intra + y_inter
+
+    xs_c = xs.reshape(B, n_ch, L, H, P).swapaxes(0, 1)
+    Bm_c = Bm.reshape(B, n_ch, L, N).swapaxes(0, 1)
+    Cm_c = Cm.reshape(B, n_ch, L, N).swapaxes(0, 1)
+    dA_c = dA.reshape(B, n_ch, L, H).swapaxes(0, 1)
+    dt_c = dt.reshape(B, n_ch, L, H).swapaxes(0, 1)
+    ssm_state, ys = jax.lax.scan(chunk_body, ssm_state, (xs_c, Bm_c, Cm_c, dA_c, dt_c))
+    y = ys.swapaxes(0, 1).reshape(B, n_ch * L, H, P)[:, :S]
+    y = y + xs[:, :S].astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype) * jax.nn.silu(z)
+    out = hint(jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype)), BATCH, "model", None)
+    return out, ssm_state, conv_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — time-mix (WKV6) + channel-mix
+# ---------------------------------------------------------------------------
+
+
+def _segmented_scan(step, carry, xs, seg: int, pad_values=None):
+    """lax.scan with sqrt-remat: backward saves carries only at segment
+    boundaries (S/seg states) and recomputes inside each segment (seg
+    states live at once).  Peak carry memory drops from O(S) to
+    O(S/seg + seg) — 32x for the rwkv6 train_4k cell (§Perf).
+
+    pad_values: per-leaf constants for the tail padding, chosen so padded
+    steps are identity on the carry (e.g. decay=1, k=v=0 for WKV)."""
+    S = jax.tree.leaves(xs)[0].shape[0]
+    nseg = max(1, (S + seg - 1) // seg)
+    pad = nseg * seg - S
+    if pad:
+        if pad_values is None:
+            pad_values = jax.tree.map(lambda a: 0.0, xs)
+        xs = jax.tree.map(
+            lambda a, pv: jnp.pad(
+                a, ((0, pad),) + ((0, 0),) * (a.ndim - 1), constant_values=pv
+            ),
+            xs, pad_values,
+        )
+    xs_seg = jax.tree.map(lambda a: a.reshape((nseg, seg) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def seg_body(c, xseg):
+        return jax.lax.scan(step, c, xseg)
+
+    carry, outs = jax.lax.scan(seg_body, carry, xs_seg)
+    outs = jax.tree.map(
+        lambda a: a.reshape((nseg * seg,) + a.shape[2:])[:S], outs
+    )
+    return carry, outs
+
+
+def rwkv6_time_mix(cfg: ModelConfig, p, x, *, state=None, shift_state=None):
+    """x: (B, S, d) -> (y, new_state, new_shift).
+
+    state: (B, H, P, P) WKV state; shift_state: (B, 1, d) last token.
+    Data-dependent decay w_t (Finch); u (bonus) per head-dim.
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    P = cfg.head_dim
+    if shift_state is None:
+        shift_state = jnp.zeros((B, 1, d), dtype=x.dtype)
+    x_prev = jnp.concatenate([shift_state, x[:, :-1]], axis=1)
+    new_shift = x[:, -1:, :]
+
+    def lerp(name):
+        mu = p[f"mu_{name}"].astype(x.dtype)  # (d,)
+        return x + mu * (x_prev - x)
+
+    r = jnp.einsum("bsd,dhp->bshp", lerp("r"), p["wr"].astype(x.dtype))
+    kk = jnp.einsum("bsd,dhp->bshp", lerp("k"), p["wk"].astype(x.dtype))
+    vv = jnp.einsum("bsd,dhp->bshp", lerp("v"), p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,dhp->bshp", lerp("g"), p["wg"].astype(x.dtype)))
+    # data-dependent decay via low-rank projection (Finch)
+    wx = jnp.tanh(jnp.einsum("bsd,dr->bsr", lerp("w"), p["w_lora_a"].astype(x.dtype)))
+    w_log = p["w_base"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rdp->bsdp", wx.astype(jnp.float32), p["w_lora_b"].astype(jnp.float32).reshape(p["w_lora_b"].shape[0], H, P)
+    ).reshape(B, S, H, P)
+    w = jnp.exp(-jnp.exp(w_log))  # (B, S, H, P) in (0, 1)
+    u = p["u_bonus"].astype(jnp.float32).reshape(H, P)
+
+    if state is None:
+        state = jnp.zeros((B, H, P, P), dtype=jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,P) each
+        # stacked scan inputs stay in the model dtype (bf16 on TPU) and are
+        # upcast per step: halves the stacked-residual memory of training
+        # (EXPERIMENTS.md §Perf, rwkv6 train cell)
+        rt = rt.astype(jnp.float32)
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        wt = wt.astype(jnp.float32)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,P,P) outer k^T v
+        out = jnp.einsum("bhp,bhpq->bhq", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, out
+
+    rs = r.swapaxes(0, 1).reshape(S, B, H, P)
+    ks = kk.swapaxes(0, 1).reshape(S, B, H, P)
+    vs = vv.swapaxes(0, 1).reshape(S, B, H, P)
+    # decay stays f32: bf16 cannot represent 1 - w for slow-decay channels
+    ws = w.swapaxes(0, 1).reshape(S, B, H, P)
+    if S <= 64:  # decode / short prefill: no segmentation overhead
+        state, outs = jax.lax.scan(step, state, (rs, ks, vs, ws))
+    else:
+        state, outs = _segmented_scan(
+            step, state, (rs, ks, vs, ws), seg=64,
+            pad_values=(0.0, 0.0, 0.0, 1.0),  # decay=1: pads fix the state
+        )
+    y = outs.swapaxes(0, 1).reshape(B, S, H, P)
+    y = rms_norm(y, p["ln_x"].astype(jnp.float32)).astype(x.dtype) * g
+    y = jnp.einsum("bshp,hpd->bsd", y, p["wo"].astype(x.dtype))
+    return y, state, new_shift
+
+
+def rwkv6_channel_mix(cfg: ModelConfig, p, x, *, shift_state=None):
+    B, S, d = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((B, 1, d), dtype=x.dtype)
+    x_prev = jnp.concatenate([shift_state, x[:, :-1]], axis=1)
+    new_shift = x[:, -1:, :]
+    mu_k = p["mu_ck"].astype(x.dtype)
+    mu_r = p["mu_cr"].astype(x.dtype)
+    xk = x + mu_k * (x_prev - x)
+    xr = x + mu_r * (x_prev - x)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["ck"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    kv = jnp.einsum("bsf,fd->bsd", kk, p["cv"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cr"].astype(x.dtype)))
+    return rr * kv, new_shift

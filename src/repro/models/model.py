@@ -1,0 +1,594 @@
+"""Model zoo: init / forward / train-loss / prefill / decode for all families.
+
+Layers are stacked on a leading `n_layers` axis and iterated with lax.scan
+(MaxText-style) so that 64-layer models lower to compact HLO.  Training wraps
+the scanned block in jax.checkpoint (remat).
+
+Cache conventions (decode):
+  dense/moe/vlm : {"k": (L,B,S,KV,hd), "v": ..., "length": int32}
+  encdec        : + {"enc_out": (B,T,d)}
+  hybrid        : {"ssm": (L,B,H,P,N), "conv": (L,B,K-1,C), "attn": list of
+                   per-occurrence {"k","v"}, "length": int32}
+  ssm (rwkv)    : {"wkv": (L,B,H,P,P), "tshift": (L,B,1,d), "cshift": (L,B,1,d),
+                   "length": int32}
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import BATCH, hint
+
+from .config import ModelConfig
+from . import layers as L
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _norm_params(cfg: ModelConfig, key, shape_prefix, d, dtype):
+    if cfg.norm == "rmsnorm":
+        return {"s": jnp.zeros(shape_prefix + (d,), dtype)}
+    return {
+        "s": jnp.ones(shape_prefix + (d,), dtype),
+        "b": jnp.zeros(shape_prefix + (d,), dtype),
+    }
+
+
+def _attn_params(cfg: ModelConfig, key, lead, dtype, std):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": jax.random.normal(ks[0], lead + (d, H, hd), dtype) * std,
+        "wk": jax.random.normal(ks[1], lead + (d, KV, hd), dtype) * std,
+        "wv": jax.random.normal(ks[2], lead + (d, KV, hd), dtype) * std,
+        "wo": jax.random.normal(ks[3], lead + (H, hd, d), dtype) * std,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros(lead + (H, hd), dtype)
+        p["bk"] = jnp.zeros(lead + (KV, hd), dtype)
+        p["bv"] = jnp.zeros(lead + (KV, hd), dtype)
+    return p
+
+
+def _mlp_params(cfg: ModelConfig, key, lead, dtype, std, ff=None):
+    d, ff = cfg.d_model, ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": jax.random.normal(ks[0], lead + (d, ff), dtype) * std,
+        "w2": jax.random.normal(ks[1], lead + (ff, d), dtype) * std,
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w3"] = jax.random.normal(ks[2], lead + (d, ff), dtype) * std
+    return p
+
+
+def _moe_params(cfg: ModelConfig, key, lead, dtype, std):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": jax.random.normal(ks[0], lead + (d, E), dtype) * std,
+        "w1": jax.random.normal(ks[1], lead + (E, d, ff), dtype) * std,
+        "w2": jax.random.normal(ks[2], lead + (E, ff, d), dtype) * std,
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w3"] = jax.random.normal(ks[3], lead + (E, d, ff), dtype) * std
+    if cfg.n_shared_experts:
+        p["sw1"] = jax.random.normal(ks[4], lead + (d, ff), dtype) * std
+        p["sw2"] = jax.random.normal(ks[5], lead + (ff, d), dtype) * std
+        if cfg.act in ("swiglu", "geglu"):
+            p["sw3"] = jax.random.normal(ks[6], lead + (d, ff), dtype) * std
+    return p
+
+
+def _mamba_params(cfg: ModelConfig, key, lead, dtype, std):
+    d, di, N, H = cfg.d_model, cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads
+    K = cfg.ssm_conv
+    proj_out = 2 * di + 2 * N + H
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": jax.random.normal(ks[0], lead + (d, proj_out), dtype) * std,
+        "out_proj": jax.random.normal(ks[1], lead + (di, d), dtype) * std,
+        "conv_w": jax.random.normal(ks[2], lead + (K, di + 2 * N), dtype) * std,
+        "dt_bias": jnp.full(lead + (H,), -4.6, dtype),  # softplus ~ 0.01
+        "a_log": jnp.zeros(lead + (H,), dtype),  # A = -1
+        "d_skip": jnp.ones(lead + (H,), dtype) * 0.1,
+    }
+
+
+def _rwkv_params(cfg: ModelConfig, key, lead, dtype, std):
+    d, H, P, ff = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff
+    R = 32  # decay LoRA rank
+    ks = jax.random.split(key, 10)
+    p = {
+        "wr": jax.random.normal(ks[0], lead + (d, H, P), dtype) * std,
+        "wk": jax.random.normal(ks[1], lead + (d, H, P), dtype) * std,
+        "wv": jax.random.normal(ks[2], lead + (d, H, P), dtype) * std,
+        "wg": jax.random.normal(ks[3], lead + (d, H, P), dtype) * std,
+        "wo": jax.random.normal(ks[4], lead + (H, P, d), dtype) * std,
+        "w_lora_a": jax.random.normal(ks[5], lead + (d, R), dtype) * std,
+        "w_lora_b": jax.random.normal(ks[6], lead + (R, H * P), dtype) * std,
+        "w_base": jnp.full(lead + (H, P), -0.6, dtype),
+        "u_bonus": jnp.zeros(lead + (H, P), dtype),
+        "ln_x": jnp.zeros(lead + (P,), dtype),
+        "ck": jax.random.normal(ks[7], lead + (d, ff), dtype) * std,
+        "cv": jax.random.normal(ks[8], lead + (ff, d), dtype) * std,
+        "cr": jax.random.normal(ks[9], lead + (d, d), dtype) * std,
+    }
+    for name in ("r", "k", "v", "g", "w"):
+        p[f"mu_{name}"] = jnp.full(lead + (d,), 0.5, dtype)
+    p["mu_ck"] = jnp.full(lead + (d,), 0.5, dtype)
+    p["mu_cr"] = jnp.full(lead + (d,), 0.5, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> PyTree:
+    d = cfg.d_model
+    std = 0.02
+    keys = jax.random.split(key, 12)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, d), dtype) * std,
+    }
+    params["final_norm"] = _norm_params(cfg, keys[1], (), d, dtype)
+    if not cfg.tie_embeddings:
+        params["out"] = jax.random.normal(keys[2], (d, cfg.vocab_size), dtype) * std
+
+    Lc = (cfg.n_layers,)
+    if cfg.rwkv:
+        blk = _rwkv_params(cfg, keys[3], Lc, dtype, std)
+        blk["ln1"] = _norm_params(cfg, keys[4], Lc, d, dtype)
+        blk["ln2"] = _norm_params(cfg, keys[5], Lc, d, dtype)
+        params["blocks"] = blk
+        return params
+    if cfg.family == "hybrid":
+        blk = _mamba_params(cfg, keys[3], Lc, dtype, std)
+        blk["ln1"] = _norm_params(cfg, keys[4], Lc, d, dtype)
+        params["blocks"] = blk
+        shared = _attn_params(cfg, keys[5], (), dtype, std)
+        shared.update(_mlp_params(cfg, keys[6], (), dtype, std))
+        shared["ln_a"] = _norm_params(cfg, keys[7], (), d, dtype)
+        shared["ln_m"] = _norm_params(cfg, keys[8], (), d, dtype)
+        params["shared_attn"] = shared
+        return params
+    if cfg.family == "encdec":
+        Le = (cfg.n_encoder_layers,)
+        enc = _attn_params(cfg, keys[3], Le, dtype, std)
+        enc.update(_mlp_params(cfg, keys[4], Le, dtype, std))
+        enc["ln1"] = _norm_params(cfg, keys[5], Le, d, dtype)
+        enc["ln2"] = _norm_params(cfg, keys[6], Le, d, dtype)
+        params["enc_blocks"] = enc
+        params["enc_final_norm"] = _norm_params(cfg, keys[7], (), d, dtype)
+        params["enc_pos"] = jax.random.normal(keys[8], (cfg.encoder_len, d), dtype) * std
+        dec = _attn_params(cfg, keys[9], Lc, dtype, std)
+        dec.update(_mlp_params(cfg, keys[10], Lc, dtype, std))
+        xattn = _attn_params(cfg, keys[11], Lc, dtype, std)
+        dec.update({f"x_{k}": v for k, v in xattn.items()})
+        dec["ln1"] = _norm_params(cfg, keys[5], Lc, d, dtype)
+        dec["ln2"] = _norm_params(cfg, keys[6], Lc, d, dtype)
+        dec["lnx"] = _norm_params(cfg, keys[7], Lc, d, dtype)
+        params["blocks"] = dec
+        return params
+
+    # dense / moe / vlm transformer
+    blk = _attn_params(cfg, keys[3], Lc, dtype, std)
+    if cfg.n_experts:
+        blk.update(_moe_params(cfg, keys[4], Lc, dtype, std))
+    else:
+        blk.update(_mlp_params(cfg, keys[4], Lc, dtype, std))
+    blk["ln1"] = _norm_params(cfg, keys[5], Lc, d, dtype)
+    blk["ln2"] = _norm_params(cfg, keys[6], Lc, d, dtype)
+    if cfg.post_block_norm:
+        blk["ln1_post"] = _norm_params(cfg, keys[7], Lc, d, dtype)
+        blk["ln2_post"] = _norm_params(cfg, keys[8], Lc, d, dtype)
+    params["blocks"] = blk
+    return params
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> PyTree:
+    """ShapeDtypeStruct tree — no allocation (for dry-run lowering)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _pattern_unit(cfg: ModelConfig) -> int:
+    """Layers per repeating pattern group (scan iterates over groups)."""
+    if cfg.layer_pattern == "local_global":
+        return 2  # (local, global)
+    if cfg.layer_pattern == "chunked_full":
+        return 4  # (chunked, chunked, chunked, full)
+    return 1
+
+
+def _unit_is_local(cfg: ModelConfig, u: int) -> bool:
+    if cfg.layer_pattern == "local_global":
+        return u == 0
+    if cfg.layer_pattern == "chunked_full":
+        return u != 3
+    return False
+
+
+def _transformer_block(cfg: ModelConfig, p, h, is_local: bool, kv_cache=None,
+                       positions=None, fresh_cache=False):
+    a_in = L.apply_norm(cfg, h, p["ln1"]["s"], p["ln1"].get("b"))
+    a_out, new_cache = L.attention(
+        cfg, p, a_in, layer_is_local=is_local, kv_cache=kv_cache,
+        positions=positions, fresh_cache=fresh_cache,
+    )
+    if cfg.post_block_norm:
+        a_out = L.apply_norm(cfg, a_out, p["ln1_post"]["s"], p["ln1_post"].get("b"))
+    h = h + a_out
+    m_in = L.apply_norm(cfg, h, p["ln2"]["s"], p["ln2"].get("b"))
+    if cfg.n_experts:
+        m_out = L.moe_ffn(cfg, p, m_in)
+    else:
+        m_out = L.mlp(cfg, p, m_in)
+    if cfg.post_block_norm:
+        m_out = L.apply_norm(cfg, m_out, p["ln2_post"]["s"], p["ln2_post"].get("b"))
+    return h + m_out, new_cache
+
+
+def _maybe_mixed_pattern(cfg: ModelConfig) -> bool:
+    return cfg.layer_pattern in ("local_global", "chunked_full")
+
+
+def _embed(cfg: ModelConfig, params, tokens, patches=None):
+    # NOTE (§Perf, refuted hypothesis): batch-only sharding for rwkv was
+    # tried to kill the per-layer seq all-gathers of the time scan; it made
+    # the collective term WORSE (16s vs 9.4s) because the idle model axis
+    # causes GSPMD to bounce activations instead.  Proper fix (future work):
+    # channel-sharded WKV via shard_map.  Sequence-sharding stays.
+    h = hint(params["embed"][tokens], BATCH, "model", None)
+    if cfg.embed_scale:
+        h = (h.astype(jnp.float32) * math.sqrt(cfg.d_model)).astype(h.dtype)
+    if cfg.n_patches and patches is not None:
+        np_ = patches.shape[1]
+        h = jnp.concatenate([patches.astype(h.dtype), h[:, np_:, :]], axis=1)
+    return h
+
+
+def _unembed(cfg: ModelConfig, params, h):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["out"])
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_softcap
+        ).astype(logits.dtype)
+    return hint(logits, BATCH, None, "model")
+
+
+def _mrope_positions(cfg: ModelConfig, B, S, offset=0):
+    """Stub M-RoPE positions: text gets (t,t,t); patch region gets a 2-D grid."""
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :] + offset, (B, S))
+    return jnp.stack([pos, pos, pos])  # (3, B, S)
+
+
+def forward_lm(
+    cfg: ModelConfig,
+    params: PyTree,
+    tokens,  # (B, S)
+    *,
+    patches=None,  # vlm stub input
+    cache=None,
+    remat: bool = False,
+    fresh_cache: bool = False,
+):
+    """Dense / MoE / VLM decoder stack.  Returns (h_final, new_cache)."""
+    B, S = tokens.shape
+    h = _embed(cfg, params, tokens, patches)
+    positions = None
+    if cfg.mrope_sections is not None:
+        off = 0 if cache is None else cache["length"]
+        positions = _mrope_positions(cfg, B, S, off)
+
+    blk = params["blocks"]
+    U = _pattern_unit(cfg)
+    G = cfg.n_layers // U
+    assert G * U == cfg.n_layers, "n_layers must divide the layer pattern"
+    blk_g = jax.tree.map(lambda x: x.reshape((G, U) + x.shape[1:]), blk)
+
+    def body(carry, xs):
+        h = carry
+        if cache is None:
+            p_g = xs
+            for u in range(U):
+                p = jax.tree.map(lambda x: x[u], p_g)
+                h, _ = _transformer_block(
+                    cfg, p, h, _unit_is_local(cfg, u), positions=positions
+                )
+            return h, None
+        p_g, kg, vg = xs
+        ks_out, vs_out = [], []
+        for u in range(U):
+            p = jax.tree.map(lambda x: x[u], p_g)
+            kv = {"k": kg[u], "v": vg[u], "length": cache["length"]}
+            h, nc = _transformer_block(
+                cfg, p, h, _unit_is_local(cfg, u), kv_cache=kv,
+                positions=positions, fresh_cache=fresh_cache,
+            )
+            ks_out.append(nc["k"])
+            vs_out.append(nc["v"])
+        return h, (jnp.stack(ks_out), jnp.stack(vs_out))
+
+    body_fn = jax.checkpoint(body) if remat else body
+    if cache is None:
+        h, _ = jax.lax.scan(body_fn, h, blk_g)
+        new_cache = None
+    else:
+        kc = cache["k"].reshape((G, U) + cache["k"].shape[1:])
+        vc = cache["v"].reshape((G, U) + cache["v"].shape[1:])
+        h, (ks, vs) = jax.lax.scan(body_fn, h, (blk_g, kc, vc))
+        new_cache = {
+            "k": ks.reshape(cache["k"].shape),
+            "v": vs.reshape(cache["v"].shape),
+            "length": cache["length"] + S,
+        }
+    h = L.apply_norm(cfg, h, params["final_norm"]["s"], params["final_norm"].get("b"))
+    return h, new_cache
+
+
+def forward_rwkv(cfg: ModelConfig, params, tokens, *, cache=None, remat=False):
+    B, S = tokens.shape
+    h = _embed(cfg, params, tokens)
+    blk = params["blocks"]
+
+    def body(carry, xs):
+        h = carry
+        p, wkv, tsh, csh = xs
+        a_in = L.apply_norm(cfg, h, p["ln1"]["s"], p["ln1"].get("b"))
+        y, wkv_n, tsh_n = L.rwkv6_time_mix(cfg, p, a_in, state=wkv, shift_state=tsh)
+        h = h + y
+        c_in = L.apply_norm(cfg, h, p["ln2"]["s"], p["ln2"].get("b"))
+        y2, csh_n = L.rwkv6_channel_mix(cfg, p, c_in, shift_state=csh)
+        return h + y2, (wkv_n, tsh_n, csh_n)
+
+    body_fn = jax.checkpoint(body) if remat else body
+    if cache is None:
+        H, P, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+        wkv0 = jnp.zeros((cfg.n_layers, B, H, P, P), jnp.float32)
+        tsh0 = jnp.zeros((cfg.n_layers, B, 1, d), h.dtype)
+        csh0 = jnp.zeros((cfg.n_layers, B, 1, d), h.dtype)
+    else:
+        wkv0, tsh0, csh0 = cache["wkv"], cache["tshift"], cache["cshift"]
+    h, (wkv, tsh, csh) = jax.lax.scan(body_fn, h, (blk, wkv0, tsh0, csh0))
+    new_cache = {
+        "wkv": wkv,
+        "tshift": tsh,
+        "cshift": csh,
+        "length": (0 if cache is None else cache["length"]) + S,
+    }
+    h = L.apply_norm(cfg, h, params["final_norm"]["s"], params["final_norm"].get("b"))
+    return h, new_cache
+
+
+def forward_hybrid(cfg: ModelConfig, params, tokens, *, cache=None, remat=False):
+    """Zamba2: mamba2 backbone + shared attention block every k layers."""
+    B, S = tokens.shape
+    h = _embed(cfg, params, tokens)
+    blk = params["blocks"]
+    shared = params["shared_attn"]
+    k_every = cfg.shared_attn_every
+    n_occ = cfg.n_layers // k_every
+    length = 0 if cache is None else cache["length"]
+
+    def mamba_body(carry, xs):
+        h = carry
+        p, ssm, conv = xs
+        a_in = L.apply_norm(cfg, h, p["ln1"]["s"], p["ln1"].get("b"))
+        y, ssm_n, conv_n = L.mamba2_block(cfg, p, a_in, ssm_state=ssm, conv_state=conv)
+        return h + y, (ssm_n, conv_n)
+
+    mamba_fn = jax.checkpoint(mamba_body) if remat else mamba_body
+
+    if cache is None:
+        H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        C = cfg.d_inner_ssm + 2 * N
+        ssm0 = jnp.zeros((cfg.n_layers, B, H, P, N), jnp.float32)
+        conv0 = jnp.zeros((cfg.n_layers, B, cfg.ssm_conv - 1, C), h.dtype)
+        attn_caches = [None] * n_occ
+    else:
+        ssm0, conv0 = cache["ssm"], cache["conv"]
+        attn_caches = cache["attn"]
+
+    ssm_out, conv_out, attn_out = [], [], []
+    start = 0
+    for occ in range(n_occ + 1):
+        stop = min(start + k_every, cfg.n_layers)
+        if stop > start:
+            seg = jax.tree.map(lambda x: x[start:stop], blk)
+            h, (ssm_n, conv_n) = jax.lax.scan(
+                mamba_fn, h, (seg, ssm0[start:stop], conv0[start:stop])
+            )
+            ssm_out.append(ssm_n)
+            conv_out.append(conv_n)
+        if occ < n_occ:
+            a_in = L.apply_norm(cfg, h, shared["ln_a"]["s"], shared["ln_a"].get("b"))
+            kv = attn_caches[occ]
+            if kv is not None:
+                kv = {"k": kv["k"], "v": kv["v"], "length": length}
+            y, nc = L.attention(cfg, shared, a_in, kv_cache=kv)
+            h = h + y
+            m_in = L.apply_norm(cfg, h, shared["ln_m"]["s"], shared["ln_m"].get("b"))
+            h = h + L.mlp(cfg, shared, m_in)
+            if nc is not None:
+                attn_out.append({"k": nc["k"], "v": nc["v"]})
+        start = stop
+    h = L.apply_norm(cfg, h, params["final_norm"]["s"], params["final_norm"].get("b"))
+    new_cache = {
+        "ssm": jnp.concatenate(ssm_out, axis=0),
+        "conv": jnp.concatenate(conv_out, axis=0),
+        "attn": attn_out if attn_out else attn_caches,
+        "length": length + S,
+    }
+    return h, new_cache
+
+
+def forward_encoder(cfg: ModelConfig, params, frames, *, remat=False):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    h = frames + params["enc_pos"][None, : frames.shape[1], :].astype(frames.dtype)
+    blk = params["enc_blocks"]
+
+    def body(carry, p):
+        h = carry
+        a_in = L.apply_norm(cfg, h, p["ln1"]["s"], p["ln1"].get("b"))
+        y, _ = L.attention(cfg, p, a_in, causal=False)
+        h = h + y
+        m_in = L.apply_norm(cfg, h, p["ln2"]["s"], p["ln2"].get("b"))
+        return h + L.mlp(cfg, p, m_in), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, h, blk)
+    return L.apply_norm(
+        cfg, h, params["enc_final_norm"]["s"], params["enc_final_norm"].get("b")
+    )
+
+
+def forward_encdec(cfg: ModelConfig, params, tokens, frames=None, *, cache=None, remat=False):
+    B, S = tokens.shape
+    if cache is not None and "enc_out" in cache:
+        enc_out = cache["enc_out"]
+    else:
+        enc_out = forward_encoder(cfg, params, frames, remat=remat)
+    h = _embed(cfg, params, tokens)
+    blk = params["blocks"]
+
+    def body(carry, xs):
+        h = carry
+        if cache is None:
+            p = xs
+            kv = None
+        else:
+            p, kl, vl = xs
+            kv = {"k": kl, "v": vl, "length": cache["length"]}
+        a_in = L.apply_norm(cfg, h, p["ln1"]["s"], p["ln1"].get("b"))
+        y, nc = L.attention(cfg, p, a_in, kv_cache=kv)
+        h = h + y
+        x_in = L.apply_norm(cfg, h, p["lnx"]["s"], p["lnx"].get("b"))
+        xp = {k[2:]: v for k, v in p.items() if k.startswith("x_")}
+        h = h + L.cross_attention(cfg, xp, x_in, enc_out)
+        m_in = L.apply_norm(cfg, h, p["ln2"]["s"], p["ln2"].get("b"))
+        h = h + L.mlp(cfg, p, m_in)
+        return h, (None if cache is None else (nc["k"], nc["v"]))
+
+    body_fn = jax.checkpoint(body) if remat else body
+    if cache is None:
+        h, _ = jax.lax.scan(body_fn, h, blk)
+        new_cache = None
+    else:
+        h, (ks, vs) = jax.lax.scan(body_fn, h, (blk, cache["k"], cache["v"]))
+        new_cache = {
+            "k": ks,
+            "v": vs,
+            "length": cache["length"] + S,
+            "enc_out": enc_out,
+        }
+    h = L.apply_norm(cfg, h, params["final_norm"]["s"], params["final_norm"].get("b"))
+    return h, new_cache
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, Any], *, cache=None,
+            remat=False, fresh_cache=False):
+    if cfg.rwkv:
+        return forward_rwkv(cfg, params, batch["tokens"], cache=cache, remat=remat)
+    if cfg.family == "hybrid":
+        return forward_hybrid(cfg, params, batch["tokens"], cache=cache, remat=remat)
+    if cfg.family == "encdec":
+        return forward_encdec(
+            cfg, params, batch["tokens"], batch.get("frames"), cache=cache, remat=remat
+        )
+    return forward_lm(
+        cfg, params, batch["tokens"], patches=batch.get("patches"), cache=cache,
+        remat=remat, fresh_cache=fresh_cache,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Losses and serving steps
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, remat=True):
+    """Next-token cross-entropy (predict t+1 from t).
+
+    The gold logit is extracted with a one-hot contraction rather than
+    take_along_axis: gathering along the vocab dim would force an all-gather
+    of the (B, S, V) logits when V is sharded over 'model'.
+    """
+    h, _ = forward(cfg, params, batch, remat=remat)
+    logits = _unembed(cfg, params, h[:, :-1, :]).astype(jnp.float32)
+    targets = batch["tokens"][:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, cfg.vocab_size, dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return jnp.mean(logz - gold)
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int, cache_dtype=jnp.bfloat16):
+    """Run the prompt, build a KV/state cache of capacity max_len."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len, dtype=cache_dtype)
+    if cfg.family == "encdec":
+        cache["enc_out"] = forward_encoder(cfg, params, batch["frames"])
+    h, cache = forward(cfg, params, batch, cache=cache, fresh_cache=True)
+    logits = _unembed(cfg, params, h[:, -1:, :])
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """One token per sequence: tokens (B, 1) -> (logits (B,1,V), cache)."""
+    h, cache = forward(cfg, params, {"tokens": tokens}, cache=cache)
+    logits = _unembed(cfg, params, h[:, -1:, :])
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int, dtype=jnp.bfloat16):
+    KV, hd, Ln = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    zero = jnp.asarray(0, jnp.int32)
+    if cfg.rwkv:
+        H, P, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+        return {
+            "wkv": jnp.zeros((Ln, B, H, P, P), jnp.float32),
+            "tshift": jnp.zeros((Ln, B, 1, d), dtype),
+            "cshift": jnp.zeros((Ln, B, 1, d), dtype),
+            "length": zero,
+        }
+    if cfg.family == "hybrid":
+        H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        C = cfg.d_inner_ssm + 2 * N
+        n_occ = cfg.n_layers // cfg.shared_attn_every
+        return {
+            "ssm": jnp.zeros((Ln, B, H, P, N), jnp.float32),
+            "conv": jnp.zeros((Ln, B, cfg.ssm_conv - 1, C), dtype),
+            "attn": [
+                {
+                    "k": jnp.zeros((B, max_len, KV, hd), dtype),
+                    "v": jnp.zeros((B, max_len, KV, hd), dtype),
+                }
+                for _ in range(n_occ)
+            ],
+            "length": zero,
+        }
+    return {
+        "k": jnp.zeros((Ln, B, max_len, KV, hd), dtype),
+        "v": jnp.zeros((Ln, B, max_len, KV, hd), dtype),
+        "length": zero,
+    }
+
+
+def abstract_cache(cfg: ModelConfig, B: int, max_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct cache for dry-run decode lowering (no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, B, max_len, dtype))

@@ -1,0 +1,7 @@
+from .scheduler import (  # noqa: F401
+    GreedyScheduler,
+    SMDPScheduler,
+    StaticScheduler,
+    QPolicyScheduler,
+)
+from .engine import ServingEngine, Request, EngineReport  # noqa: F401

@@ -1,0 +1,190 @@
+"""Batch-service engine: the paper's queue, run as a serving system.
+
+Two clocks:
+  * mode="profiled"  — service times drawn from the profiled ServiceModel
+    (G_b); this is the paper's M/G^[b]/1 queue driven by a scheduler, usable
+    for any architecture via core.profiles (TPU-roofline l(b), zeta(b)).
+  * mode="executor"  — service time is the measured wall-clock of a real
+    model call (`executor(requests) -> None`); arrivals are replayed in
+    wall-clock time.  examples/serve_llm.py wires a reduced model through
+    this path.
+
+Fault tolerance: the engine snapshot()/restore() covers the queue and clock
+(restart-safe); requests carry deadlines and the report counts SLO misses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core.service_models import ServiceModel
+
+from .scheduler import Scheduler
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float
+    deadline: Optional[float] = None  # absolute time SLO
+    payload: object = None  # e.g. prompt tokens for a real executor
+
+
+@dataclasses.dataclass
+class EngineReport:
+    latencies: np.ndarray
+    energy: float
+    span: float
+    n_served: int
+    n_slo_miss: int
+    mean_batch: float
+
+    @property
+    def power(self) -> float:
+        return self.energy / self.span if self.span > 0 else float("nan")
+
+    def percentile(self, q):
+        return np.percentile(self.latencies, q) if len(self.latencies) else np.nan
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        scheduler: Scheduler,
+        *,
+        lam: float,
+        b_max: int,
+        service: Optional[ServiceModel] = None,
+        energy_table: Optional[np.ndarray] = None,  # zeta(a), a = 0..b_max
+        executor: Optional[Callable[[List[Request]], None]] = None,
+        slo: Optional[float] = None,  # relative deadline per request
+        seed: int = 0,
+    ):
+        if (service is None) == (executor is None):
+            raise ValueError("exactly one of service= or executor= required")
+        self.scheduler = scheduler
+        self.lam = lam
+        self.b_max = b_max
+        self.service = service
+        self.energy_table = energy_table
+        self.executor = executor
+        self.slo = slo
+        self.rng = np.random.default_rng(seed)
+        self.queue: List[Request] = []
+        self.t = 0.0
+        self.next_rid = 0
+
+    # --- state for restart (fault tolerance) ---------------------------
+    def snapshot(self) -> dict:
+        return {
+            "t": self.t,
+            "queue": [dataclasses.asdict(r) for r in self.queue],
+            "next_rid": self.next_rid,
+            "rng": self.rng.bit_generator.state,
+            "sched": self.scheduler.snapshot(),
+        }
+
+    def restore(self, snap: dict) -> None:
+        self.t = snap["t"]
+        self.queue = [Request(**r) for r in snap["queue"]]
+        self.next_rid = snap["next_rid"]
+        self.rng.bit_generator.state = snap["rng"]
+        self.scheduler.restore(snap["sched"])
+
+    # --- simulated (profiled) clock -------------------------------------
+    def _arrive(self, t: float, payload=None) -> None:
+        dl = t + self.slo if self.slo else None
+        self.queue.append(Request(self.next_rid, t, dl, payload))
+        self.next_rid += 1
+
+    def run(self, n_epochs: int = 100_000) -> EngineReport:
+        """Profiled-clock batch service loop (decision-epoch faithful)."""
+        assert self.service is not None
+        lat: List[float] = []
+        energy = 0.0
+        batches = []
+        slo_miss = 0
+        t0 = self.t
+        for _ in range(n_epochs):
+            a = self.scheduler.decide(len(self.queue))
+            a = min(a, len(self.queue))
+            if a <= 0:
+                dt = self.rng.exponential(1.0 / self.lam)
+                self.t += dt
+                self._arrive(self.t)
+                continue
+            svc = float(self.service.sample(a, self.rng, 1)[0])
+            done = self.t + svc
+            batch, self.queue = self.queue[:a], self.queue[a:]
+            for r in batch:
+                lat.append(done - r.arrival)
+                if r.deadline is not None and done > r.deadline:
+                    slo_miss += 1
+            if self.energy_table is not None:
+                energy += float(self.energy_table[a])
+            batches.append(a)
+            # arrivals during service
+            n_arr = self.rng.poisson(self.lam * svc)
+            offs = np.sort(self.rng.uniform(0.0, svc, size=n_arr))
+            for o in offs:
+                self._arrive(self.t + o)
+            self.t = done
+        return EngineReport(
+            latencies=np.asarray(lat),
+            energy=energy,
+            span=self.t - t0,
+            n_served=len(lat),
+            n_slo_miss=slo_miss,
+            mean_batch=float(np.mean(batches)) if batches else 0.0,
+        )
+
+    # --- wall-clock executor mode ---------------------------------------
+    def run_executor(
+        self, requests: List[Request], *, poll: float = 1e-4
+    ) -> EngineReport:
+        """Replay `requests` (arrival times in seconds) against a real model.
+
+        The scheduler is consulted whenever the server is idle; service time
+        is the executor's measured wall time.
+        """
+        assert self.executor is not None
+        pending = sorted(requests, key=lambda r: r.arrival)
+        lat: List[float] = []
+        batches = []
+        slo_miss = 0
+        start = time.perf_counter()
+        i = 0
+        while i < len(pending) or self.queue:
+            now = time.perf_counter() - start
+            while i < len(pending) and pending[i].arrival <= now:
+                self.queue.append(pending[i])
+                i += 1
+            a = self.scheduler.decide(len(self.queue))
+            a = min(a, len(self.queue))
+            if a <= 0:
+                if i < len(pending):
+                    time.sleep(min(poll, max(0.0, pending[i].arrival - now)))
+                    continue
+                a = len(self.queue)  # drain tail
+                if a == 0:
+                    break
+            batch, self.queue = self.queue[:a], self.queue[a:]
+            self.executor(batch)
+            done = time.perf_counter() - start
+            for r in batch:
+                lat.append(done - r.arrival)
+                if r.deadline is not None and done > r.deadline:
+                    slo_miss += 1
+            batches.append(a)
+        span = time.perf_counter() - start
+        return EngineReport(
+            latencies=np.asarray(lat),
+            energy=float("nan"),
+            span=span,
+            n_served=len(lat),
+            n_slo_miss=slo_miss,
+            mean_batch=float(np.mean(batches)) if batches else 0.0,
+        )

@@ -1,0 +1,76 @@
+"""Slot-based KV/state cache pool for continuous serving.
+
+The ServingEngine forms discrete batches (the paper's service model); this
+pool manages the device-resident cache buffers those batches decode into:
+fixed-capacity slots, free-list allocation, O(1) claim/release, utilization
+accounting for admission control.  The allocation strategy mirrors paged
+attention at slot granularity (a slot = one request's max_len cache) — page
+granularity is a noted extension, not needed for fixed-budget decode
+segments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class SlotStats:
+    capacity: int
+    in_use: int
+
+    @property
+    def utilization(self) -> float:
+        return self.in_use / self.capacity if self.capacity else 0.0
+
+
+class KVCachePool:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        n_slots: int,
+        max_len: int,
+        dtype=jnp.bfloat16,
+    ):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        # one batched cache of capacity n_slots; slots are batch rows
+        self.cache = M.init_cache(cfg, n_slots, max_len, dtype=dtype)
+        self._free: List[int] = list(range(n_slots))
+        self._lengths = [0] * n_slots
+
+    def claim(self, n: int) -> Optional[List[int]]:
+        """Claim n slots (a decode batch); None if the pool is exhausted."""
+        if len(self._free) < n:
+            return None
+        slots = [self._free.pop() for _ in range(n)]
+        for s in slots:
+            self._lengths[s] = 0
+        return slots
+
+    def release(self, slots: List[int]) -> None:
+        for s in slots:
+            if s in self._free:
+                raise ValueError(f"double release of slot {s}")
+            self._lengths[s] = 0
+            self._free.append(s)
+
+    def lengths(self) -> jnp.ndarray:
+        return jnp.asarray(self._lengths, jnp.int32)
+
+    def stats(self) -> SlotStats:
+        return SlotStats(capacity=self.n_slots,
+                         in_use=self.n_slots - len(self._free))
+
+    def bytes_per_slot(self) -> int:
+        leaves = jax.tree.leaves(
+            jax.eval_shape(lambda: M.init_cache(self.cfg, 1, self.max_len))
+        )
+        return int(sum(l.size * l.dtype.itemsize for l in leaves))

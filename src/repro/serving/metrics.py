@@ -1,0 +1,105 @@
+"""Serving metrics: streaming latency quantiles + power integration.
+
+P² streaming quantile estimation (Jain & Chlamtac) so that a 1000-node
+fleet can track P50/P95/P99 without retaining per-request samples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+
+class P2Quantile:
+    """P² single-quantile estimator; O(1) memory, no samples stored."""
+
+    def __init__(self, q: float):
+        self.q = q
+        self._init: List[float] = []
+        self.n = [0, 1, 2, 3, 4]
+        self.ns = [0.0, 0.0, 0.0, 0.0, 0.0]
+        self.heights: List[float] = []
+
+    def update(self, x: float) -> None:
+        if len(self._init) < 5:
+            self._init.append(x)
+            if len(self._init) == 5:
+                self._init.sort()
+                self.heights = list(self._init)
+                self.ns = [0, 2 * self.q, 4 * self.q, 2 + 2 * self.q, 4]
+            return
+        h = self.heights
+        if x < h[0]:
+            h[0] = x
+            k = 0
+        elif x >= h[4]:
+            h[4] = x
+            k = 3
+        else:
+            k = next(i for i in range(4) if h[i] <= x < h[i + 1])
+        for i in range(k + 1, 5):
+            self.n[i] += 1
+        for i in range(5):
+            self.ns[i] += [0, self.q / 2, self.q, (1 + self.q) / 2, 1][i]
+        for i in (1, 2, 3):
+            d = self.ns[i] - self.n[i]
+            if (d >= 1 and self.n[i + 1] - self.n[i] > 1) or (
+                d <= -1 and self.n[i - 1] - self.n[i] < -1
+            ):
+                s = int(np.sign(d))
+                # parabolic update, clamped to neighbours
+                num = h[i] + s / (self.n[i + 1] - self.n[i - 1]) * (
+                    (self.n[i] - self.n[i - 1] + s) * (h[i + 1] - h[i])
+                    / (self.n[i + 1] - self.n[i])
+                    + (self.n[i + 1] - self.n[i] - s) * (h[i] - h[i - 1])
+                    / (self.n[i] - self.n[i - 1])
+                )
+                if h[i - 1] < num < h[i + 1]:
+                    h[i] = num
+                else:
+                    h[i] = h[i] + s * (h[i + s] - h[i]) / (self.n[i + s] - self.n[i])
+                self.n[i] += s
+
+    @property
+    def value(self) -> float:
+        if len(self._init) < 5:
+            return float(np.percentile(self._init, self.q * 100)) if self._init else float("nan")
+        return self.heights[2]
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    """Aggregates the objective terms the SMDP policy optimizes, online."""
+
+    quantiles: Dict[float, P2Quantile] = dataclasses.field(
+        default_factory=lambda: {q: P2Quantile(q) for q in (0.5, 0.95, 0.99)}
+    )
+    n_served: int = 0
+    latency_sum: float = 0.0
+    energy: float = 0.0
+    span: float = 0.0
+    batch_sum: int = 0
+    n_batches: int = 0
+
+    def observe_batch(self, latencies, zeta: float, t_now: float) -> None:
+        for lat in latencies:
+            self.latency_sum += lat
+            self.n_served += 1
+            for est in self.quantiles.values():
+                est.update(lat)
+        self.energy += zeta
+        self.span = t_now
+        self.batch_sum += len(latencies)
+        self.n_batches += 1
+
+    def report(self) -> Dict[str, float]:
+        return {
+            "W_mean": self.latency_sum / max(self.n_served, 1),
+            "P50": self.quantiles[0.5].value,
+            "P95": self.quantiles[0.95].value,
+            "P99": self.quantiles[0.99].value,
+            "power": self.energy / self.span if self.span else float("nan"),
+            "mean_batch": self.batch_sum / max(self.n_batches, 1),
+            "n_served": float(self.n_served),
+        }

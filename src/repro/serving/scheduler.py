@@ -1,0 +1,83 @@
+"""Batch schedulers: the SMDP policy (the paper) + benchmark policies.
+
+A scheduler answers one question at each decision epoch (batch completion,
+or arrival-at-idle): given s queued requests, what batch size now?
+`0` means wait for more arrivals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.solve import SolveResult
+
+
+class Scheduler:
+    name = "base"
+
+    def decide(self, queue_len: int) -> int:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def snapshot(self) -> dict:
+        return {}
+
+    def restore(self, state: dict) -> None:
+        pass
+
+
+class SMDPScheduler(Scheduler):
+    """Table-driven scheduler from a solved SMDP (paper eq. 30)."""
+
+    name = "smdp"
+
+    def __init__(self, solution: SolveResult):
+        self.table = solution.action_table()
+        self.s_max = len(self.table) - 1
+
+    @classmethod
+    def from_table(cls, table: np.ndarray) -> "SMDPScheduler":
+        obj = cls.__new__(cls)
+        obj.table = np.asarray(table, dtype=np.int64)
+        obj.s_max = len(obj.table) - 1
+        return obj
+
+    def decide(self, queue_len: int) -> int:
+        return int(self.table[min(queue_len, self.s_max)])
+
+
+class StaticScheduler(Scheduler):
+    """Fixed batch size b; waits until b requests are queued (Def. 1)."""
+
+    def __init__(self, b: int):
+        self.b = b
+        self.name = f"static_{b}"
+
+    def decide(self, queue_len: int) -> int:
+        return self.b if queue_len >= self.b else 0
+
+
+class GreedyScheduler(Scheduler):
+    """Largest feasible batch now (Def. 2)."""
+
+    name = "greedy"
+
+    def __init__(self, b_min: int = 1, b_max: int = 32):
+        self.b_min, self.b_max = b_min, b_max
+
+    def decide(self, queue_len: int) -> int:
+        if queue_len < self.b_min:
+            return 0
+        return min(queue_len, self.b_max)
+
+
+class QPolicyScheduler(Scheduler):
+    """Control-limit policy (Def. 3): serve min(s, B_max) iff s >= Q."""
+
+    def __init__(self, q: int, b_max: int = 32):
+        self.q, self.b_max = q, b_max
+        self.name = f"qpolicy_{q}"
+
+    def decide(self, queue_len: int) -> int:
+        return min(queue_len, self.b_max) if queue_len >= self.q else 0

@@ -1,0 +1,154 @@
+"""AdamW in pure JAX with configurable moment dtype.
+
+For >=100B-parameter models, fp32 moments exceed v5e HBM at our sharding;
+`moment_dtype=bfloat16` halves optimizer memory (a standard large-model
+trick; quantization error is absorbed by Adam's normalization).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32  # jnp.bfloat16 for huge models
+    grad_clip: float = 1.0
+
+
+def adamw_init(params: PyTree, cfg: AdamWConfig) -> PyTree:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018).
+
+    Optimizer state is O(rows + cols) per matrix instead of O(rows * cols):
+    the only way a 314B-parameter model trains on 256 v5e chips (16 GB HBM)
+    together with its gradients and activations.
+    """
+
+    lr: float = 1e-3
+    decay: float = 0.8  # beta2 exponent schedule base (hat-beta2_t)
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+
+def adafactor_init(params: PyTree, cfg: AdafactorConfig) -> PyTree:
+    def factors(p):
+        if p.ndim < 2:
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {
+            "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+            "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+        }
+
+    return {
+        "f": jax.tree.map(factors, params, is_leaf=lambda x: hasattr(x, "ndim")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(
+    grads: PyTree, opt_state: PyTree, params: PyTree, cfg: AdafactorConfig
+):
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay)
+
+    def upd(g, f, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps
+        if p.ndim < 2:
+            v = beta2 * f["v"] + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(v + cfg.eps)
+            newf = {"v": v}
+        else:
+            vr = beta2 * f["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * f["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            u = (
+                g
+                * jax.lax.rsqrt(vr / jnp.maximum(denom, cfg.eps))[..., None]
+                * jax.lax.rsqrt(vc)[..., None, :]
+            )
+            newf = {"vr": vr, "vc": vc}
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+        p_new = p.astype(jnp.float32) - cfg.lr * (
+            u + cfg.weight_decay * p.astype(jnp.float32)
+        )
+        return p_new.astype(p.dtype), newf
+
+    # grads' treedef is used; opt_state["f"] is flattened *up to* it, so each
+    # factor dict arrives whole at upd().
+    out = jax.tree.map(upd, grads, opt_state["f"], params)
+    is_pair = lambda t_: isinstance(t_, tuple)
+    new_params = jax.tree.map(lambda t_: t_[0], out, is_leaf=is_pair)
+    new_f = jax.tree.map(lambda t_: t_[1], out, is_leaf=is_pair)
+    return new_params, {"f": new_f, "step": step}
+
+
+def adamw_update(
+    grads: PyTree, opt_state: PyTree, params: PyTree, cfg: AdamWConfig
+):
+    """Returns (new_params, new_opt_state, grad_norm)."""
+    step = opt_state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m_new / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v_new / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        p_new = p.astype(jnp.float32) - cfg.lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+
+def opt_init(params: PyTree, cfg) -> PyTree:
+    if isinstance(cfg, AdafactorConfig):
+        return adafactor_init(params, cfg)
+    return adamw_init(params, cfg)
+
+
+def opt_update(grads: PyTree, opt_state: PyTree, params: PyTree, cfg):
+    """Dispatch on optimizer config type; returns (params, opt_state, gnorm)."""
+    if isinstance(cfg, AdafactorConfig):
+        p, s = adafactor_update(grads, opt_state, params, cfg)
+        return p, s, _global_norm(grads)
+    return adamw_update(grads, opt_state, params, cfg)

@@ -1,0 +1,61 @@
+"""jit-able train step: loss + grads + AdamW (+optional grad compression)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+from .optimizer import AdamWConfig, AdafactorConfig, opt_update
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg,  # AdamWConfig | AdafactorConfig
+    *,
+    remat: bool = True,
+    n_micro: int = 1,
+    accum_dtype=jnp.float32,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    n_micro > 1 enables microbatched gradient accumulation (f32 accumulator,
+    sharded like the params): per-microbatch live activations shrink by
+    n_micro, which is what fits 4k-seq training of 32B-314B models in v5e
+    HBM on the fixed 16x16 mesh.
+    """
+
+    def loss_fn(params, batch):
+        return M.lm_loss(cfg, params, batch, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                assert b % n_micro == 0, (b, n_micro)
+                return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+            micro_batches = jax.tree.map(reshape, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+
+            def micro(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + (gi / n_micro).astype(accum_dtype), acc, g
+                )
+                return acc, l
+
+            grads, losses = jax.lax.scan(micro, g0, micro_batches)
+            loss = jnp.mean(losses)
+        params, opt_state, gnorm = opt_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see ONE device; the 512-device flag is set
+# only inside launch/dryrun.py (subprocess-tested in test_dryrun.py).
+os.environ.setdefault("XLA_FLAGS", "")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)  # core solver fidelity (see core/__init__)

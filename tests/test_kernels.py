@@ -1,0 +1,110 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.bellman import bellman_banded
+from repro.kernels.flash_attention import flash_attention as flash_pallas
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+class TestBellmanKernel:
+    @pytest.mark.parametrize("T,A,K", [(64, 9, 40), (200, 33, 170), (128, 33, 128), (300, 17, 513)])
+    def test_matches_ref(self, T, A, K):
+        ks = jax.random.split(jax.random.fold_in(KEY, T * A), 3)
+        h_main = jax.random.normal(ks[0], (T + K,)) * 10
+        pmfs = jax.nn.softmax(jax.random.normal(ks[1], (A, K)), axis=-1)
+        tails = jax.random.uniform(ks[2], (T, A))
+        got = bellman_banded(h_main, pmfs, tails, 2.5)
+        want = ref.bellman_banded_ref(h_main, pmfs, tails, 2.5)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-5)
+
+    def test_rvi_with_pallas_backup_matches_banded(self):
+        from repro.core import (GOOGLENET_P4_ENERGY, GOOGLENET_P4_LATENCY,
+                                ServiceModel, SMDPSpec, build_smdp,
+                                relative_value_iteration)
+        svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+        lam = 0.3 * 32 / float(svc.mean(32))
+        spec = SMDPSpec(lam=lam, service=svc, energy=GOOGLENET_P4_ENERGY,
+                        b_max=32, s_max=48, w2=1.0)
+        mdp = build_smdp(spec)
+        rb = relative_value_iteration(mdp, backup="banded")
+        rp = relative_value_iteration(mdp, backup="pallas", max_iter=2000)
+        assert np.array_equal(rb.policy, rp.policy)
+
+
+class TestFlashKernel:
+    @pytest.mark.parametrize("B,Sq,Sk,H,KV,D,causal,cap", [
+        (2, 64, 64, 4, 2, 16, True, None),
+        (1, 33, 70, 4, 4, 8, False, None),
+        (2, 128, 128, 8, 2, 32, True, 50.0),
+        (1, 17, 128, 2, 1, 64, True, None),
+    ])
+    def test_matches_ref(self, B, Sq, Sk, H, KV, D, causal, cap):
+        ks = jax.random.split(jax.random.fold_in(KEY, Sq * Sk + H), 3)
+        q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Sk, KV, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Sk, KV, D), jnp.float32)
+        got = flash_pallas(q, k, v, causal=causal, softcap=cap, block_q=32, block_k=32)
+        want = ref.attention_ref(q, k, v, causal=causal, softcap=cap)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, 64, 4, 32), dtype)
+        k = jax.random.normal(ks[1], (2, 64, 2, 32), dtype)
+        v = jax.random.normal(ks[2], (2, 64, 2, 32), dtype)
+        got = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+        want = ref.attention_ref(q, k, v)
+        assert got.dtype == dtype
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), want.astype(jnp.float32), **tol(dtype)
+        )
+
+    def test_matches_model_blockwise_attention(self):
+        """Kernel agrees with the jnp blockwise attention used by the models."""
+        from repro.models import layers as L
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, 96, 8, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (2, 96, 4, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (2, 96, 4, 32), jnp.float32)
+        got = flash_pallas(q, k, v, causal=True, block_q=32, block_k=32)
+        want = L.flash_attention(q, k, v, causal=True, chunk_kv=32, chunk_q=32)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+class TestDecodeKernel:
+    @pytest.mark.parametrize("B,S,H,KV,D", [
+        (2, 300, 8, 2, 16), (3, 128, 4, 4, 32), (1, 77, 8, 1, 64), (4, 64, 16, 4, 8),
+    ])
+    def test_matches_ref(self, B, S, H, KV, D):
+        ks = jax.random.split(jax.random.fold_in(KEY, B * S), 4)
+        q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+        kc = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+        vc = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+        lens = jax.random.randint(ks[3], (B,), 1, S + 1)
+        got = ops.decode_attention(q, kc, vc, lens, block_k=64)
+        want = ref.decode_attention_ref(q, kc, vc, lens)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.normal(ks[0], (2, 8, 32), dtype)
+        kc = jax.random.normal(ks[1], (2, 160, 2, 32), dtype)
+        vc = jax.random.normal(ks[2], (2, 160, 2, 32), dtype)
+        lens = jnp.asarray([100, 160], jnp.int32)
+        got = ops.decode_attention(q, kc, vc, lens, block_k=64)
+        want = ref.decode_attention_ref(q, kc, vc, lens)
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), want.astype(jnp.float32), **tol(dtype)
+        )

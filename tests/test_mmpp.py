@@ -1,0 +1,73 @@
+"""Beyond-paper: phase-aware SMDP scheduling under bursty (MMPP) traffic.
+
+The paper's Sec.-VIII proposal made executable: under MMPP(2) arrivals,
+per-phase SMDP policies selected by an online rate estimator should beat a
+single SMDP policy solved for the mean rate.
+"""
+import numpy as np
+
+from repro.core import (
+    GOOGLENET_P4_ENERGY,
+    GOOGLENET_P4_LATENCY,
+    ServiceModel,
+    SMDPSpec,
+    solve,
+)
+from repro.serving.mmpp import (
+    MMPP2,
+    PhaseAwareScheduler,
+    run_mmpp,
+    solve_phase_policies,
+)
+from repro.serving.scheduler import SMDPScheduler
+
+SVC = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+BMAX = 32
+EN = np.array([0.0] + [float(GOOGLENET_P4_ENERGY(b)) for b in range(1, BMAX + 1)])
+
+
+def base_spec(lam):
+    return SMDPSpec(lam=lam, service=SVC, energy=GOOGLENET_P4_ENERGY,
+                    b_min=1, b_max=BMAX, w1=1.0, w2=1.0, s_max=128)
+
+
+class TestMMPP:
+    def test_mean_rate(self):
+        m = MMPP2(lam1=0.5, lam2=2.5, dwell1=300.0, dwell2=100.0)
+        arr, _ = m.sample_arrivals(200_000.0, np.random.default_rng(0))
+        np.testing.assert_allclose(len(arr) / 200_000.0, m.mean_rate, rtol=0.05)
+
+    def test_phase_aware_beats_mean_rate_policy(self):
+        """Latency-focused objective (w2=0): phase policies differ in their
+        control limits, so phase-awareness should gain >5% (measured ~15%;
+        with large w2 both phases converge to max-batching and the gain
+        vanishes — see benchmarks/mmpp_bursty.py)."""
+        import dataclasses
+
+        mu_max = BMAX / float(SVC.mean(BMAX))
+        m = MMPP2(lam1=0.05 * mu_max, lam2=0.90 * mu_max,
+                  dwell1=1000.0, dwell2=1000.0)
+        rates = {0: m.lam1, 1: m.lam2}
+        spec0 = dataclasses.replace(base_spec(m.mean_rate), w2=0.0)
+        tables = solve_phase_policies(spec0, rates)
+        phase_sched = PhaseAwareScheduler(tables, rates, ewma=0.1)
+        mean_sched = SMDPScheduler(solve(spec0))
+
+        horizon = 60_000.0
+        lat_p, _, _ = run_mmpp(phase_sched, m, SVC, EN, BMAX, horizon, seed=1)
+        lat_m, _, _ = run_mmpp(mean_sched, m, SVC, EN, BMAX, horizon, seed=1)
+        assert len(lat_p) > 10_000
+        assert lat_p.mean() < lat_m.mean() * 0.97, (lat_p.mean(), lat_m.mean())
+
+    def test_estimator_tracks_phase(self):
+        rates = {0: 0.5, 1: 5.0}
+        sched = PhaseAwareScheduler({0: np.zeros(4), 1: np.zeros(4)}, rates)
+        t = 0.0
+        for _ in range(50):  # fast arrivals -> phase 1
+            t += 0.2
+            sched.observe_arrival(t)
+        assert sched.current_phase() == 1
+        for _ in range(50):  # slow arrivals -> phase 0
+            t += 2.0
+            sched.observe_arrival(t)
+        assert sched.current_phase() == 0

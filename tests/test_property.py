@@ -1,0 +1,142 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AffineProfile,
+    GOOGLENET_P4_ENERGY,
+    ServiceModel,
+    SMDPSpec,
+    build_smdp,
+    evaluate_policy,
+    greedy_policy,
+    relative_value_iteration,
+)
+from repro.distributed.compression import (
+    compress_with_error_feedback,
+    init_error_feedback,
+)
+
+FAMILIES = ("det", "erlang", "expo", "hyperexpo")
+
+
+@st.composite
+def smdp_specs(draw):
+    rho = draw(st.floats(0.05, 0.95))
+    b_max = draw(st.sampled_from([4, 8, 16]))
+    b_min = draw(st.integers(1, max(1, b_max // 4)))
+    family = draw(st.sampled_from(FAMILIES))
+    slope = draw(st.floats(0.0, 1.0))
+    intercept = draw(st.floats(0.1, 5.0))
+    w2 = draw(st.floats(0.0, 10.0))
+    svc = ServiceModel(latency=AffineProfile(slope, intercept), family=family)
+    lam = rho * b_max / float(svc.mean(b_max))
+    return SMDPSpec(
+        lam=lam, service=svc, energy=GOOGLENET_P4_ENERGY,
+        b_min=b_min, b_max=b_max, w1=1.0, w2=w2,
+        s_max=draw(st.sampled_from([24, 40, 64])), c_o=100.0,
+    )
+
+
+class TestSMDPInvariants:
+    @settings(max_examples=25, deadline=None)
+    @given(smdp_specs())
+    def test_transition_stochasticity(self, spec):
+        mdp = build_smdp(spec)
+        rows = mdp.m_hat[mdp.feasible]
+        assert np.all(rows >= -1e-12)
+        np.testing.assert_allclose(rows.sum(-1), 1.0, atol=1e-8)
+        rows_t = mdp.m_tilde[mdp.feasible]
+        np.testing.assert_allclose(rows_t.sum(-1), 1.0, atol=1e-8)
+        assert np.all(rows_t >= -1e-10)
+
+    @settings(max_examples=15, deadline=None)
+    @given(smdp_specs())
+    def test_rvi_policy_feasible_and_beats_greedy(self, spec):
+        mdp = build_smdp(spec)
+        res = relative_value_iteration(mdp, eps=1e-2)
+        s_val = np.minimum(np.arange(mdp.n_states), spec.s_max)
+        pol = res.policy
+        assert np.all((pol == 0) | ((pol >= spec.b_min) & (pol <= np.minimum(s_val, spec.b_max))))
+        g_smdp = evaluate_policy(mdp, pol).g
+        g_greedy = evaluate_policy(
+            mdp, greedy_policy(spec.s_max, spec.b_min, spec.b_max)
+        ).g
+        assert g_smdp <= g_greedy + 1e-6
+
+    @settings(max_examples=15, deadline=None)
+    @given(smdp_specs(), st.integers(0, 10_000))
+    def test_backup_equivalence_on_random_h(self, spec, seed):
+        """banded backup == dense backup for arbitrary value vectors."""
+        from repro.core.rvi import banded_backup, dense_backup, make_banded_inputs
+
+        mdp = build_smdp(spec)
+        h = jnp.asarray(np.random.default_rng(seed).normal(size=mdp.n_states) * 10)
+        qd = dense_backup(jnp.asarray(mdp.c_tilde), jnp.asarray(mdp.m_tilde), h)
+        pm, tl, sc = make_banded_inputs(mdp)
+        qb = banded_backup(jnp.asarray(mdp.c_tilde), pm, tl, sc, spec.s_max, h)
+        feas = mdp.feasible
+        np.testing.assert_allclose(
+            np.asarray(qd)[feas], np.asarray(qb)[feas], rtol=1e-8, atol=1e-8
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(smdp_specs())
+    def test_w2_monotonicity(self, spec):
+        """Raising the energy weight never increases optimal power draw."""
+        lo = dataclasses.replace(spec, w2=0.0)
+        hi = dataclasses.replace(spec, w2=spec.w2 + 5.0)
+        p_lo = evaluate_policy(
+            build_smdp(lo), relative_value_iteration(build_smdp(lo)).policy
+        ).p_bar
+        p_hi = evaluate_policy(
+            build_smdp(hi), relative_value_iteration(build_smdp(hi)).policy
+        ).p_bar
+        assert p_hi <= p_lo + 1e-6
+
+
+class TestCompression:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.floats(1e-3, 1e3))
+    def test_error_feedback_residual_bound(self, seed, scale):
+        rng = np.random.default_rng(seed)
+        g = {"w": jnp.asarray(rng.normal(size=(32, 16)) * scale)}
+        e = init_error_feedback(g)
+        deq, err = compress_with_error_feedback(g, e)
+        # quantization residual bounded by half an int8 step of the max-abs
+        step = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+        assert float(jnp.max(jnp.abs(err["w"]))) <= step * 0.51 + 1e-9
+        # deq + err reconstructs the corrected gradient exactly
+        np.testing.assert_allclose(
+            np.asarray(deq["w"] + err["w"]), np.asarray(g["w"]), rtol=1e-6, atol=1e-8
+        )
+
+    def test_error_feedback_converges_in_mean(self):
+        """Across steps, accumulated quantized sum tracks the true sum."""
+        rng = np.random.default_rng(0)
+        g_true = jnp.asarray(rng.normal(size=(64,)))
+        e = init_error_feedback({"g": g_true})
+        acc = np.zeros(64)
+        for _ in range(50):
+            deq, e = compress_with_error_feedback({"g": g_true}, e)
+            acc += np.asarray(deq["g"])
+        np.testing.assert_allclose(acc / 50, np.asarray(g_true), atol=1e-2)
+
+
+class TestDataPipeline:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1000), st.integers(0, 2**31 - 1))
+    def test_determinism(self, step, seed):
+        from repro.training.data import DataConfig, batch_at_step
+
+        cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=2, seed=seed)
+        a = batch_at_step(cfg, step)["tokens"]
+        b = batch_at_step(cfg, step)["tokens"]
+        assert (np.asarray(a) == np.asarray(b)).all()
+        c = batch_at_step(cfg, step + 1)["tokens"]
+        assert not (np.asarray(a) == np.asarray(c)).all()
+        assert int(a.max()) < 128 and int(a.min()) >= 0

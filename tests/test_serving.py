@@ -1,0 +1,166 @@
+"""Serving engine + schedulers: agreement with analytics, restart safety."""
+import numpy as np
+
+from repro.core import (
+    GOOGLENET_P4_ENERGY,
+    GOOGLENET_P4_LATENCY,
+    ServiceModel,
+    SMDPSpec,
+    build_smdp,
+    evaluate_policy,
+    solve,
+    static_policy,
+)
+from repro.core.simulate import simulate
+from repro.serving import (
+    GreedyScheduler,
+    QPolicyScheduler,
+    Request,
+    ServingEngine,
+    SMDPScheduler,
+    StaticScheduler,
+)
+
+SVC = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+BMAX = 32
+LAM = 0.7 * BMAX / float(SVC.mean(BMAX))
+ENERGY = np.array([0.0] + [float(GOOGLENET_P4_ENERGY(b)) for b in range(1, BMAX + 1)])
+
+
+def spec(w2=1.0, s_max=128):
+    return SMDPSpec(
+        lam=LAM, service=SVC, energy=GOOGLENET_P4_ENERGY,
+        b_min=1, b_max=BMAX, w1=1.0, w2=w2, s_max=s_max, c_o=100.0,
+    )
+
+
+class TestSchedulers:
+    def test_decisions(self):
+        assert StaticScheduler(8).decide(7) == 0
+        assert StaticScheduler(8).decide(9) == 8
+        assert GreedyScheduler(1, 32).decide(0) == 0
+        assert GreedyScheduler(1, 32).decide(40) == 32
+        assert QPolicyScheduler(5, 32).decide(4) == 0
+        assert QPolicyScheduler(5, 32).decide(6) == 6
+
+    def test_smdp_scheduler_extends_table(self):
+        sol = solve(spec())
+        sch = SMDPScheduler(sol)
+        assert sch.decide(10**6) == sch.decide(sch.s_max)
+
+
+class TestEngineVsAnalytics:
+    def test_engine_matches_exact_evaluation(self):
+        """Profiled-clock engine reproduces the eq.-(21) analytics."""
+        sol = solve(spec(w2=1.6))
+        mdp = sol.mdp
+        ev = sol.eval
+        eng = ServingEngine(
+            SMDPScheduler(sol), lam=LAM, b_max=BMAX, service=SVC,
+            energy_table=ENERGY, seed=0,
+        )
+        rep = eng.run(60_000)
+        np.testing.assert_allclose(rep.latencies.mean(), ev.w_bar, rtol=0.02)
+        np.testing.assert_allclose(rep.power, ev.p_bar, rtol=0.02)
+
+    def test_engine_matches_lax_scan_simulator(self):
+        """Two independent implementations of the queue agree."""
+        pol = static_policy(8, 128)
+        mdp = build_smdp(spec())
+        ev = evaluate_policy(mdp, pol)
+        sim = simulate(pol[:-1], SVC, ENERGY, LAM, BMAX, n_epochs=60_000, seed=1)
+        eng = ServingEngine(
+            StaticScheduler(8), lam=LAM, b_max=BMAX, service=SVC,
+            energy_table=ENERGY, seed=2,
+        )
+        rep = eng.run(60_000)
+        np.testing.assert_allclose(sim.w_bar, ev.w_bar, rtol=0.02)
+        np.testing.assert_allclose(rep.latencies.mean(), ev.w_bar, rtol=0.02)
+        np.testing.assert_allclose(rep.power, sim.p_bar, rtol=0.02)
+
+    def test_littles_law_in_simulator(self):
+        pol = static_policy(8, 128)
+        sim = simulate(pol[:-1], SVC, ENERGY, LAM, BMAX, n_epochs=60_000, seed=3)
+        np.testing.assert_allclose(sim.l_bar / LAM, sim.w_bar, rtol=0.02)
+
+
+class TestEngineRestart:
+    def test_snapshot_restore_continues_identically(self):
+        sol = solve(spec())
+        e1 = ServingEngine(SMDPScheduler(sol), lam=LAM, b_max=BMAX,
+                           service=SVC, energy_table=ENERGY, seed=5)
+        e1.run(1000)
+        snap = e1.snapshot()
+        r_cont = e1.run(1000)
+        e2 = ServingEngine(SMDPScheduler(sol), lam=LAM, b_max=BMAX,
+                           service=SVC, energy_table=ENERGY, seed=99)
+        e2.restore(snap)
+        r_rest = e2.run(1000)
+        np.testing.assert_allclose(r_cont.latencies, r_rest.latencies)
+        np.testing.assert_allclose(r_cont.energy, r_rest.energy)
+
+    def test_executor_mode_runs(self):
+        """Wall-clock mode with a trivial executor serves all requests."""
+        calls = []
+        eng = ServingEngine(
+            GreedyScheduler(1, 8), lam=1000.0, b_max=8,
+            executor=lambda batch: calls.append(len(batch)),
+        )
+        reqs = [Request(i, arrival=i * 1e-4) for i in range(50)]
+        rep = eng.run_executor(reqs)
+        assert rep.n_served == 50
+        assert sum(calls) == 50
+        assert max(calls) <= 8
+
+
+class TestKVCachePool:
+    def test_claim_release_cycle(self):
+        from repro.configs import ARCHS
+        from repro.serving.kv_cache import KVCachePool
+
+        pool = KVCachePool(ARCHS["qwen2.5-32b"].reduced(), n_slots=8, max_len=32)
+        a = pool.claim(3)
+        b = pool.claim(5)
+        assert pool.claim(1) is None  # exhausted
+        assert pool.stats().utilization == 1.0
+        pool.release(a)
+        assert pool.stats().in_use == 5
+        c = pool.claim(2)
+        assert len(set(c) & set(b)) == 0
+        import pytest as _pytest
+        with _pytest.raises(ValueError):
+            pool.release(b + b[:1])  # double release detected
+
+    def test_bytes_per_slot_positive(self):
+        from repro.configs import ARCHS
+        from repro.serving.kv_cache import KVCachePool
+
+        pool = KVCachePool(ARCHS["rwkv6-3b"].reduced(), n_slots=2, max_len=16)
+        assert pool.bytes_per_slot() > 0
+
+
+class TestStreamingMetrics:
+    def test_p2_quantile_accuracy(self):
+        from repro.serving.metrics import P2Quantile
+
+        rng = np.random.default_rng(0)
+        data = rng.exponential(5.0, 20_000)
+        est = P2Quantile(0.95)
+        for x in data:
+            est.update(float(x))
+        true = np.percentile(data, 95)
+        assert abs(est.value - true) / true < 0.05
+
+    def test_serving_metrics_report(self):
+        from repro.serving.metrics import ServingMetrics
+
+        m = ServingMetrics()
+        rng = np.random.default_rng(1)
+        t = 0.0
+        for _ in range(300):
+            t += 1.0
+            m.observe_batch(rng.exponential(3.0, 8), zeta=50.0, t_now=t)
+        rep = m.report()
+        assert abs(rep["W_mean"] - 3.0) < 0.3
+        assert abs(rep["power"] - 50.0) < 1e-6
+        assert rep["mean_batch"] == 8.0

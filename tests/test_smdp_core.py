@@ -1,0 +1,181 @@
+"""Unit tests for the SMDP core: construction, solving, paper anchors."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GOOGLENET_P4_ENERGY,
+    GOOGLENET_P4_LATENCY,
+    ConstantProfile,
+    ServiceModel,
+    SMDPSpec,
+    build_smdp,
+    evaluate_policy,
+    greedy_policy,
+    optimal_q_closed_form,
+    q_policy,
+    relative_value_iteration,
+    solve,
+    static_policy,
+)
+from repro.core.policies import is_control_limit
+
+
+def paper_spec(rho=0.7, w2=1.0, s_max=128, b_max=32, c_o=100.0, family="det"):
+    svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family=family)
+    lam = rho * b_max / float(svc.mean(b_max))
+    return SMDPSpec(
+        lam=lam, service=svc, energy=GOOGLENET_P4_ENERGY,
+        b_min=1, b_max=b_max, w1=1.0, w2=w2, s_max=s_max, c_o=c_o,
+    )
+
+
+class TestBuild:
+    def test_transition_rows_sum_to_one(self):
+        mdp = build_smdp(paper_spec())
+        rows = mdp.m_hat[mdp.feasible]
+        np.testing.assert_allclose(rows.sum(-1), 1.0, atol=1e-9)
+        rows_t = mdp.m_tilde[mdp.feasible]
+        np.testing.assert_allclose(rows_t.sum(-1), 1.0, atol=1e-9)
+
+    def test_transitions_nonnegative(self):
+        mdp = build_smdp(paper_spec())
+        assert (mdp.m_hat >= 0).all()
+        assert (mdp.m_tilde >= -1e-12).all()
+
+    def test_feasibility_mask(self):
+        spec = paper_spec()
+        mdp = build_smdp(spec)
+        # a > s is infeasible; wait always feasible
+        assert mdp.feasible[:, 0].all()
+        for s in range(spec.s_max + 1):
+            for a in range(1, spec.b_max + 1):
+                assert mdp.feasible[s, a] == (a <= s)
+        assert mdp.feasible[-1, :].all()  # S_o counts as s_max >= b_max
+
+    def test_eta_within_puterman_bound(self):
+        mdp = build_smdp(paper_spec())
+        diag = mdp.m_hat[
+            np.arange(mdp.n_states)[:, None],
+            np.arange(mdp.n_actions)[None, :],
+            np.arange(mdp.n_states)[:, None],
+        ]
+        ok = (diag < 1.0) & mdp.feasible
+        bound = (mdp.y / np.maximum(1.0 - diag, 1e-300))[ok].min()
+        assert 0 < mdp.eta < bound
+
+    def test_stability_guard(self):
+        svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+        lam_unstable = 1.1 * 32 / float(svc.mean(32))
+        with pytest.raises(ValueError):
+            SMDPSpec(lam=lam_unstable, service=svc, energy=GOOGLENET_P4_ENERGY)
+
+    def test_arrival_pmf_mean_matches_lambda_l(self):
+        spec = paper_spec()
+        for fam in ("det", "erlang", "expo", "hyperexpo"):
+            svc = dataclasses.replace(spec.service, family=fam)
+            for b in (1, 8, 32):
+                pmf = svc.arrival_pmf(b, spec.lam, 4000)
+                mean = (np.arange(4001) * pmf).sum()
+                want = spec.lam * float(svc.mean(b))
+                np.testing.assert_allclose(mean, want, rtol=1e-6)
+
+
+class TestRVI:
+    def test_dense_banded_pallas_agree(self):
+        mdp = build_smdp(paper_spec(rho=0.5, s_max=64))
+        rd = relative_value_iteration(mdp, backup="dense")
+        rb = relative_value_iteration(mdp, backup="banded")
+        rp = relative_value_iteration(mdp, backup="pallas", max_iter=2000)
+        assert np.array_equal(rd.policy, rb.policy)
+        assert np.array_equal(rd.policy, rp.policy)
+        np.testing.assert_allclose(rd.g, rb.g, rtol=1e-8)
+        np.testing.assert_allclose(rd.g, rp.g, rtol=1e-5)
+
+    def test_smdp_beats_benchmarks(self):
+        for rho in (0.1, 0.3, 0.7):
+            for w2 in (0.0, 1.0, 5.0):
+                spec = paper_spec(rho=rho, w2=w2)
+                mdp = build_smdp(spec)
+                res = relative_value_iteration(mdp)
+                g_smdp = evaluate_policy(mdp, res.policy).g
+                for pol in [
+                    greedy_policy(spec.s_max, 1, spec.b_max),
+                    static_policy(8, spec.s_max),
+                    static_policy(16, spec.s_max),
+                    static_policy(32, spec.s_max),
+                ]:
+                    g_bench = evaluate_policy(mdp, pol).g
+                    assert g_smdp <= g_bench + 1e-6, (rho, w2)
+
+    def test_policy_feasible(self):
+        mdp = build_smdp(paper_spec())
+        res = relative_value_iteration(mdp)
+        s_val = np.minimum(np.arange(mdp.n_states), mdp.spec.s_max)
+        assert (res.policy <= s_val).all()
+
+
+class TestPaperAnchors:
+    """Quantitative agreement with the paper's own published numbers."""
+
+    def test_table1_static8_anchor(self):
+        # Paper Table I (rho=0.7): static-8 -> W=6.85 ms, P=46.27 W
+        spec = paper_spec(rho=0.7, w2=1.6)
+        mdp = build_smdp(spec)
+        ev = evaluate_policy(mdp, static_policy(8, spec.s_max))
+        np.testing.assert_allclose(ev.w_bar, 6.85, atol=0.01)
+        np.testing.assert_allclose(ev.p_bar, 46.27, atol=0.05)
+
+    def test_table1_smdp_w2_16_anchor(self):
+        # Paper Table I: SMDP (w2=1.6) -> P=44.96 W, W=6.90 ms
+        spec = paper_spec(rho=0.7, w2=1.6)
+        res = solve(spec)
+        np.testing.assert_allclose(res.eval.p_bar, 44.96, atol=0.05)
+        np.testing.assert_allclose(res.eval.w_bar, 6.90, atol=0.02)
+
+    def test_prop4_closed_form_agreement(self):
+        # Cases 2/3 of Fig. 3: exponential size-independent service, Bmax=8
+        for l_const in (2.4252, 1.7465):
+            svc = ServiceModel(latency=ConstantProfile(l_const), family="expo")
+            mu = 1.0 / l_const
+            for rho in (0.1, 0.5, 0.9):
+                for w2 in (0.0, 1.0):
+                    lam = rho * 8 * mu
+                    spec = SMDPSpec(
+                        lam=lam, service=svc, energy=GOOGLENET_P4_ENERGY,
+                        b_min=1, b_max=8, w1=1.0, w2=w2, s_max=100, c_o=100.0,
+                    )
+                    res = relative_value_iteration(build_smdp(spec))
+                    is_cl, q = is_control_limit(res.policy, 100, 8)
+                    assert is_cl
+                    q_star = optimal_q_closed_form(
+                        lam, mu, 8, w1=1.0, w2=w2,
+                        zeta0=GOOGLENET_P4_ENERGY.intercept,
+                    )
+                    assert q == q_star
+
+    def test_abstract_cost_reduces_required_smax(self):
+        # Table II trend: with c_o=100 a much smaller s_max is acceptable
+        spec_co = paper_spec(rho=0.9, w2=1.0, s_max=70, c_o=100.0)
+        res = solve(spec_co, delta=1e-3, max_s_max=70, auto_c_o=False)
+        assert res.eval.delta < 1e-3
+        spec_0 = paper_spec(rho=0.9, w2=1.0, s_max=70, c_o=0.0)
+        res0 = solve(spec_0, delta=None, max_s_max=70, auto_c_o=False)
+        # without the abstract cost the same s_max under-serves: the policy
+        # waits too long and the tail mass is *not* negligible
+        assert res0.eval.g < res.eval.g or res0.eval.delta > res.eval.delta
+
+
+class TestPolicies:
+    def test_greedy_feasible_at_zero(self):
+        pol = greedy_policy(32, 4, 16)
+        assert pol[0] == 0 and pol[3] == 0 and pol[4] == 4
+
+    def test_q_policy_structure_detection(self):
+        pol = q_policy(5, 64, 32)
+        is_cl, q = is_control_limit(pol, 64, 32)
+        assert is_cl and q == 5
+        pol[10] = 0  # break the structure
+        is_cl, _ = is_control_limit(pol, 64, 32)
+        assert not is_cl

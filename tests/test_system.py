@@ -1,0 +1,147 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full pipeline: profile -> SMDP solve -> policy -> serving engine,
+and the paper's central empirical claims as executable assertions.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GOOGLENET_P4_ENERGY,
+    GOOGLENET_P4_LATENCY,
+    IDEAL_PARALLEL_LATENCY,
+    LOG_ENERGY,
+    ServiceModel,
+    SMDPSpec,
+    build_smdp,
+    evaluate_policy,
+    greedy_policy,
+    solve,
+    static_policy,
+)
+from repro.core.profiles import tpu_service_model, workload_for_arch
+from repro.core.tradeoff import benchmark_points, smdp_tradeoff_curve
+from repro.serving import ServingEngine, SMDPScheduler
+
+SVC = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+BMAX = 32
+
+
+def spec(rho=0.7, w2=1.0, **kw):
+    lam = rho * BMAX / float(SVC.mean(BMAX))
+    base = dict(
+        lam=lam, service=SVC, energy=GOOGLENET_P4_ENERGY, b_min=1,
+        b_max=BMAX, w1=1.0, w2=w2, s_max=128, c_o=100.0,
+    )
+    base.update(kw)
+    return SMDPSpec(**base)
+
+
+class TestPaperClaims:
+    def test_pareto_dominance_of_smdp_curve(self):
+        """Fig. 5: no benchmark policy strictly dominates any SMDP point."""
+        s = spec(rho=0.7)
+        curve = smdp_tradeoff_curve(s, w2_values=[0.0, 0.5, 1.0, 2.0, 5.0, 15.0])
+        bench = benchmark_points(s)
+        for name, (w_b, p_b) in bench.items():
+            for pt in curve:
+                assert not (w_b < pt.w_bar - 1e-6 and p_b < pt.p_bar - 1e-6), name
+
+    def test_tradeoff_monotone_in_w2(self):
+        """Fig. 5a: increasing w2 lowers power, raises response time."""
+        curve = smdp_tradeoff_curve(spec(rho=0.3), w2_values=[0.0, 1.0, 5.0, 20.0])
+        p = [pt.p_bar for pt in curve]
+        w = [pt.w_bar for pt in curve]
+        assert all(p[i + 1] <= p[i] + 1e-9 for i in range(len(p) - 1))
+        assert all(w[i + 1] >= w[i] - 1e-9 for i in range(len(w) - 1))
+
+    def test_maximum_batching_is_tradeoff_endpoint(self):
+        """Sec. VII-B-2: static-Bmax pins the high-w2 end of the curve."""
+        s = spec(rho=0.7, w2=200.0)
+        res = solve(s)
+        mdp = build_smdp(s)
+        ev_max = evaluate_policy(mdp, static_policy(BMAX, s.s_max))
+        np.testing.assert_allclose(res.eval.p_bar, ev_max.p_bar, rtol=0.01)
+
+    def test_greedy_near_smdp_when_w2_zero(self):
+        s = spec(rho=0.3, w2=0.0)
+        res = solve(s)
+        mdp = build_smdp(s)
+        g = evaluate_policy(mdp, greedy_policy(s.s_max, 1, BMAX))
+        assert res.eval.g <= g.g <= res.eval.g * 1.15
+
+    def test_static8_unstable_at_high_load(self):
+        """Sec. VII-B-2: static-8 cannot stabilize rho >= 0.8."""
+        s = spec(rho=0.85)
+        theta8 = 8 / float(SVC.mean(8))
+        assert s.lam > theta8
+
+    def test_cov_degrades_latency(self):
+        """Fig. 9: higher service-time CoV worsens W at fixed power weight."""
+        w_by_fam = {}
+        for fam in ("det", "erlang", "expo", "hyperexpo"):
+            svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family=fam)
+            lam = 0.7 * BMAX / float(svc.mean(BMAX))
+            sp = SMDPSpec(lam=lam, service=svc, energy=GOOGLENET_P4_ENERGY,
+                          b_max=BMAX, w1=1.0, w2=1.0, s_max=160, c_o=100.0)
+            w_by_fam[fam] = solve(sp).eval.w_bar
+        assert (
+            w_by_fam["det"] < w_by_fam["erlang"] < w_by_fam["expo"] < w_by_fam["hyperexpo"]
+        )
+
+    def test_ideal_parallelism_scenario_runs(self):
+        """Sec. VII-C-1 setting solves and still beats greedy."""
+        svc = ServiceModel(latency=IDEAL_PARALLEL_LATENCY, family="det")
+        lam = 0.5 * BMAX / float(svc.mean(BMAX))
+        sp = SMDPSpec(lam=lam, service=svc, energy=GOOGLENET_P4_ENERGY,
+                      b_max=BMAX, w1=1.0, w2=1.0, s_max=128, c_o=100.0)
+        res = solve(sp)
+        mdp = build_smdp(sp)
+        g = evaluate_policy(mdp, greedy_policy(sp.s_max, 1, BMAX)).g
+        assert res.eval.g <= g + 1e-9
+
+
+class TestTPUProfileIntegration:
+    """Beyond-paper: SMDP policies on TPU-roofline-derived profiles."""
+
+    def test_arch_profile_to_policy(self):
+        w = workload_for_arch(
+            n_params_active=3e9, n_layers=32, kv_heads=40, head_dim=64,
+            context_len=8192, n_tokens=16, state_bytes=32 * 40 * 64 * 64 * 4,
+        )
+        svc, energy = tpu_service_model(w)
+        lam = 0.5 * BMAX / float(svc.mean(BMAX))
+        sp = SMDPSpec(lam=lam, service=svc, energy=energy, b_max=BMAX,
+                      w1=1.0, w2=1.0, s_max=128, c_o=100.0)
+        res = solve(sp)
+        mdp = build_smdp(sp)
+        for pol in [greedy_policy(sp.s_max, 1, BMAX), static_policy(8, sp.s_max)]:
+            assert res.eval.g <= evaluate_policy(mdp, pol).g + 1e-9
+
+    def test_roofline_latency_monotone(self):
+        w = workload_for_arch(n_params_active=7e9, n_layers=28, kv_heads=4,
+                              head_dim=128, context_len=32768)
+        svc, energy = tpu_service_model(w)
+        l = svc.mean(np.arange(1, 65))
+        assert (np.diff(l) >= -1e-12).all()
+        theta = np.arange(1, 65) / l
+        assert (np.diff(theta) >= -1e-9).all()  # paper's theta monotonicity
+
+
+class TestEndToEndServing:
+    def test_full_pipeline(self):
+        """profile -> solve -> schedule -> serve -> SLO accounting."""
+        s = spec(rho=0.7, w2=1.6)
+        sol = solve(s)
+        energy = np.array(
+            [0.0] + [float(GOOGLENET_P4_ENERGY(b)) for b in range(1, BMAX + 1)]
+        )
+        eng = ServingEngine(SMDPScheduler(sol), lam=s.lam, b_max=BMAX,
+                            service=SVC, energy_table=energy, slo=12.0, seed=0)
+        rep = eng.run(40_000)
+        assert rep.n_served > 100_000
+        np.testing.assert_allclose(rep.latencies.mean(), sol.eval.w_bar, rtol=0.03)
+        np.testing.assert_allclose(rep.power, sol.eval.p_bar, rtol=0.03)
+        assert rep.n_slo_miss / rep.n_served < 0.10
