@@ -1,4 +1,8 @@
-"""Paper Fig. 4: average cost per unit time, SMDP vs benchmarks."""
+"""Paper Fig. 4: average cost per unit time, SMDP vs benchmarks.
+
+The SMDP column of each rho's w2 grid is solved by one batched sweep
+(tradeoff.average_cost_grid -> sweep.sweep_solve).
+"""
 from __future__ import annotations
 
 import numpy as np

@@ -1,4 +1,8 @@
-"""Paper Fig. 5: latency-energy tradeoff curves + Pareto dominance."""
+"""Paper Fig. 5: latency-energy tradeoff curves + Pareto dominance.
+
+Each rho's w2 curve is one batched sweep (smdp_tradeoff_curve ->
+sweep.sweep_solve): a single jitted RVI call per truncation round.
+"""
 from __future__ import annotations
 
 from repro.core.tradeoff import benchmark_points, smdp_tradeoff_curve

@@ -1,4 +1,8 @@
-"""Paper Fig. 8: logarithmic energy consumption (strong energy batching)."""
+"""Paper Fig. 8: logarithmic energy consumption (strong energy batching).
+
+Each rho's w2 curve is one batched sweep (smdp_tradeoff_curve ->
+sweep.sweep_solve).
+"""
 from __future__ import annotations
 
 from repro.core import LOG_ENERGY

@@ -1,25 +1,29 @@
-"""Paper Fig. 9: impact of service-time distribution (CoV sweep)."""
+"""Paper Fig. 9: impact of service-time distribution (CoV sweep).
+
+The four service families share (s_max, b_max), so the whole figure is one
+sweep_solve batch — service distributions, not weights, are the swept axis.
+"""
 from __future__ import annotations
 
-import dataclasses
-
-from repro.core import ServiceModel, solve, GOOGLENET_P4_LATENCY
+from repro.core import ServiceModel
+from repro.core.sweep import sweep_solve
 
 from .common import emit, paper_spec, timed
+
+FAMILIES = ("det", "erlang", "expo", "hyperexpo")
 
 
 def run() -> None:
     for rho in (0.3, 0.7):
-        ws = {}
-        def sweep():
-            for fam in ("det", "erlang", "expo", "hyperexpo"):
-                spec = paper_spec(rho=rho, family=fam, s_max=192)
-                ws[fam] = solve(spec).eval.w_bar
-        _, us = timed(sweep)
+        specs = [
+            paper_spec(rho=rho, family=fam, s_max=192) for fam in FAMILIES
+        ]
+        results, us = timed(sweep_solve, specs)
+        ws = {fam: res.eval.w_bar for fam, res in zip(FAMILIES, results)}
         ordered = ws["det"] <= ws["erlang"] <= ws["expo"] <= ws["hyperexpo"]
         emit(
             f"fig9_cov_rho{rho}",
-            us / 4,
+            us / len(FAMILIES),
             f"W_monotone_in_CoV={ordered};" +
             ";".join(f"{k}={v:.2f}ms" for k, v in ws.items()),
         )

@@ -30,6 +30,7 @@ def main() -> None:
         kernel_micro,
         mmpp_bursty,
         roofline_report,
+        sweep_scaling,
         table3_iteration_algos,
         tpu_profile_scenario,
     )
@@ -43,6 +44,7 @@ def main() -> None:
         ("fig8_log_energy", fig8_log_energy.run),
         ("fig9_cov", fig9_cov.run),
         ("fig10_abstract_cost", fig10_abstract_cost.run),
+        ("sweep_scaling", sweep_scaling.run),
         ("table3_iteration_algos", table3_iteration_algos.run),
         ("appE_structure_breaks", appE_structure_breaks.run),
         ("tpu_profile_scenario", tpu_profile_scenario.run),

@@ -19,8 +19,19 @@ from .service_models import (  # noqa: E402,F401
     IDEAL_PARALLEL_LATENCY,
     LOG_ENERGY,
 )
-from .smdp import SMDPSpec, TruncatedSMDP, build_smdp  # noqa: E402,F401
-from .rvi import RVIResult, relative_value_iteration  # noqa: E402,F401
+from .smdp import (  # noqa: E402,F401
+    BatchedSMDP,
+    SMDPSpec,
+    TruncatedSMDP,
+    build_smdp,
+    build_smdp_batched,
+)
+from .rvi import (  # noqa: E402,F401
+    BatchedRVIResult,
+    RVIResult,
+    relative_value_iteration,
+    relative_value_iteration_batched,
+)
 from .policies import (  # noqa: E402,F401
     static_policy,
     greedy_policy,
@@ -29,3 +40,4 @@ from .policies import (  # noqa: E402,F401
 )
 from .evaluate import PolicyEval, evaluate_policy  # noqa: E402,F401
 from .solve import solve, SolveResult  # noqa: E402,F401
+from .sweep import pad_specs, sweep_solve  # noqa: E402,F401

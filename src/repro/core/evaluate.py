@@ -11,10 +11,11 @@ the stationary distribution of the induced semi-Markov chain and derive
 from __future__ import annotations
 
 import dataclasses
+from typing import List, Sequence
 
 import numpy as np
 
-from .smdp import TruncatedSMDP
+from .smdp import BatchedSMDP, TruncatedSMDP
 
 
 @dataclasses.dataclass
@@ -46,31 +47,32 @@ def stationary_distribution(p: np.ndarray, tol: float = 1e-12) -> np.ndarray:
     return mu / s
 
 
-def evaluate_policy(mdp: TruncatedSMDP, policy: np.ndarray) -> PolicyEval:
-    spec = mdp.spec
-    S = mdp.n_states
-    rows = np.arange(S)
-    acts = np.asarray(policy, dtype=np.int64)
+def _check_feasible(feasible: np.ndarray, acts: np.ndarray) -> np.ndarray:
+    S = feasible.shape[0]
     if acts.shape != (S,):
         raise ValueError(f"policy shape {acts.shape} != ({S},)")
-    feas = mdp.feasible[rows, acts]
+    rows = np.arange(S)
+    feas = feasible[rows, acts]
     if not feas.all():
         bad = rows[~feas]
         raise ValueError(f"policy takes infeasible actions at states {bad[:5]}")
+    return rows
 
-    p_pi = mdp.m_hat[rows, acts, :]
-    mu = stationary_distribution(p_pi)
 
-    y_pi = mdp.y[rows, acts]
-    c_pi = mdp.c_hat[rows, acts]
+def _finish_eval(
+    mu: np.ndarray,
+    acts: np.ndarray,
+    y_pi: np.ndarray,
+    c_pi: np.ndarray,
+    hold_pi: np.ndarray,
+    energy_pi: np.ndarray,
+) -> PolicyEval:
     denom = float(mu @ y_pi)
     g = float(mu @ c_pi) / denom
     delta = float(mu[-1] * c_pi[-1]) / denom
 
     # objective decomposition (abstract cost excluded — it is a solver device,
     # not part of the physical objective)
-    hold_pi = mdp.c_hold[rows, acts]
-    energy_pi = mdp.c_energy[rows, acts]
     w_bar = float(mu @ hold_pi) / denom  # = L_bar / lam = W_bar (Little)
     p_bar = float(mu @ energy_pi) / denom
 
@@ -88,3 +90,51 @@ def evaluate_policy(mdp: TruncatedSMDP, policy: np.ndarray) -> PolicyEval:
         mean_batch=mean_batch,
         throughput=throughput,
     )
+
+
+def evaluate_policy(mdp: TruncatedSMDP, policy: np.ndarray) -> PolicyEval:
+    acts = np.asarray(policy, dtype=np.int64)
+    rows = _check_feasible(mdp.feasible, acts)
+    p_pi = mdp.m_hat[rows, acts, :]
+    mu = stationary_distribution(p_pi)
+    return _finish_eval(
+        mu,
+        acts,
+        mdp.y[rows, acts],
+        mdp.c_hat[rows, acts],
+        mdp.c_hold[rows, acts],
+        mdp.c_energy[rows, acts],
+    )
+
+
+def evaluate_policy_banded(
+    batch: BatchedSMDP, i: int, policy: np.ndarray
+) -> PolicyEval:
+    """evaluate_policy for spec ``i`` of a batch, from banded data only.
+
+    Mathematically identical to evaluating batch.dense(i) but never
+    materializes the (S, A, S) transition tensor — the hot path of sweeps.
+    """
+    acts = np.asarray(policy, dtype=np.int64)
+    rows = _check_feasible(batch.feasible[i], acts)
+    p_pi = batch.policy_transitions(i, acts)
+    mu = stationary_distribution(p_pi)
+    return _finish_eval(
+        mu,
+        acts,
+        batch.y[i, rows, acts],
+        batch.c_hat[i, rows, acts],
+        batch.c_hold[i, rows, acts],
+        batch.c_energy[i, rows, acts],
+    )
+
+
+def evaluate_policy_batched(
+    batch: BatchedSMDP, policies: Sequence[np.ndarray]
+) -> List[PolicyEval]:
+    """Per-spec policy evaluation across a BatchedSMDP (aligned with specs)."""
+    if len(policies) != batch.n_specs:
+        raise ValueError(f"{len(policies)} policies for {batch.n_specs} specs")
+    return [
+        evaluate_policy_banded(batch, i, pol) for i, pol in enumerate(policies)
+    ]

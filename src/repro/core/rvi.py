@@ -116,21 +116,33 @@ def pallas_backup(
     return c_tilde + scale * mh + (1.0 - scale) * h[:, None]
 
 
+#: in-window pmf mass below this is dropped by the banded backups; the
+#: overflow tails stay exact, so the induced backup error is O(BAND_TOL * |h|)
+BAND_TOL = 1e-14
+
+
+def trimmed_band(pm: np.ndarray, tol: float = BAND_TOL) -> int:
+    """Width of the pmf band holding all but ``tol`` of every action's mass.
+
+    ``pm`` is (..., A, K+1) with a zero row for a = 0.  The correlation in
+    the banded backup is O(S * A * band), so trimming the vanishing tail of
+    the arrival pmfs (their support is concentrated around lam * l(a))
+    directly cuts every RVI iteration's work.
+    """
+    serve = pm[..., 1:, :]
+    width = int((serve.cumsum(-1) < 1.0 - tol).sum(-1).max()) + 2
+    return min(width, pm.shape[-1])
+
+
 def make_banded_inputs(mdp: TruncatedSMDP):
     """Precompute (pmfs, tails, scale) for banded_backup from a built SMDP."""
     spec = mdp.spec
-    T = spec.s_max + 1
-    A = mdp.n_actions
-    pmfs = mdp.arrival_pmfs  # (A, K+1), K = s_max + 1
     # truncate pmf columns to k <= s_max (k larger always lands in S_o)
-    pm = pmfs[:, : spec.s_max + 1].copy()
-    tails = np.zeros((A, T))
-    for a in range(1, A):
-        csum = np.cumsum(pm[a])
-        for t in range(T):
-            kmax_in = spec.s_max - t
-            tails[a, t] = max(0.0, 1.0 - csum[kmax_in])
-            # zero out pmf beyond window is handled by hwin mask
+    pm = mdp.arrival_pmfs[:, : spec.s_max + 1].copy()
+    # tails[a, t] = 1 - sum_{k <= s_max - t} p_k: reversed cumulative mass
+    csum = np.cumsum(pm, axis=-1)
+    tails = np.maximum(0.0, 1.0 - csum[:, ::-1])
+    tails[0, :] = 0.0
     scale = mdp.eta / mdp.y
     return (
         jnp.asarray(pm, dtype=jnp.float64),
@@ -228,6 +240,160 @@ def relative_value_iteration(
         iterations=it,
         span=float(span),
         converged=it < max_iter,
+        wall_time_s=time.perf_counter() - t0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched RVI: one jitted while_loop solves a whole spec sweep
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BatchedRVIResult:
+    """Per-spec RVI outputs for a BatchedSMDP, leading axis = spec."""
+
+    policies: np.ndarray  # (N, S)
+    g: np.ndarray  # (N,)
+    h: np.ndarray  # (N, S)
+    iterations: np.ndarray  # (N,) iteration at which each spec first converged
+    span: np.ndarray  # (N,)
+    converged: np.ndarray  # (N,) bool
+    wall_time_s: float
+
+    def unstack(self, i: int) -> RVIResult:
+        return RVIResult(
+            policy=self.policies[i],
+            g=float(self.g[i]),
+            h=self.h[i],
+            iterations=int(self.iterations[i]),
+            span=float(self.span[i]),
+            converged=bool(self.converged[i]),
+            wall_time_s=self.wall_time_s / len(self.g),
+        )
+
+
+@partial(jax.jit, static_argnames=("max_iter", "s_max"))
+def _rvi_loop_batched(
+    c_tilde,  # (N, S, A)
+    pmfs,  # (N, A, K+1)
+    tails,  # (N, A, T)
+    scale,  # (N, S, A)
+    eps: float,
+    eps_rel: float,
+    max_iter: int,
+    s_max: int,
+    h0=None,  # (N, S) warm start; zeros when None
+    ref_state: int = 0,
+):
+    """Vectorized Algorithm 1: every spec runs the banded backup in lockstep.
+
+    The loop stops when EVERY spec's span is below its (relative) threshold;
+    already-converged specs keep refining, which only tightens their h.
+    """
+    N, S, _ = c_tilde.shape
+    backup = jax.vmap(banded_backup, in_axes=(0, 0, 0, 0, None, 0))
+
+    def thresh(g):
+        return jnp.maximum(eps, eps_rel * jnp.abs(g))
+
+    def cond(carry):
+        i, h, span, g, _ = carry
+        return jnp.logical_and(i < max_iter, jnp.any(span >= thresh(g)))
+
+    def body(carry):
+        i, h, _, _, it_conv = carry
+        q = backup(c_tilde, pmfs, tails, scale, s_max, h)  # (N, S, A)
+        j = jnp.min(q, axis=-1)
+        g = j[:, ref_state]
+        h_new = j - g[:, None]
+        diff = h_new - h
+        span = jnp.max(diff, axis=-1) - jnp.min(diff, axis=-1)
+        it_conv = jnp.where((span < thresh(g)) & (it_conv < 0), i + 1, it_conv)
+        return i + 1, h_new, span, g, it_conv
+
+    if h0 is None:
+        h0 = jnp.zeros((N, S), dtype=c_tilde.dtype)
+    init = (
+        0,
+        jnp.asarray(h0, dtype=c_tilde.dtype),
+        jnp.full((N,), jnp.inf, dtype=c_tilde.dtype),
+        jnp.zeros((N,), dtype=c_tilde.dtype),
+        jnp.full((N,), -1, dtype=jnp.int32),
+    )
+    i, h, span, g, it_conv = jax.lax.while_loop(cond, body, init)
+    q = backup(c_tilde, pmfs, tails, scale, s_max, h)
+    policies = jnp.argmin(q, axis=-1)
+    it_conv = jnp.where(it_conv < 0, i, it_conv)
+    return policies, g, h, i, span, it_conv
+
+
+def relative_value_iteration_batched(
+    batch,  # BatchedSMDP
+    eps: float = 1e-2,
+    max_iter: int = 10_000,
+    eps_rel: float = 2e-4,
+    h0: Optional[np.ndarray] = None,
+    mixed_precision: bool = True,
+) -> BatchedRVIResult:
+    """Solve every spec of a BatchedSMDP with one jitted banded-RVI call.
+
+    ``h0`` (N, S) warm-starts the relative values (any h0 converges to the
+    same fixed point; a good one — e.g. interpolated from solved sweep
+    anchors — just gets there in far fewer lockstep iterations).
+
+    With ``mixed_precision`` the bulk of the lockstep runs in float32 —
+    halving the per-iteration memory traffic — and a float64 polish loop
+    finishes from the float32 fixed point; the float32 stopping thresholds
+    are floored above single-precision resolution so the first phase can
+    never stall, and the final policy/gain always comes from the float64
+    backup.
+    """
+    t0 = time.perf_counter()
+    pm = batch.pmfs_banded
+    arrs = (
+        np.asarray(batch.c_tilde),
+        np.asarray(pm[:, :, : trimmed_band(pm)]),
+        np.asarray(batch.tails),
+        np.asarray(batch.scale),
+    )
+    s_max = batch.specs[0].s_max
+    if mixed_precision:
+        # the float32 phase cannot resolve pmf mass below its epsilon anyway,
+        # so it runs on a narrower band than the float64 polish
+        pm32 = pm[:, :, : trimmed_band(pm, tol=1e-8)]
+        coarse = _rvi_loop_batched(
+            jnp.asarray(arrs[0], jnp.float32),
+            jnp.asarray(pm32, jnp.float32),
+            jnp.asarray(arrs[2], jnp.float32),
+            jnp.asarray(arrs[3], jnp.float32),
+            max(eps, 1e-4),
+            max(eps_rel, 1e-5),
+            max_iter,
+            s_max,
+            h0=None if h0 is None else jnp.asarray(h0, jnp.float32),
+        )
+        h0 = np.asarray(coarse[2], np.float64)
+        it_coarse = int(coarse[3])
+    else:
+        it_coarse = 0
+    policies, g, h, it, span, it_conv = _rvi_loop_batched(
+        *(jnp.asarray(a, jnp.float64) for a in arrs),
+        eps,
+        eps_rel,
+        max_iter,
+        s_max,
+        h0=None if h0 is None else jnp.asarray(h0, jnp.float64),
+    )
+    g = np.asarray(g)
+    span = np.asarray(span)
+    return BatchedRVIResult(
+        policies=np.asarray(policies),
+        g=g,
+        h=np.asarray(h),
+        iterations=np.asarray(it_conv) + it_coarse,
+        span=span,
+        converged=span < np.maximum(eps, eps_rel * np.abs(g)),
         wall_time_s=time.perf_counter() - t0,
     )
 

@@ -4,16 +4,22 @@ State space  S_hat = {0, 1, ..., s_max, S_o}; index S_o = s_max + 1.
 Action space A     = {0} U {B_min..B_max}; action index == batch size.
 
 Pipeline (paper Sec. V):
-  build_smdp()   -> truncated continuous-time SMDP  (m_hat, c_hat, y)  [eq. 18-19]
-  discretize()   -> associated discrete-time MDP    (m_tilde, c_tilde) [eq. 23-25]
+  build_smdp()         -> truncated continuous-time SMDP  (m_hat, c_hat, y)  [eq. 18-19]
+  discretize           -> associated discrete-time MDP    (m_tilde, c_tilde) [eq. 23-25]
+  build_smdp_batched() -> a stack of specs sharing (s_max, b_max), assembled
+                          with one broadcast pass; the scalar path is the
+                          N == 1 slice of the same construction.
 
 All tensors are dense numpy on the host (S ~ O(100), A ~ O(33)); the iteration
-itself (rvi.py) runs in JAX.
+itself (rvi.py) runs in JAX.  The batched container keeps only the *banded*
+transition data (arrival pmfs + overflow tails) — the (N, S, A, S) dense
+tensors are materialized per spec on demand, so a wide sweep stays O(N*S*A)
+in memory.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -74,114 +80,331 @@ class TruncatedSMDP:
         return self.n_states - 1
 
 
-def build_smdp(spec: SMDPSpec, pmf_tol: float = 1e-12) -> TruncatedSMDP:
-    """Construct the truncated SMDP per eq. (18)-(19)."""
-    S = spec.s_max + 2
-    A = spec.b_max + 1
+@dataclasses.dataclass
+class BatchedSMDP:
+    """A stack of truncated SMDPs sharing (s_max, b_max).
+
+    Leading axis N indexes specs; the layout of every per-spec slice matches
+    TruncatedSMDP.  Transition structure is stored banded — ``pmfs_banded``
+    (arrival pmfs truncated to k <= s_max) plus ``tails`` (overflow mass
+    towards S_o per base state) — exactly the inputs of rvi.banded_backup.
+    """
+
+    specs: List[SMDPSpec]
+    n_specs: int
+    n_states: int  # S = s_max + 2
+    n_actions: int  # A = b_max + 1
+    feasible: np.ndarray  # (N, S, A) bool
+    y: np.ndarray  # (N, S, A)
+    c_hat: np.ndarray  # (N, S, A)
+    eta: np.ndarray  # (N,)
+    c_tilde: np.ndarray  # (N, S, A), +inf at infeasible
+    c_hold: np.ndarray  # (N, S, A)
+    c_energy: np.ndarray  # (N, S, A)
+    arrival_pmfs: np.ndarray  # (N, A, K+1), K = s_max + 1
+    pmfs_banded: np.ndarray  # (N, A, s_max+1): columns k <= s_max
+    tails: np.ndarray  # (N, A, s_max+1): overflow mass per base state t
+    scale: np.ndarray  # (N, S, A) = eta / y
+
+    @property
+    def s_max(self) -> int:
+        return self.specs[0].s_max
+
+    @property
+    def s_o(self) -> int:
+        return self.n_states - 1
+
+    def m_hat_dense(self, i: Optional[int] = None) -> np.ndarray:
+        """Materialize the dense (eq. 18) transition tensor.
+
+        Returns (N, S, A, S), or (S, A, S) for a single spec ``i``.
+        """
+        sel = slice(None) if i is None else slice(i, i + 1)
+        m = _dense_m_hat(
+            self.specs[0].s_max,
+            self.arrival_pmfs[sel],
+            self.tails[sel],
+            self.feasible[sel],
+        )
+        return m if i is None else m[0]
+
+    def m_tilde_dense(self, i: Optional[int] = None) -> np.ndarray:
+        """Materialize the discretized (eq. 23) transition tensor."""
+        sel = slice(None) if i is None else slice(i, i + 1)
+        m = _dense_m_tilde(
+            self.m_hat_dense()[sel] if i is None else self.m_hat_dense(i)[None],
+            self.scale[sel],
+            self.feasible[sel],
+        )
+        return m if i is None else m[0]
+
+    def take(self, indices: Sequence[int]) -> "BatchedSMDP":
+        """Sub-batch view over the given spec indices (no re-building)."""
+        idx = list(indices)
+        return BatchedSMDP(
+            specs=[self.specs[i] for i in idx],
+            n_specs=len(idx),
+            n_states=self.n_states,
+            n_actions=self.n_actions,
+            feasible=self.feasible[idx],
+            y=self.y[idx],
+            c_hat=self.c_hat[idx],
+            eta=self.eta[idx],
+            c_tilde=self.c_tilde[idx],
+            c_hold=self.c_hold[idx],
+            c_energy=self.c_energy[idx],
+            arrival_pmfs=self.arrival_pmfs[idx],
+            pmfs_banded=self.pmfs_banded[idx],
+            tails=self.tails[idx],
+            scale=self.scale[idx],
+        )
+
+    def policy_transitions(self, i: int, policy: np.ndarray) -> np.ndarray:
+        """(S, S) m_hat rows of spec ``i`` under ``policy`` — no dense tensor.
+
+        Row s is the arrival-pmf window of the chosen action (eq. 18), so
+        policy evaluation over a whole sweep never materializes (S, A, S).
+        """
+        s_max = self.specs[0].s_max
+        S = self.n_states
+        s_o = S - 1
+        acts = np.asarray(policy, dtype=np.int64)
+        s_val = _state_values(s_max).astype(np.int64)
+        p = np.zeros((S, S))
+        s_idx = np.arange(S)
+        wait = acts == 0
+        nxt = np.where(s_idx < s_max, s_idx + 1, s_o)
+        p[s_idx[wait], nxt[wait]] = 1.0
+        serve = ~wait
+        if serve.any():
+            a_s = acts[serve]
+            base = s_val[serve] - a_s  # >= 0 for feasible actions
+            k = np.arange(s_max + 1)[None, :] - base[:, None]
+            pm = self.pmfs_banded[i]  # (A, s_max+1)
+            window = np.where(k >= 0, pm[a_s[:, None], np.clip(k, 0, s_max)], 0.0)
+            p[serve, : s_max + 1] = window
+            p[serve, s_o] = self.tails[i][a_s, base]
+        # normalize tiny numerical drift (same rule as the dense path)
+        row_sums = p.sum(axis=-1, keepdims=True)
+        np.divide(p, row_sums, out=p, where=row_sums > 1e-12)
+        return p
+
+    def dense(self, i: int) -> TruncatedSMDP:
+        """Per-spec TruncatedSMDP view with materialized dense tensors."""
+        m_hat = self.m_hat_dense(i)
+        m_tilde = _dense_m_tilde(
+            m_hat[None], self.scale[i : i + 1], self.feasible[i : i + 1]
+        )[0]
+        return TruncatedSMDP(
+            spec=self.specs[i],
+            n_states=self.n_states,
+            n_actions=self.n_actions,
+            feasible=self.feasible[i],
+            y=self.y[i],
+            c_hat=self.c_hat[i],
+            m_hat=m_hat,
+            eta=float(self.eta[i]),
+            c_tilde=self.c_tilde[i],
+            m_tilde=m_tilde,
+            c_hold=self.c_hold[i],
+            c_energy=self.c_energy[i],
+            arrival_pmfs=self.arrival_pmfs[i],
+        )
+
+
+# ---------------------------------------------------------------------------
+# Broadcast assembly
+# ---------------------------------------------------------------------------
+
+
+def _state_values(s_max: int) -> np.ndarray:
+    """Requests represented by each state index; S_o counts as s_max."""
+    s_val = np.arange(s_max + 2, dtype=np.float64)
+    s_val[-1] = s_max
+    return s_val
+
+
+def _dense_m_hat(
+    s_max: int,
+    pmfs: np.ndarray,  # (N, A, K+1)
+    tails: np.ndarray,  # (N, A, s_max+1)
+    feasible: np.ndarray,  # (N, S, A)
+    pmf_tol: float = 1e-12,
+) -> np.ndarray:
+    """Broadcast construction of the (N, S, A, S) transition tensor (eq. 18)."""
+    N, A = pmfs.shape[0], pmfs.shape[1]
+    S = s_max + 2
     s_o = S - 1
-    lam = spec.lam
+    K = pmfs.shape[2] - 1
+    s_val = _state_values(s_max)
+    acts = np.arange(A)
 
-    # state value (number of requests) represented by each state index
-    s_val = np.arange(S, dtype=np.float64)
-    s_val[s_o] = spec.s_max  # S_o counts as s_max requests (paper Sec. V-A)
-
-    actions = np.arange(A)
-    feasible = np.zeros((S, A), dtype=bool)
-    feasible[:, 0] = True
-    for a in range(spec.b_min, spec.b_max + 1):
-        feasible[:, a] = s_val >= a  # a <= s; S_o has s_val = s_max >= b_max
-
-    # --- sojourn times y(s, a)  (eq. 9) ---
-    y = np.zeros((S, A))
-    y[:, 0] = 1.0 / lam
-    for a in range(1, A):
-        y[:, a] = float(spec.service.mean(a))
-
-    # --- arrival pmfs p_k^{[a]} ---
-    # k support: transitions only distinguish k <= s_max (rest lumps into S_o),
-    # but we keep enough mass for tail accounting.
-    K = spec.s_max + 1
-    pmfs = np.zeros((A, K + 1))
-    for a in range(1, A):
-        pmfs[a] = spec.service.arrival_pmf(a, lam, K)
-
-    # --- transitions m_hat (eq. 18) ---
-    m_hat = np.zeros((S, A, S))
+    m = np.zeros((N, S, A, S))
     # a = 0: deterministic +1 (S_o self-loops; s_max -> S_o)
-    for s in range(S):
-        if s < spec.s_max:
-            m_hat[s, 0, s + 1] = 1.0
-        else:  # s == s_max or S_o
-            m_hat[s, 0, s_o] = 1.0
-    # a != 0: base state s - a, arrivals k land at j = base + k
-    for s in range(S):
-        base_val = int(s_val[s])
-        for a in range(1, A):
-            if not feasible[s, a]:
-                continue
-            base = base_val - a
-            # j in [base, s_max] gets p_{j - base}; rest to S_o
-            kmax_in = spec.s_max - base
-            ks = np.arange(0, kmax_in + 1)
-            m_hat[s, a, base : spec.s_max + 1] = pmfs[a, ks]
-            m_hat[s, a, s_o] = max(0.0, 1.0 - pmfs[a, : kmax_in + 1].sum())
+    rows = np.arange(s_max)
+    m[:, rows, 0, rows + 1] = 1.0
+    m[:, s_max, 0, s_o] = 1.0
+    m[:, s_o, 0, s_o] = 1.0
+    # a != 0: base state t = s_val(s) - a; arrivals k land at j = t + k
+    base = s_val[:, None] - acts[None, :]  # (S, A)
+    j = np.arange(s_max + 1)
+    k = j[None, None, :] - base[:, :, None]  # (S, A, s_max+1)
+    serve = feasible & (acts[None, None, :] >= 1)  # (N, S, A)
+    valid = (k >= 0) & serve[..., None]  # (N, S, A, s_max+1)
+    k_idx = np.clip(k, 0, K).astype(np.int64)
+    gathered = pmfs[:, acts[:, None], k_idx]  # (N, S, A, J)
+    m[..., : s_max + 1] += np.where(valid, gathered, 0.0)
+    # overflow mass towards S_o
+    t_idx = np.clip(base, 0, s_max).astype(np.int64)  # (S, A)
+    tail_gather = tails[:, acts, t_idx]  # (N, S, A)
+    m[..., s_o] += np.where(serve, tail_gather, 0.0)
     # normalize tiny numerical drift
-    row_sums = m_hat.sum(axis=-1, keepdims=True)
-    np.divide(m_hat, row_sums, out=m_hat, where=row_sums > pmf_tol)
+    row_sums = m.sum(axis=-1, keepdims=True)
+    np.divide(m, row_sums, out=m, where=row_sums > pmf_tol)
+    return m
+
+
+def _dense_m_tilde(
+    m_hat: np.ndarray,  # (N, S, A, S)
+    scale: np.ndarray,  # (N, S, A)
+    feasible: np.ndarray,  # (N, S, A)
+) -> np.ndarray:
+    """Discretized transitions (eq. 23): scale towards eta-uniformization."""
+    N, S, A = scale.shape
+    idx = np.arange(S)
+    m = m_hat * scale[..., None]
+    m[:, idx[:, None], np.arange(A)[None, :], idx[:, None]] += 1.0 - scale
+    # infeasible rows: harmless self-loop (masked out in the backup anyway)
+    inf_mask = ~feasible
+    m[inf_mask] = 0.0
+    nI, sI, aI = np.nonzero(inf_mask)
+    m[nI, sI, aI, sI] = 1.0
+    return m
+
+
+def build_smdp_batched(specs: Sequence[SMDPSpec]) -> BatchedSMDP:
+    """Construct a stacked batch of truncated SMDPs (eq. 18-19, 23-25).
+
+    All specs must share (s_max, b_max) — use sweep.pad_specs to lift a
+    mixed-truncation list to a common level.  Arrival rates, weights,
+    service families, energy profiles and b_min may vary freely.
+    """
+    specs = list(specs)
+    if not specs:
+        raise ValueError("empty spec batch")
+    s_max = specs[0].s_max
+    b_max = specs[0].b_max
+    for sp in specs[1:]:
+        if sp.s_max != s_max or sp.b_max != b_max:
+            raise ValueError(
+                "batched specs must share (s_max, b_max); got "
+                f"({sp.s_max}, {sp.b_max}) vs ({s_max}, {b_max})"
+            )
+    N = len(specs)
+    S = s_max + 2
+    A = b_max + 1
+    s_o = S - 1
+    K = s_max + 1
+    s_val = _state_values(s_max)
+    acts = np.arange(A)
+    bs = np.arange(1, A)
+
+    lam = np.array([sp.lam for sp in specs])
+    b_min = np.array([sp.b_min for sp in specs])
+    w1 = np.array([sp.w1 for sp in specs])
+    w2 = np.array([sp.w2 for sp in specs])
+    c_o = np.array([sp.c_o for sp in specs])
+
+    # --- per-spec action profiles (vectorized over b; closed-form pmfs) ---
+    y_a = np.zeros((N, A))
+    e2 = np.zeros((N, A))
+    zeta = np.zeros((N, A))
+    pmfs = np.zeros((N, A, K + 1))
+    for i, sp in enumerate(specs):
+        y_a[i, 0] = 1.0 / sp.lam
+        y_a[i, 1:] = sp.service.mean(bs)
+        e2[i, 1:] = sp.service.second_moment(bs)
+        zeta[i, 1:] = sp.energy(bs)
+        for a in range(1, A):
+            pmfs[i, a] = sp.service.arrival_pmf(a, sp.lam, K)
+
+    # --- feasibility: wait always; serve iff b_min <= a <= s (eq. 8) ---
+    feasible = (s_val[None, :, None] >= acts[None, None, :]) & (
+        acts[None, None, :] >= b_min[:, None, None]
+    )
+    feasible[:, :, 0] = True
+
+    # --- sojourn times y(s, a)  (eq. 9): s-independent ---
+    y = np.broadcast_to(y_a[:, None, :], (N, S, A)).copy()
 
     # --- costs (eq. 11, 19) ---
-    e2 = np.zeros(A)
-    zeta = np.zeros(A)
-    for a in range(1, A):
-        e2[a] = float(spec.service.second_moment(a))
-        zeta[a] = float(spec.energy(a))
-
-    c_hold = np.zeros((S, A))  # = E[int_0^gamma s(t) dt] / lam  (w1 multiplies)
-    c_energy = np.zeros((S, A))  # = zeta(a)                    (w2 multiplies)
-    # a = 0: c = s / lam^2
-    c_hold[:, 0] = s_val / lam**2
-    for a in range(1, A):
-        # c = w2 zeta(a) + w1 (s l(a)/lam + E[G^2]/2)
-        c_hold[:, a] = s_val * y[:, a] / lam + 0.5 * e2[a]
-        c_energy[:, a] = zeta[a]
-
-    c_hat = spec.w1 * c_hold + spec.w2 * c_energy
+    c_hold = np.zeros((N, S, A))  # = E[int_0^gamma s(t) dt] / lam (w1 term)
+    c_hold[:, :, 0] = s_val[None, :] / lam[:, None] ** 2
+    c_hold[:, :, 1:] = (
+        s_val[None, :, None] * y_a[:, None, 1:] / lam[:, None, None]
+        + 0.5 * e2[:, None, 1:]
+    )
+    c_energy = np.broadcast_to(zeta[:, None, :], (N, S, A)).copy()  # w2 term
+    c_hat = w1[:, None, None] * c_hold + w2[:, None, None] * c_energy
     # abstract cost at the overflow state (eq. 19): + c_o * y(s, a)
-    c_hat[s_o, :] = c_hat[s_o, :] + spec.c_o * y[s_o, :]
+    c_hat[:, s_o, :] += c_o[:, None] * y[:, s_o, :]
+
+    # --- banded transition data ---
+    pm = pmfs[:, :, : s_max + 1].copy()  # k > s_max always lands in S_o
+    csum = np.cumsum(pm, axis=-1)
+    # tails[i, a, t] = 1 - sum_{k <= s_max - t} p_k  (overflow from base t)
+    tails = np.maximum(0.0, 1.0 - csum[:, :, ::-1])
+    tails[:, 0, :] = 0.0
 
     # --- discretization (eq. 23-25) ---
-    diag = m_hat[np.arange(S)[:, None], actions[None, :], np.arange(S)[:, None]]
+    # structured self-transition probabilities: for feasible (s, a != 0) the
+    # diagonal entry is p^{[a]}_a (k = a puts the chain back at s); at S_o it
+    # is the overflow tail from base s_max - a; waiting self-loops only at S_o
+    diag = np.zeros((N, S, A))
+    pm_diag = pm[:, acts, np.minimum(acts, s_max)]  # (N, A): p^{[a]}_a
+    diag[:, : s_max + 1, :] = np.where(
+        feasible[:, : s_max + 1, :] & (acts[None, None, :] >= 1),
+        pm_diag[:, None, :],
+        0.0,
+    )
+    diag[:, s_o, 1:] = tails[:, bs, s_max - bs]
+    diag[:, s_o, 0] = 1.0
+
     with np.errstate(divide="ignore"):
         bound = np.where(
             (diag < 1.0) & feasible, y / np.maximum(1.0 - diag, 1e-300), np.inf
         )
-    eta = 0.999 * float(bound.min())
-    if not np.isfinite(eta) or eta <= 0:
+    eta = 0.999 * bound.reshape(N, -1).min(axis=1)
+    if not np.all(np.isfinite(eta)) or np.any(eta <= 0):
         raise RuntimeError("degenerate eta bound")
 
-    c_tilde = np.where(feasible, c_hat / y, np.inf)
-    scale = eta / y  # (S, A)
-    m_tilde = m_hat * scale[:, :, None]
-    idx = np.arange(S)
-    m_tilde[idx[:, None], actions[None, :], idx[:, None]] += 1.0 - scale
-    # infeasible rows: harmless self-loop (masked out in the backup anyway)
-    inf_mask = ~feasible
-    m_tilde[inf_mask] = 0.0
-    sI, aI = np.nonzero(inf_mask)
-    m_tilde[sI, aI, sI] = 1.0
+    with np.errstate(invalid="ignore"):
+        c_tilde = np.where(feasible, c_hat / y, np.inf)
+    scale = eta[:, None, None] / y
 
-    return TruncatedSMDP(
-        spec=spec,
+    return BatchedSMDP(
+        specs=specs,
+        n_specs=N,
         n_states=S,
         n_actions=A,
         feasible=feasible,
         y=y,
         c_hat=c_hat,
-        m_hat=m_hat,
         eta=eta,
         c_tilde=c_tilde,
-        m_tilde=m_tilde,
         c_hold=c_hold,
         c_energy=c_energy,
         arrival_pmfs=pmfs,
+        pmfs_banded=pm,
+        tails=tails,
+        scale=scale,
     )
+
+
+def build_smdp(spec: SMDPSpec, pmf_tol: float = 1e-12) -> TruncatedSMDP:
+    """Construct the truncated SMDP per eq. (18)-(19).
+
+    The scalar path is the N == 1 slice of the broadcast batched assembly.
+    """
+    del pmf_tol  # drift normalization is part of the dense materialization
+    return build_smdp_batched([spec]).dense(0)

@@ -19,9 +19,17 @@ from .smdp import SMDPSpec, TruncatedSMDP, build_smdp
 @dataclasses.dataclass
 class SolveResult:
     spec: SMDPSpec
-    mdp: TruncatedSMDP
     rvi: RVIResult
     eval: PolicyEval
+    # dense tensors are only needed by a few consumers; sweeps skip them
+    _mdp: Optional[TruncatedSMDP] = None
+
+    @property
+    def mdp(self) -> TruncatedSMDP:
+        """The dense truncated SMDP (materialized on first access)."""
+        if self._mdp is None:
+            self._mdp = build_smdp(self.spec)
+        return self._mdp
 
     @property
     def policy(self) -> np.ndarray:
@@ -80,7 +88,7 @@ def solve(
         res = relative_value_iteration(mdp, eps=eps, max_iter=max_iter, backup=backup)
         ev = evaluate_policy(mdp, res.policy)
         if delta is None or ev.delta < delta or cur.s_max >= max_s_max:
-            return SolveResult(spec=cur, mdp=mdp, rvi=res, eval=ev)
+            return SolveResult(spec=cur, rvi=res, eval=ev, _mdp=mdp)
         cur = dataclasses.replace(
             cur, s_max=min(int(np.ceil(cur.s_max * grow_factor)), max_s_max)
         )

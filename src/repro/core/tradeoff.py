@@ -1,4 +1,9 @@
-"""Latency-energy tradeoff sweeps (paper Fig. 5/7/8/9) and benchmark grids."""
+"""Latency-energy tradeoff sweeps (paper Fig. 5/7/8/9) and benchmark grids.
+
+All weight grids route through sweep.sweep_solve: the whole w2 axis is
+stacked into one BatchedSMDP and solved by a single jitted banded-RVI call,
+instead of re-building and re-dispatching per point.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -10,6 +15,7 @@ from .evaluate import evaluate_policy
 from .policies import greedy_policy, static_policy
 from .smdp import SMDPSpec, build_smdp
 from .solve import SolveResult, solve
+from .sweep import sweep_solve
 
 
 @dataclasses.dataclass
@@ -28,22 +34,18 @@ def smdp_tradeoff_curve(
     delta: float = 1e-3,
 ) -> List[TradeoffPoint]:
     """Sweep w2 (w1 fixed) -> (W_bar, P_bar) pairs of SMDP solutions."""
-    points = []
-    s_max = base.s_max
-    for w2 in w2_values:
-        spec = dataclasses.replace(base, w2=float(w2), s_max=s_max)
-        res = solve(spec, eps=eps, delta=delta)
-        s_max = res.spec.s_max  # warm-start truncation level for next weight
-        points.append(
-            TradeoffPoint(
-                w2=float(w2),
-                w_bar=res.eval.w_bar,
-                p_bar=res.eval.p_bar,
-                g=res.eval.g,
-                policy=res.policy,
-            )
+    specs = [dataclasses.replace(base, w2=float(w2)) for w2 in w2_values]
+    results = sweep_solve(specs, eps=eps, delta=delta)
+    return [
+        TradeoffPoint(
+            w2=float(w2),
+            w_bar=res.eval.w_bar,
+            p_bar=res.eval.p_bar,
+            g=res.eval.g,
+            policy=res.policy,
         )
-    return points
+        for w2, res in zip(w2_values, results)
+    ]
 
 
 def benchmark_points(
@@ -78,7 +80,8 @@ def average_cost_grid(
 
     Benchmark policies are weight-independent; their *cost* depends on the
     weights through the objective.  g(policy) = w1 * W_bar_term + w2 * P_bar
-    where W_bar_term re-uses the evaluator's decomposition.
+    where W_bar_term re-uses the evaluator's decomposition.  The SMDP column
+    solves the entire w2 grid in one batched call.
     """
     mdp = build_smdp(base)
     bench: Dict[str, Tuple[float, float]] = {}
@@ -93,14 +96,31 @@ def average_cost_grid(
         except RuntimeError:
             bench[f"static_{b}"] = (float("inf"), float("inf"))
 
+    specs = [dataclasses.replace(base, w2=float(w2)) for w2 in w2_values]
+    results = sweep_solve(specs, eps=eps, delta=delta)
+
     out: Dict[str, List[float]] = {k: [] for k in bench}
     out["smdp"] = []
-    s_max = base.s_max
-    for w2 in w2_values:
-        spec = dataclasses.replace(base, w2=float(w2), s_max=s_max)
-        res = solve(spec, eps=eps, delta=delta)
-        s_max = res.spec.s_max
+    for w2, res in zip(w2_values, results):
         out["smdp"].append(base.w1 * res.eval.w_bar + float(w2) * res.eval.p_bar)
         for k, (w_bar, p_bar) in bench.items():
             out[k].append(base.w1 * w_bar + float(w2) * p_bar)
     return out
+
+
+def solve_serial(
+    base: SMDPSpec,
+    w2_values: Sequence[float],
+    eps: float = 1e-2,
+    delta: float = 1e-3,
+) -> List[SolveResult]:
+    """Per-point serial loop (the pre-batched path); kept as the benchmark
+    baseline for benchmarks/sweep_scaling.py and for equivalence tests."""
+    results = []
+    s_max = base.s_max
+    for w2 in w2_values:
+        spec = dataclasses.replace(base, w2=float(w2), s_max=s_max)
+        res = solve(spec, eps=eps, delta=delta)
+        s_max = res.spec.s_max  # warm-start truncation level for next weight
+        results.append(res)
+    return results

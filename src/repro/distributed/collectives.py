@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .hints import BATCH
+from .meshcompat import get_abstract_mesh, shard_map
 
 NEG_INF = -1e30
 
@@ -39,7 +40,7 @@ def _batch_entry(am, b: int):
 
 def sharded_decode_applicable(q_shape, cache_len: int) -> bool:
     """True when the mesh context allows the seq-sharded decode path."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or am.empty or "model" not in am.axis_names:
         return False
     n = am.shape["model"]
@@ -57,7 +58,7 @@ def sharded_flash_decode(
     chunk: Optional[int] = None,
 ):
     """Returns (B, 1, H, D).  Collective: pmax+psum of (B,KV,G,D) stats."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     B, _, H, D = q.shape
     Smax, KV = kbuf.shape[1], kbuf.shape[2]
     G = H // KV
@@ -98,7 +99,7 @@ def sharded_flash_decode(
         out = num / jnp.maximum(den, 1e-30)[..., None]
         return out.reshape(q_l.shape[0], 1, H, D).astype(q_l.dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=am,
         in_specs=(q_spec, kv_spec, kv_spec, P()),
@@ -109,7 +110,7 @@ def sharded_flash_decode(
 
 def sharded_window_applicable(cfg_window, seq_len: int) -> int:
     """Returns n_prev halo shards (>0) when the halo path applies, else 0."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or am.empty or "model" not in am.axis_names:
         return 0
     n = am.shape["model"]
@@ -139,7 +140,7 @@ def sharded_window_prefill_attention(
     For gemma2 (W=4096, shard=2048, 16 ranks) that is 8x less gather volume
     AND ~5x less attention compute on every local layer (§Perf E).
     """
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     B, S, H, D = q.shape
     KV = k.shape[2]
     n = am.shape["model"]
@@ -184,7 +185,7 @@ def sharded_window_prefill_attention(
         )
         return o.transpose(0, 3, 1, 2, 4).reshape(b_l, s_l, H, D).astype(q_l.dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=am, in_specs=(spec, spec, spec), out_specs=spec
     )
     return fn(q, k, v)

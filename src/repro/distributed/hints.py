@@ -14,6 +14,8 @@ from typing import Optional, Tuple, Union
 import jax
 from jax.sharding import PartitionSpec as P
 
+from .meshcompat import get_abstract_mesh
+
 #: batch-dim axes (pod-major); filtered to the axes the current mesh has
 BATCH: Tuple[str, ...] = ("pod", "data")
 
@@ -22,7 +24,7 @@ Entry = Union[None, str, Tuple[str, ...]]
 
 def hint(x, *entries: Entry):
     """with_sharding_constraint(x, P(*entries)) guarded by mesh context."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or am.empty:
         return x
     if len(entries) != x.ndim:

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.configs import ARCHS
 from repro.launch import hlo_analysis
+from repro.distributed import meshcompat
 from repro.distributed import sharding as SH
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import SHAPES, cell_applicable, input_specs
@@ -268,7 +269,7 @@ def run_cell(
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
     try:
-        with jax.sharding.set_mesh(mesh):  # enables model-side sharding hints
+        with meshcompat.set_mesh(mesh):  # enables model-side sharding hints
             fn, args, in_sh, donate = build_cell(
                 cfg, shape_name, mesh, baseline=baseline
             )
@@ -286,7 +287,10 @@ def run_cell(
             mem["temp_size_in_bytes"] // 2,
             mem["temp_size_in_bytes"] - artifact,
         )
-        cost = dict(compiled.cost_analysis() or {})
+        cost_raw = compiled.cost_analysis() or {}
+        if isinstance(cost_raw, (list, tuple)):  # pre-0.5 returns [dict]
+            cost_raw = cost_raw[0] if cost_raw else {}
+        cost = dict(cost_raw)
         cost = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
         colls = parse_collectives(hlo_text)
         # XLA's cost_analysis counts while bodies ONCE; the trip-count-aware

@@ -1,6 +1,7 @@
 from .scheduler import (  # noqa: F401
     GreedyScheduler,
     SMDPScheduler,
+    SMDPSchedulerBank,
     StaticScheduler,
     QPolicyScheduler,
 )

@@ -3,11 +3,16 @@
 A scheduler answers one question at each decision epoch (batch completion,
 or arrival-at-idle): given s queued requests, what batch size now?
 `0` means wait for more arrivals.
+
+A solved sweep (core.sweep.sweep_solve over a lambda / w2 grid) turns into
+an SMDPSchedulerBank via SMDPScheduler.bank(): a keyed table bank the
+serving layer hot-swaps when traffic or the energy-price weight shifts,
+without re-solving online.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -35,16 +40,125 @@ class SMDPScheduler(Scheduler):
     def __init__(self, solution: SolveResult):
         self.table = solution.action_table()
         self.s_max = len(self.table) - 1
+        self._bank: Optional["SMDPSchedulerBank"] = None
 
     @classmethod
     def from_table(cls, table: np.ndarray) -> "SMDPScheduler":
         obj = cls.__new__(cls)
         obj.table = np.asarray(table, dtype=np.int64)
         obj.s_max = len(obj.table) - 1
+        obj._bank = None
         return obj
 
+    @classmethod
+    def bank(
+        cls,
+        solutions: Sequence[SolveResult],
+        keys: Optional[Sequence[Tuple[float, ...]]] = None,
+        key_names: Tuple[str, ...] = ("lam", "w2"),
+    ) -> "SMDPSchedulerBank":
+        """Turn a solved sweep into a hot-swappable table bank.
+
+        By default each solution is keyed by its spec's (lam, w2); pass
+        explicit ``keys`` (tuples aligned with ``key_names``) to key on
+        other sweep axes (e.g. service profile id).
+        """
+        if keys is None:
+            keys = [
+                tuple(float(getattr(sol.spec, n)) for n in key_names)
+                for sol in solutions
+            ]
+        if len(keys) != len(solutions):
+            raise ValueError("keys and solutions must align")
+        tables = {}
+        for key, sol in zip(keys, solutions):
+            k = tuple(float(v) for v in key)
+            if k in tables:
+                raise ValueError(
+                    f"duplicate bank key {k}: the sweep varies something "
+                    f"{key_names} does not capture — pass explicit keys"
+                )
+            tables[k] = sol.action_table()
+        return SMDPSchedulerBank(tables, key_names)
+
     def decide(self, queue_len: int) -> int:
-        return int(self.table[min(queue_len, self.s_max)])
+        table = self.table  # single read: safe against concurrent swap_table
+        return int(table[min(queue_len, len(table) - 1)])
+
+    def swap_table(self, table: np.ndarray) -> None:
+        """Hot-swap the action table (atomic from decide()'s point of view)."""
+        self.table = np.asarray(table, dtype=np.int64)
+        self.s_max = len(self.table) - 1
+
+    def retune(self, **coords: float) -> Tuple[float, ...]:
+        """Re-point at the bank entry nearest the observed operating point.
+
+        Returns the selected key.  Requires the scheduler to have been
+        minted by an SMDPSchedulerBank.
+        """
+        if self._bank is None:
+            raise RuntimeError("scheduler has no attached bank; use bank()")
+        key = self._bank.nearest(**coords)
+        self.swap_table(self._bank.tables[key])
+        return key
+
+
+class SMDPSchedulerBank:
+    """Keyed bank of solved SMDP action tables (one sweep, many regimes).
+
+    ``tables`` maps key tuples (aligned with ``key_names``, e.g. (lam, w2))
+    to dense action tables.  ``nearest`` picks the entry closest to an
+    observed operating point so the serving layer can hot-swap policies as
+    traffic or the energy price shifts, without re-solving online.
+    """
+
+    def __init__(
+        self,
+        tables: Dict[Tuple[float, ...], np.ndarray],
+        key_names: Tuple[str, ...] = ("lam", "w2"),
+    ):
+        if not tables:
+            raise ValueError("empty scheduler bank")
+        self.key_names = tuple(key_names)
+        self.tables = {
+            tuple(float(v) for v in k): np.asarray(t, dtype=np.int64)
+            for k, t in tables.items()
+        }
+        for key in self.tables:
+            if len(key) != len(self.key_names):
+                raise ValueError(f"key {key} does not match {self.key_names}")
+        # per-dimension scale for the nearest-key metric (range, not |max|,
+        # so sweeps over a narrow band around a large value still resolve)
+        arr = np.array(sorted(self.tables), dtype=np.float64)
+        span = arr.max(axis=0) - arr.min(axis=0)
+        self._scales = np.where(span > 0, span, 1.0)
+
+    def __len__(self) -> int:
+        return len(self.tables)
+
+    def keys(self):
+        return sorted(self.tables)
+
+    def nearest(self, **coords: float) -> Tuple[float, ...]:
+        """Key closest to the given operating point (subset of dims OK)."""
+        unknown = set(coords) - set(self.key_names)
+        if unknown:
+            raise ValueError(f"unknown key dims {unknown}; have {self.key_names}")
+        if not coords:
+            raise ValueError("need at least one coordinate")
+        dims = [i for i, n in enumerate(self.key_names) if n in coords]
+        target = np.array([coords[self.key_names[i]] for i in dims])
+        keys = sorted(self.tables)
+        pts = np.array(keys, dtype=np.float64)[:, dims]
+        d = np.linalg.norm((pts - target[None, :]) / self._scales[dims], axis=1)
+        return keys[int(np.argmin(d))]
+
+    def scheduler(self, **coords: float) -> SMDPScheduler:
+        """Mint an SMDPScheduler on the nearest entry, wired for retune()."""
+        key = self.nearest(**coords)
+        sch = SMDPScheduler.from_table(self.tables[key])
+        sch._bank = self
+        return sch
 
 
 class StaticScheduler(Scheduler):

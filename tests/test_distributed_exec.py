@@ -4,6 +4,7 @@ Verifies the shard_map flash-decode (§Perf B1) is EXACT against the plain
 single-device decode path, including gemma2 sliding-window and llama4
 chunked masks.
 """
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -12,15 +13,19 @@ import pytest
 
 ROOT = Path(__file__).resolve().parent.parent
 
+# propagate platform selection (e.g. JAX_PLATFORMS=cpu): without it the
+# fresh jax probes for accelerators and can hang in sandboxes
+_JAX_ENV = {k: v for k, v in os.environ.items() if k.startswith("JAX_")}
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses, jax, jax.numpy as jnp
 from repro.configs import ARCHS
+from repro.distributed import meshcompat
 from repro.models import model as M
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = meshcompat.make_mesh((2, 4), ("data", "model"))
 worst = 0.0
 for name in ["qwen2.5-32b", "gemma2-9b"]:
     cfg = ARCHS[name].reduced()
@@ -34,7 +39,7 @@ for name in ["qwen2.5-32b", "gemma2-9b"]:
     nxt = toks[:, :1]
     base_cfg = dataclasses.replace(cfg, sharded_decode_attn=False)
     logits_plain, _ = M.decode_step(base_cfg, params, cache, nxt)
-    with jax.sharding.set_mesh(mesh):
+    with meshcompat.set_mesh(mesh):
         logits_shard, _ = jax.jit(
             lambda p, c, t: M.decode_step(cfg, p, c, t))(params, cache, nxt)
     worst = max(worst, float(jnp.max(jnp.abs(logits_plain - logits_shard))))
@@ -49,7 +54,7 @@ def test_sharded_flash_decode_exact():
         [sys.executable, "-c", _SCRIPT],
         cwd=ROOT,
         env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root", **_JAX_ENV},
         capture_output=True,
         text=True,
         timeout=500,

@@ -1,5 +1,6 @@
 """Dry-run smoke (subprocess: needs a fresh jax with 512 host devices)."""
 import json
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -7,6 +8,10 @@ from pathlib import Path
 import pytest
 
 ROOT = Path(__file__).resolve().parent.parent
+
+# propagate platform selection (e.g. JAX_PLATFORMS=cpu): without it the
+# fresh jax probes for accelerators and can hang in sandboxes
+_JAX_ENV = {k: v for k, v in os.environ.items() if k.startswith("JAX_")}
 
 
 @pytest.mark.slow
@@ -19,7 +24,8 @@ def test_dryrun_cell_compiles(tmp_path):
             "--mesh", "single", "--out", str(tmp_path),
         ],
         cwd=ROOT,
-        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"},
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             **_JAX_ENV},
         capture_output=True,
         text=True,
         timeout=500,

@@ -87,8 +87,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
+from repro.distributed import meshcompat
 
-mesh = jax.make_mesh((%d,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = meshcompat.make_mesh((%d,), ("data",))
 mgr = CheckpointManager(sys.argv[1])
 tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
 sh = {"w": NamedSharding(mesh, P("data", None))}
@@ -102,8 +103,13 @@ else:
     assert len(out["w"].sharding.device_set) == %d
     print("RESTORED")
 """
+        import os
+
+        # propagate platform selection (e.g. JAX_PLATFORMS=cpu): without it
+        # the fresh jax probes for accelerators and can hang in sandboxes
         env = {"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin",
-               "HOME": "/root"}
+               "HOME": "/root",
+               **{k: v for k, v in os.environ.items() if k.startswith("JAX_")}}
         r1 = subprocess.run(
             [sys.executable, "-c", script % (8, 8, 8), str(tmp_path), "save"],
             env=env, capture_output=True, text=True, timeout=300, cwd=root,

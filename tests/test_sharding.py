@@ -7,9 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS
+from repro.distributed import meshcompat
 from repro.distributed import sharding as SH
 from repro.models import model as M
 
@@ -17,7 +18,7 @@ from repro.models import model as M
 def abstract_mesh(multi_pod=False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return AbstractMesh(shape, axes)
+    return meshcompat.abstract_mesh(shape, axes)
 
 
 def _check_tree(specs, shapes):

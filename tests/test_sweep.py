@@ -1,0 +1,242 @@
+"""Batched sweep engine: serial equivalence, policy structure, stochasticity.
+
+Covers the acceptance surface of the sweep solver:
+  * sweep_solve over a >= 16-point w2 grid matches per-spec solve()
+  * monotone control-limit structure of the resulting policies
+  * row-stochasticity of the batched m_tilde / m_hat
+  * banded policy evaluation == dense policy evaluation
+  * scheduler bank built from a solved sweep (hot-swap on retune)
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GOOGLENET_P4_ENERGY,
+    GOOGLENET_P4_LATENCY,
+    ConstantProfile,
+    ServiceModel,
+    SMDPSpec,
+    build_smdp,
+    build_smdp_batched,
+    evaluate_policy,
+    pad_specs,
+    solve,
+    sweep_solve,
+)
+from repro.core.evaluate import evaluate_policy_banded
+from repro.core.policies import is_control_limit
+from repro.serving import SMDPScheduler, SMDPSchedulerBank
+
+
+def spec_for(rho=0.3, w2=1.0, s_max=64, b_max=16, family="det", latency=None):
+    svc = ServiceModel(latency=latency or GOOGLENET_P4_LATENCY, family=family)
+    lam = rho * b_max / float(svc.mean(b_max))
+    return SMDPSpec(
+        lam=lam, service=svc, energy=GOOGLENET_P4_ENERGY,
+        b_min=1, b_max=b_max, w1=1.0, w2=w2, s_max=s_max, c_o=100.0,
+    )
+
+
+W2_GRID = [float(w) for w in np.linspace(0.0, 15.0, 16)]
+
+
+class TestSerialEquivalence:
+    def test_w2_grid_matches_serial_solve(self):
+        base = spec_for(rho=0.3)
+        specs = [dataclasses.replace(base, w2=w2) for w2 in W2_GRID]
+        batched = sweep_solve(specs)
+        assert len(batched) == len(specs)
+        for sp, res in zip(specs, batched):
+            serial = solve(sp)
+            assert res.spec.s_max == serial.spec.s_max
+            assert np.array_equal(res.policy, serial.policy), sp.w2
+            np.testing.assert_allclose(res.eval.g, serial.eval.g, rtol=1e-9)
+            np.testing.assert_allclose(
+                res.eval.w_bar, serial.eval.w_bar, rtol=1e-9
+            )
+            np.testing.assert_allclose(
+                res.eval.p_bar, serial.eval.p_bar, rtol=1e-9
+            )
+            # the batched RVI's own gain estimate is eps-close to serial's
+            np.testing.assert_allclose(res.rvi.g, serial.rvi.g, rtol=1e-3)
+
+    def test_mixed_s_max_is_padded(self):
+        base = spec_for(rho=0.3)
+        specs = [
+            dataclasses.replace(base, w2=w2, s_max=s)
+            for w2, s in [(0.0, 48), (1.0, 64), (5.0, 56)]
+        ]
+        padded = pad_specs(specs)
+        assert all(sp.s_max == 64 for sp in padded)
+        results = sweep_solve(specs)
+        for sp, res in zip(padded, results):
+            serial = solve(sp)
+            assert np.array_equal(res.policy, serial.policy)
+
+    def test_b_max_mismatch_rejected(self):
+        base = spec_for()
+        bad = spec_for(b_max=8)
+        with pytest.raises(ValueError):
+            sweep_solve([base, bad])
+
+    def test_auto_grow_matches_serial(self):
+        # rho high + tiny truncation: the delta rule must grow s_max
+        base = spec_for(rho=0.85, s_max=16, b_max=16)
+        specs = [dataclasses.replace(base, w2=w2) for w2 in (0.0, 1.0)]
+        results = sweep_solve(specs, delta=1e-3)
+        for sp, res in zip(specs, results):
+            serial = solve(sp, delta=1e-3)
+            assert res.spec.s_max == serial.spec.s_max
+            assert res.spec.s_max > 16
+            assert res.eval.delta < 1e-3
+            assert np.array_equal(res.policy, serial.policy)
+
+
+class TestPolicyStructure:
+    def test_control_limit_and_monotone_in_w2(self):
+        # Prop.-4 setting: size-independent exponential service
+        svc_latency = ConstantProfile(2.4252)
+        base = spec_for(
+            rho=0.5, b_max=8, s_max=64, family="expo", latency=svc_latency
+        )
+        specs = [
+            dataclasses.replace(base, w2=w2)
+            for w2 in np.linspace(0.0, 10.0, 11)
+        ]
+        results = sweep_solve(specs)
+        qs, p_bars = [], []
+        for res in results:
+            is_cl, q = is_control_limit(res.policy, res.spec.s_max, 8)
+            assert is_cl, res.spec.w2
+            qs.append(q)
+            p_bars.append(res.eval.p_bar)
+        # raising the energy weight never lowers the control limit and
+        # never raises the optimal average power draw (up to the tiny
+        # evaluation shift that different auto-grown truncations induce)
+        assert all(q2 >= q1 for q1, q2 in zip(qs, qs[1:]))
+        assert all(
+            p2 <= p1 * (1.0 + 1e-4) for p1, p2 in zip(p_bars, p_bars[1:])
+        )
+
+
+class TestBatchedConstruction:
+    def _mixed_batch(self):
+        specs = [
+            spec_for(rho=0.3, w2=0.0),
+            spec_for(rho=0.3, w2=5.0),
+            spec_for(rho=0.6, w2=1.0, family="expo"),
+            spec_for(rho=0.45, w2=2.0, family="erlang"),
+        ]
+        return build_smdp_batched(specs)
+
+    def test_m_tilde_rows_stochastic(self):
+        batch = self._mixed_batch()
+        m_tilde = batch.m_tilde_dense()
+        assert m_tilde.shape == (
+            batch.n_specs, batch.n_states, batch.n_actions, batch.n_states
+        )
+        rows = m_tilde[batch.feasible]
+        np.testing.assert_allclose(rows.sum(-1), 1.0, atol=1e-8)
+        assert (rows >= -1e-10).all()
+        m_hat = batch.m_hat_dense()
+        rows_h = m_hat[batch.feasible]
+        np.testing.assert_allclose(rows_h.sum(-1), 1.0, atol=1e-8)
+        assert (rows_h >= 0).all()
+
+    def test_dense_slice_matches_scalar_build(self):
+        batch = self._mixed_batch()
+        for i, sp in enumerate(batch.specs):
+            mdp = build_smdp(sp)
+            np.testing.assert_allclose(
+                batch.m_hat_dense(i), mdp.m_hat, atol=1e-12
+            )
+            np.testing.assert_allclose(
+                batch.m_tilde_dense(i), mdp.m_tilde, atol=1e-12
+            )
+            np.testing.assert_allclose(batch.eta[i], mdp.eta, rtol=1e-12)
+            finite = batch.feasible[i]
+            np.testing.assert_allclose(
+                batch.c_tilde[i][finite], mdp.c_tilde[finite], rtol=1e-12
+            )
+
+    def test_policy_transitions_matches_dense_rows(self):
+        batch = self._mixed_batch()
+        rng = np.random.default_rng(0)
+        S = batch.n_states
+        for i in range(batch.n_specs):
+            s_val = np.minimum(np.arange(S), batch.specs[i].s_max)
+            policy = np.where(
+                rng.random(S) < 0.5, 0, rng.integers(1, 17, S)
+            )
+            policy = np.minimum(policy, s_val).astype(np.int64)
+            rows = batch.policy_transitions(i, policy)
+            dense = batch.m_hat_dense(i)[np.arange(S), policy, :]
+            np.testing.assert_allclose(rows, dense, atol=1e-12)
+
+    def test_banded_eval_matches_dense_eval(self):
+        batch = self._mixed_batch()
+        for i in range(batch.n_specs):
+            mdp = batch.dense(i)
+            sp = batch.specs[i]
+            from repro.core.policies import greedy_policy
+
+            pol = greedy_policy(sp.s_max, sp.b_min, sp.b_max)
+            ev_b = evaluate_policy_banded(batch, i, pol)
+            ev_d = evaluate_policy(mdp, pol)
+            np.testing.assert_allclose(ev_b.g, ev_d.g, rtol=1e-10)
+            np.testing.assert_allclose(ev_b.delta, ev_d.delta, atol=1e-12)
+            np.testing.assert_allclose(ev_b.w_bar, ev_d.w_bar, rtol=1e-10)
+            np.testing.assert_allclose(ev_b.p_bar, ev_d.p_bar, rtol=1e-10)
+
+
+class TestSchedulerBank:
+    def _bank(self):
+        base = spec_for(rho=0.3, b_max=8, s_max=48)
+        specs = [
+            dataclasses.replace(base, w2=w2) for w2 in (0.0, 2.0, 8.0)
+        ]
+        results = sweep_solve(specs)
+        return SMDPScheduler.bank(results), results
+
+    def test_bank_keys_and_nearest(self):
+        bank, results = self._bank()
+        assert isinstance(bank, SMDPSchedulerBank)
+        assert len(bank) == 3
+        lam = results[0].spec.lam
+        assert bank.nearest(lam=lam, w2=1.9) == (lam, 2.0)
+        assert bank.nearest(w2=100.0) == (lam, 8.0)
+        with pytest.raises(ValueError):
+            bank.nearest(nope=1.0)
+
+    def test_scheduler_hot_swap(self):
+        bank, results = self._bank()
+        sch = bank.scheduler(w2=0.0)
+        assert np.array_equal(sch.table, results[0].action_table())
+        before = [sch.decide(s) for s in range(sch.s_max + 1)]
+        key = sch.retune(w2=8.0)
+        assert key[1] == 8.0
+        assert np.array_equal(sch.table, results[2].action_table())
+        after = [sch.decide(s) for s in range(sch.s_max + 1)]
+        # a much higher energy price must not make batching less patient
+        assert after != before
+
+    def test_bank_requires_attachment(self):
+        _, results = self._bank()
+        sch = SMDPScheduler(results[0])
+        with pytest.raises(RuntimeError):
+            sch.retune(w2=1.0)
+
+    def test_bank_rejects_duplicate_keys(self):
+        # a family sweep yields identical (lam, w2) keys: must not silently
+        # collapse to the last table — callers pass explicit keys instead
+        _, results = self._bank()
+        with pytest.raises(ValueError, match="duplicate bank key"):
+            SMDPScheduler.bank([results[0], results[0]])
+        bank = SMDPScheduler.bank(
+            [results[0], results[0]],
+            keys=[(0.0,), (1.0,)],
+            key_names=("profile",),
+        )
+        assert len(bank) == 2
