@@ -6,6 +6,8 @@ paper's table/figure conveys.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -49,3 +51,18 @@ def timed(fn: Callable, *args, repeat: int = 1, **kw):
 
 def emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def emit_json(path: str, section: str, payload) -> None:
+    """Merge `payload` under `section` into a JSON artifact file.
+
+    Benchmarks that share one artifact (e.g. BENCH_serving.json in CI) each
+    write their own section; existing sections from earlier steps survive.
+    """
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data[section] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)

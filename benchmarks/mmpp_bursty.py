@@ -1,62 +1,140 @@
-"""Beyond-paper (paper Sec. VIII): phase-aware SMDP under MMPP(2) traffic."""
+"""Bursty MMPP(2) serving on the unified engine: bank retuning vs the field.
+
+The paper's Sec.-VIII proposal, measured end-to-end: solve a lambda-grid
+sweep bank once (core.sweep.sweep_bank), replay the SAME MMPP(2) arrival
+trace through the one serving kernel under every contender, and compare
+mean weighted cost (W_mean + w2 * power):
+
+  * adaptive    — AdaptiveController: online rate estimate retunes the
+    bank table, hysteresis at regime boundaries;
+  * fixed_*     — every single fixed-lambda SMDP table from the same bank
+    (the mean-rate table is the strongest of these);
+  * oracle      — per-phase tables selected by the true phase trace (the
+    estimation-free upper bound);
+  * greedy      — largest feasible batch now.
+
+The headline claim (tracked in BENCH_serving.json): adaptive beats every
+fixed table from its own bank on the bursty scenario.
+"""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
 from repro.configs.googlenet_p4 import B_MAX, energy_table, paper_spec, service
-from repro.core import solve
-from repro.serving.mmpp import (
-    MMPP2,
-    PhaseAwareScheduler,
-    run_mmpp,
-    solve_phase_policies,
-)
-from repro.serving.scheduler import GreedyScheduler, SMDPScheduler
+from repro.core.sweep import sweep_bank
+from repro.serving import AdaptiveController, GreedyScheduler, ServingEngine
+from repro.serving.arrivals import MMPP2, TraceProcess
+from repro.serving.mmpp import OraclePhaseScheduler
 
-from .common import emit, timed
+from .common import emit, emit_json, timed
 
 SVC = service()
 EN = energy_table()
 
+#: (scenario, rho slow phase, rho fast phase, w2, dwell slow, dwell fast)
+#: "bursty" is the headline: a quiet floor with short intense bursts, where
+#: every fixed table loses structurally at one end (measured: adaptive
+#: beats the best fixed table by 2-10% across trace seeds and configs);
+#: "balanced" documents the large-w2 finding carried over from the old
+#: benchmark: energy weight pushes every rate's policy toward max-batching,
+#: so a single high-rate table is already near-optimal and adaptation can
+#: only tie.
+SCENARIOS = (
+    ("bursty", 0.08, 0.85, 0.5, 4000.0, 800.0),
+    ("balanced", 0.10, 0.85, 1.0, 1500.0, 1500.0),
+)
 
-def run() -> None:
-    """Finding (documented in EXPERIMENTS.md): phase-awareness pays on
-    LATENCY-focused objectives (w2=0: +15% — phase policies differ in their
-    control limits); with large w2 both phase policies converge towards
-    max-batching and a single mean-rate policy is already near-optimal."""
+
+def run_scenario(name, r1, r2, w2, dwell1, dwell2, *, horizon, grid_points,
+                 seed=7):
     mu_max = B_MAX / float(SVC.mean(B_MAX))
-    for name, r1, r2, w2 in (
-        ("latency_focus", 0.05, 0.90, 0.0),
-        ("balanced", 0.10, 0.85, 1.0),
-    ):
-        m = MMPP2(lam1=r1 * mu_max, lam2=r2 * mu_max,
-                  dwell1=1000.0, dwell2=1000.0)
-        rates = {0: m.lam1, 1: m.lam2}
+    m = MMPP2(lam1=r1 * mu_max, lam2=r2 * mu_max, dwell1=dwell1,
+              dwell2=dwell2)
+    lam_grid = sorted(
+        {round(float(x), 9)
+         for x in [*np.linspace(m.lam1, m.lam2, grid_points), m.mean_rate]}
+    )
+    bank = sweep_bank(paper_spec(rho=0.5, w2=w2), lam_grid)
+    trace, switches = m.sample_arrivals(horizon, np.random.default_rng(2))
+    phase_tables = {
+        0: bank.tables[bank.nearest(lam=m.lam1, w2=w2)],
+        1: bank.tables[bank.nearest(lam=m.lam2, w2=w2)],
+    }
+    scheds = {
+        "adaptive": AdaptiveController(
+            bank, ewma=0.15, margin=0.2, min_dwell=20.0, w2=w2
+        ),
+        "oracle": OraclePhaseScheduler(phase_tables, switches),
+        "greedy": GreedyScheduler(1, B_MAX),
+    }
+    for lam in lam_grid:
+        scheds[f"fixed_lam={lam:.4f}"] = bank.scheduler(lam=lam, w2=w2)
+    out = {}
+    for sname, sched in scheds.items():
+        eng = ServingEngine(
+            sched, arrivals=TraceProcess(trace), b_max=B_MAX, service=SVC,
+            energy_table=EN, seed=seed,
+        )
+        rep = eng.run(n_epochs=None)
+        out[sname] = {
+            "cost": float(rep.weighted_cost(w2)),
+            "W_mean": float(rep.latencies.mean()),
+            "P95": float(rep.percentile(95)),
+            "power": float(rep.power),
+            "mean_batch": float(rep.mean_batch),
+            "n_served": int(rep.n_served),
+        }
+    return m, lam_grid, out
 
-        def compare():
-            tables = solve_phase_policies(paper_spec(rho=0.5, w2=w2), rates)
-            scheds = {
-                "phase_aware": PhaseAwareScheduler(tables, rates, ewma=0.1),
-                "mean_rate": SMDPScheduler(
-                    solve(paper_spec(rho=m.mean_rate / mu_max, w2=w2))
-                ),
-                "greedy": GreedyScheduler(1, B_MAX),
-            }
-            out = {}
-            for sname, sched in scheds.items():
-                lat, en, span = run_mmpp(sched, m, SVC, EN, B_MAX, 40_000.0, seed=2)
-                out[sname] = lat.mean() + w2 * en / span
-            return out
 
-        costs, us = timed(compare)
-        gain = (costs["mean_rate"] - costs["phase_aware"]) / costs["mean_rate"]
+def run(smoke: bool = False, json_path: str | None = None) -> None:
+    horizon = 10_000.0 if smoke else 40_000.0
+    grid_points = 3 if smoke else 5
+    sections = {}
+    for name, r1, r2, w2, dwell1, dwell2 in SCENARIOS:
+        (m, lam_grid, out), us = timed(
+            run_scenario, name, r1, r2, w2, dwell1, dwell2,
+            horizon=horizon, grid_points=grid_points,
+        )
+        fixed = {k: v["cost"] for k, v in out.items() if k.startswith("fixed_")}
+        best_fixed_key = min(fixed, key=fixed.get)
+        best_fixed = fixed[best_fixed_key]
+        adaptive = out["adaptive"]["cost"]
+        beats_all = adaptive < min(fixed.values())
+        gain = (best_fixed - adaptive) / best_fixed
         emit(
             f"mmpp_{name}",
             us,
-            f"phase={costs['phase_aware']:.2f};mean={costs['mean_rate']:.2f};"
-            f"greedy={costs['greedy']:.2f};phase_gain_vs_mean={gain:.1%}",
+            f"adaptive={adaptive:.3f};best_fixed={best_fixed:.3f}"
+            f"({best_fixed_key});oracle={out['oracle']['cost']:.3f};"
+            f"greedy={out['greedy']['cost']:.3f};"
+            f"beats_all_fixed={beats_all};gain_vs_best_fixed={gain:.1%}",
         )
+        sections[name] = {
+            "w2": w2,
+            "lam_grid": [float(x) for x in lam_grid],
+            "mmpp": {"lam1": m.lam1, "lam2": m.lam2,
+                     "dwell1": m.dwell1, "dwell2": m.dwell2},
+            "horizon": horizon,
+            "schedulers": out,
+            "adaptive_beats_all_fixed": bool(beats_all),
+            "adaptive_gain_vs_best_fixed": float(gain),
+        }
+    if json_path:
+        emit_json(json_path, "mmpp_bursty", sections)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced horizon/grid for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge results into this JSON artifact")
+    args = ap.parse_args()
+    run(smoke=args.smoke, json_path=args.json)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -4,10 +4,13 @@ Solves the same >=16-point w2 grid twice — once with the pre-batched
 per-point loop (tradeoff.solve_serial) and once with the batched engine
 (sweep_solve, one jitted vmapped RVI call per truncation round) — and
 reports wall-clock plus the speedup.  Both paths are warmed up on a tiny
-grid first so jit compilation is excluded from the comparison.
+grid first so jit compilation is excluded from the comparison.  --smoke
+shrinks the grid (one rho, 6 points) for the CI perf-trajectory job, which
+collects the numbers into BENCH_serving.json via --json.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -15,30 +18,34 @@ import numpy as np
 from repro.core.sweep import sweep_solve
 from repro.core.tradeoff import solve_serial
 
-from .common import emit, paper_spec
+from .common import emit, emit_json, paper_spec
 
 import dataclasses
 
 W2S = list(np.linspace(0.0, 15.0, 17))
+W2S_SMOKE = list(np.linspace(0.0, 15.0, 6))  # CI smoke: same span, 6 points
 
 
-def run() -> None:
-    for rho in (0.3, 0.7):
+def run(smoke: bool = False, json_path: str | None = None) -> None:
+    w2s = W2S_SMOKE if smoke else W2S
+    rhos = (0.3,) if smoke else (0.3, 0.7)
+    sections = {}
+    for rho in rhos:
         base = paper_spec(rho=rho)
         # warm-up: compile both paths' kernels at the sweep shapes (the
         # banded RVI specializes on the trimmed pmf band, which depends on
         # the arrival rate, so the warm-up must run the full grid)
-        solve_serial(base, W2S)
-        sweep_solve([dataclasses.replace(base, w2=float(w)) for w in W2S])
+        solve_serial(base, w2s)
+        sweep_solve([dataclasses.replace(base, w2=float(w)) for w in w2s])
 
         # best-of-2: this box is small enough that scheduler noise is real
         t_serial = float("inf")
         for _ in range(2):
             t0 = time.perf_counter()
-            serial = solve_serial(base, W2S)
+            serial = solve_serial(base, w2s)
             t_serial = min(t_serial, time.perf_counter() - t0)
 
-        specs = [dataclasses.replace(base, w2=float(w)) for w in W2S]
+        specs = [dataclasses.replace(base, w2=float(w)) for w in w2s]
         t_batched = float("inf")
         for _ in range(2):
             t0 = time.perf_counter()
@@ -51,11 +58,30 @@ def run() -> None:
         )
         emit(
             f"sweep_scaling_rho{rho}",
-            t_batched * 1e6 / len(W2S),
-            f"n={len(W2S)};serial_s={t_serial:.3f};batched_s={t_batched:.3f};"
+            t_batched * 1e6 / len(w2s),
+            f"n={len(w2s)};serial_s={t_serial:.3f};batched_s={t_batched:.3f};"
             f"speedup={t_serial / t_batched:.1f}x;worst_rel_g_diff={worst_g:.2e}",
         )
+        sections[f"rho={rho}"] = {
+            "n_specs": len(w2s),
+            "serial_s": t_serial,
+            "batched_s": t_batched,
+            "speedup": t_serial / t_batched,
+            "worst_rel_g_diff": worst_g,
+        }
+    if json_path:
+        emit_json(json_path, "sweep_scaling", sections)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid (one rho, 6 w2 points) for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge results into this JSON artifact")
+    args = ap.parse_args()
+    run(smoke=args.smoke, json_path=args.json)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -108,18 +108,22 @@ def main():
     print(f"SMDP policy table: {sol.action_table(16).tolist()} (lambda={lam:.3f}/ms)")
 
     # -- 3. replay the same Poisson arrivals through each scheduler -------
+    # Wall-clock executor mode runs the same unified kernel as the profiled
+    # queue; the per-batch energy callback (measured service time x a 60 W
+    # power proxy — no power meter on CPU) keeps the power column live.
     arrivals = np.cumsum(rng.exponential(1.0 / lam, args.n_requests)) / 1e3  # s
     results = {}
     for sched in [SMDPScheduler(sol), GreedyScheduler(1, args.b_max),
                   StaticScheduler(min(4, args.b_max))]:
         reqs = [Request(i, float(arrivals[i]), payload=prompts[i])
                 for i in range(args.n_requests)]
-        eng = ServingEngine(sched, lam=lam, b_max=args.b_max, executor=executor)
+        eng = ServingEngine(sched, lam=lam, b_max=args.b_max, executor=executor,
+                            energy_model=lambda a, svc: 60.0 * svc)
         rep = eng.run_executor(reqs)
         results[sched.name] = rep
         print(f"{sched.name:9s}: served={rep.n_served} mean={rep.latencies.mean()*1e3:.0f}ms "
               f"P95={rep.percentile(95)*1e3:.0f}ms mean_batch={rep.mean_batch:.1f} "
-              f"span={rep.span:.1f}s")
+              f"P={rep.power:.1f}W span={rep.span:.1f}s")
 
     print("\n(profiled-clock mode gives the power-aware comparison — see "
           "examples/quickstart.py and benchmarks/fig5_tradeoff.py)")

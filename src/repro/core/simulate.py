@@ -1,4 +1,4 @@
-"""Event-driven simulation of the batch-service queue (jax.lax.scan).
+"""Simulation of the batch-service queue: scan fast path + shared kernel.
 
 Simulates the exact SMDP dynamics epoch-by-epoch (decision epochs = service
 completions, or arrivals while idle) under an arbitrary policy table, and
@@ -6,8 +6,15 @@ records *per-request* response times so that latency CDFs / percentiles
 (paper Fig. 6, Table I) can be measured — the analytic evaluator only gives
 averages.
 
-All randomness is jax.random (seeded, reproducible).  The request FIFO is a
-fixed-size circular buffer of arrival timestamps.
+Two entry points, one queue semantics:
+  * simulate()        — the jax.lax.scan specialization for Poisson
+    arrivals: all randomness is jax.random (seeded, reproducible), the
+    request FIFO is a fixed-size circular buffer, and the whole horizon
+    runs as one jitted scan.
+  * simulate_events() — the general path for any arrival process (MMPP,
+    traces, ...): a thin wrapper over the unified serving kernel
+    (repro.serving.engine), so the event-driven queue loop exists exactly
+    once in the repo.  The two are cross-checked in tests/test_serving.py.
 """
 from __future__ import annotations
 
@@ -37,6 +44,49 @@ class SimResult:
 
     def percentile(self, q) -> np.ndarray:
         return np.percentile(self.response_times, q)
+
+
+def simulate_events(
+    policy_table: np.ndarray,
+    service: ServiceModel,
+    energy_table: np.ndarray,
+    arrivals,  # rate / MMPP2 / trace / ArrivalProcess (serving.arrivals)
+    b_max: int,
+    n_epochs: int | None = 100_000,
+    horizon: float | None = None,
+    seed: int = 0,
+) -> SimResult:
+    """General event-driven simulation via the unified serving kernel.
+
+    Same decision-epoch semantics as simulate(), but arrivals come from any
+    serving.arrivals.ArrivalProcess instead of being fixed to Poisson, and
+    the queue loop is the serving engine's — not a duplicate.  l_bar is
+    exact by Little's law on the served set (the scan keeps its independent
+    time-integral as a cross-check).
+    """
+    from repro.serving.arrivals import as_process
+    from repro.serving.engine import ServingEngine
+    from repro.serving.scheduler import SMDPScheduler
+
+    eng = ServingEngine(
+        SMDPScheduler.from_table(policy_table),
+        arrivals=as_process(arrivals),
+        b_max=b_max,
+        service=service,
+        energy_table=energy_table,
+        seed=seed,
+    )
+    rep = eng.run(n_epochs=n_epochs, horizon=horizon)
+    lat_sum = float(rep.latencies.sum())
+    return SimResult(
+        response_times=rep.latencies,
+        w_bar=float(rep.latencies.mean()) if rep.n_served else float("nan"),
+        p_bar=rep.power,
+        l_bar=lat_sum / rep.span if rep.span > 0 else float("nan"),
+        total_time=rep.span,
+        n_served=rep.n_served,
+        n_clipped_arrivals=0,
+    )
 
 
 def _sampler(service: ServiceModel, b_max: int):

@@ -17,7 +17,7 @@ instead of O(#specs x #rounds).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -26,6 +26,35 @@ from .policies import greedy_policy
 from .rvi import relative_value_iteration_batched
 from .smdp import SMDPSpec, build_smdp_batched
 from .solve import SolveResult
+
+
+def sweep_bank(
+    base: SMDPSpec,
+    lams: Sequence[float],
+    w2s: Optional[Sequence[float]] = None,
+    **solve_kw,
+):
+    """Solve a lambda x w2 grid and return it as an SMDPSchedulerBank.
+
+    The serving-side entry point for regime-adaptive scheduling: the bank's
+    (lam, w2)-keyed action tables are what AdaptiveController retunes
+    against as the observed arrival rate (or the energy price) drifts.
+    ``w2s`` defaults to the base spec's w2 (a pure lambda grid).
+    """
+    from repro.serving.scheduler import SMDPScheduler
+
+    lams = list(lams)
+    w2s = [base.w2] if w2s is None else list(w2s)
+    if len(lams) == 0 or len(w2s) == 0:
+        raise ValueError("sweep_bank needs at least one lam and one w2")
+    specs, keys = [], []
+    for lam in lams:
+        for w2 in w2s:
+            specs.append(
+                dataclasses.replace(base, lam=float(lam), w2=float(w2))
+            )
+            keys.append((float(lam), float(w2)))
+    return SMDPScheduler.bank(sweep_solve(specs, **solve_kw), keys=keys)
 
 
 def pad_specs(specs: Sequence[SMDPSpec]) -> List[SMDPSpec]:

@@ -1,8 +1,27 @@
+"""Serving layer: one event-driven kernel, pluggable arrivals, bank retuning.
+
+serving.engine runs every mode (profiled virtual clock, wall-clock
+executor, MMPP / trace replay) through a single kernel; serving.arrivals
+supplies the arrival processes; serving.scheduler holds the policy tables,
+the solved-sweep banks, and the online AdaptiveController; serving.metrics
+streams latency quantiles, power, and the arrival-rate estimate.
+"""
+from .arrivals import (  # noqa: F401
+    ArrivalEvent,
+    ArrivalProcess,
+    MMPP2,
+    MMPP2Process,
+    PoissonProcess,
+    TraceProcess,
+    as_process,
+)
 from .scheduler import (  # noqa: F401
+    AdaptiveController,
     GreedyScheduler,
     SMDPScheduler,
     SMDPSchedulerBank,
     StaticScheduler,
     QPolicyScheduler,
 )
+from .metrics import P2Quantile, RateEstimator, ServingMetrics  # noqa: F401
 from .engine import ServingEngine, Request, EngineReport  # noqa: F401

@@ -1,27 +1,37 @@
-"""Batch-service engine: the paper's queue, run as a serving system.
+"""Batch-service engine: ONE event-driven kernel behind every serving mode.
 
-Two clocks:
-  * mode="profiled"  — service times drawn from the profiled ServiceModel
-    (G_b); this is the paper's M/G^[b]/1 queue driven by a scheduler, usable
-    for any architecture via core.profiles (TPU-roofline l(b), zeta(b)).
-  * mode="executor"  — service time is the measured wall-clock of a real
-    model call (`executor(requests) -> None`); arrivals are replayed in
-    wall-clock time.  examples/serve_llm.py wires a reduced model through
-    this path.
+The paper's queue (M/G^[b]/1 under a batching policy), run as a serving
+system.  A single kernel (`_run_events`) owns the queue / admission / drain
+/ SLO / energy / metrics logic; the modes differ only in their clock and in
+where arrivals come from (serving.arrivals.ArrivalProcess):
 
-Fault tolerance: the engine snapshot()/restore() covers the queue and clock
-(restart-safe); requests carry deadlines and the report counts SLO misses.
+  * run()          — virtual clock, service times drawn from the profiled
+    ServiceModel (G_b); arrivals from any ArrivalProcess (Poisson by
+    default, MMPP2 or a recorded trace via `arrivals=`).
+  * run_executor() — the wall-clock instance of the same loop: service time
+    is the measured duration of a real model call, arrivals are replayed in
+    real time.  The timer/sleeper pair is injectable, so the wall-clock path
+    is testable against the virtual path decision-for-decision.
+
+Every mode streams per-batch observations into ServingMetrics (P² latency
+quantiles, power) and supports snapshot()/restore() — queue, clock,
+RNG, scheduler and arrival-process state — so a restored engine reproduces
+an uninterrupted run exactly, in every arrival mode.  Energy is accounted
+whenever a source is available: a zeta(a) `energy_table` or a per-batch
+`energy_model(a, service_time)` callback (the executor-mode option).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.core.service_models import ServiceModel
 
+from .arrivals import ArrivalProcess, PoissonProcess, TraceProcess, as_process
+from .metrics import ServingMetrics
 from .scheduler import Scheduler
 
 
@@ -41,6 +51,10 @@ class EngineReport:
     n_served: int
     n_slo_miss: int
     mean_batch: float
+    batch_sizes: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64)
+    )
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def power(self) -> float:
@@ -49,142 +63,253 @@ class EngineReport:
     def percentile(self, q):
         return np.percentile(self.latencies, q) if len(self.latencies) else np.nan
 
+    def weighted_cost(self, w2: float) -> float:
+        """The paper's objective: mean latency + w2 * power.
+
+        w2 = 0 is pure latency and stays finite even when no energy source
+        was configured (power = NaN).
+        """
+        w = float(np.mean(self.latencies)) if len(self.latencies) else float("nan")
+        return w if w2 == 0 else w + w2 * self.power
+
 
 class ServingEngine:
     def __init__(
         self,
         scheduler: Scheduler,
         *,
-        lam: float,
         b_max: int,
+        lam: Optional[float] = None,
+        arrivals: Optional[ArrivalProcess] = None,
         service: Optional[ServiceModel] = None,
         energy_table: Optional[np.ndarray] = None,  # zeta(a), a = 0..b_max
+        energy_model: Optional[Callable[[int, float], float]] = None,
         executor: Optional[Callable[[List[Request]], None]] = None,
         slo: Optional[float] = None,  # relative deadline per request
         seed: int = 0,
+        timer: Callable[[], float] = time.perf_counter,
+        sleeper: Callable[[float], None] = time.sleep,
     ):
         if (service is None) == (executor is None):
             raise ValueError("exactly one of service= or executor= required")
+        if arrivals is None:
+            if lam is None:
+                raise ValueError("either lam= or arrivals= required")
+            arrivals = PoissonProcess(lam)
+        else:
+            arrivals = as_process(arrivals)
         self.scheduler = scheduler
-        self.lam = lam
+        self.arrivals = arrivals
+        self.lam = float(lam) if lam is not None else arrivals.mean_rate
         self.b_max = b_max
         self.service = service
         self.energy_table = energy_table
+        self.energy_model = energy_model
         self.executor = executor
         self.slo = slo
         self.rng = np.random.default_rng(seed)
         self.queue: List[Request] = []
         self.t = 0.0
         self.next_rid = 0
+        self._pending: Optional[Request] = None  # peeked, not yet admitted
+        self._timer = timer
+        self._sleeper = sleeper
 
     # --- state for restart (fault tolerance) ---------------------------
     def snapshot(self) -> dict:
         return {
             "t": self.t,
             "queue": [dataclasses.asdict(r) for r in self.queue],
+            "pending": (
+                dataclasses.asdict(self._pending) if self._pending else None
+            ),
             "next_rid": self.next_rid,
             "rng": self.rng.bit_generator.state,
             "sched": self.scheduler.snapshot(),
+            "arrivals": self.arrivals.snapshot(),
         }
 
     def restore(self, snap: dict) -> None:
         self.t = snap["t"]
         self.queue = [Request(**r) for r in snap["queue"]]
+        self._pending = Request(**snap["pending"]) if snap["pending"] else None
         self.next_rid = snap["next_rid"]
         self.rng.bit_generator.state = snap["rng"]
         self.scheduler.restore(snap["sched"])
+        self.arrivals.restore(snap["arrivals"])
 
-    # --- simulated (profiled) clock -------------------------------------
-    def _arrive(self, t: float, payload=None) -> None:
-        dl = t + self.slo if self.slo else None
-        self.queue.append(Request(self.next_rid, t, dl, payload))
-        self.next_rid += 1
+    # --- arrival plumbing ------------------------------------------------
+    def _to_request(self, ev) -> Request:
+        rid = ev.rid if ev.rid is not None else self.next_rid
+        deadline = ev.deadline
+        if deadline is None and self.slo is not None:
+            deadline = ev.time + self.slo
+        self.next_rid = max(self.next_rid, rid + 1)
+        return Request(rid, ev.time, deadline, ev.payload)
 
-    def run(self, n_epochs: int = 100_000) -> EngineReport:
-        """Profiled-clock batch service loop (decision-epoch faithful)."""
-        assert self.service is not None
+    def _peek(self) -> Optional[Request]:
+        """Next un-admitted arrival (generated lazily, held until due)."""
+        if self._pending is None:
+            ev = self.arrivals.next(self.rng)
+            if ev is not None:
+                self._pending = self._to_request(ev)
+        return self._pending
+
+    def _admit(self, r: Request) -> None:
+        self.queue.append(r)
+        observe = getattr(self.scheduler, "observe_arrival", None)
+        if observe is not None:
+            observe(r.arrival)
+
+    def _zeta(self, a: int, svc: float) -> Optional[float]:
+        if self.energy_model is not None:
+            return float(self.energy_model(a, svc))
+        if self.energy_table is not None:
+            return float(self.energy_table[a])
+        return None
+
+    # --- the unified kernel ----------------------------------------------
+    def _run_events(
+        self,
+        *,
+        max_epochs: Optional[int],
+        horizon: Optional[float],
+        wall: bool,
+        poll: float,
+        drain: bool,
+    ) -> EngineReport:
+        """One event loop for every mode.
+
+        Virtual clock (wall=False): time jumps between arrivals and sampled
+        service completions.  Wall clock (wall=True): `now` is the injected
+        timer, idle waits sleep, and service time is the executor's measured
+        duration.  Everything else — admission, decision epochs, the capped
+        drain, SLO / energy / metrics accounting — is shared.
+        """
         lat: List[float] = []
+        batches: List[int] = []
+        metrics = ServingMetrics()
         energy = 0.0
-        batches = []
+        have_energy = False
         slo_miss = 0
         t0 = self.t
-        for _ in range(n_epochs):
+        wall0 = self._timer() if wall else 0.0
+        epochs = 0
+        while max_epochs is None or epochs < max_epochs:
+            now = t0 + (self._timer() - wall0) if wall else self.t
+            # admit every arrival due by `now` (bounded by the horizon)
+            while True:
+                nxt = self._peek()
+                if (
+                    nxt is None
+                    or nxt.arrival > now
+                    or (horizon is not None and nxt.arrival >= horizon)
+                ):
+                    break
+                self._admit(nxt)
+                self._pending = None
             a = self.scheduler.decide(len(self.queue))
-            a = min(a, len(self.queue))
-            if a <= 0:
-                dt = self.rng.exponential(1.0 / self.lam)
-                self.t += dt
-                self._arrive(self.t)
-                continue
-            svc = float(self.service.sample(a, self.rng, 1)[0])
-            done = self.t + svc
+            a = max(0, min(a, len(self.queue), self.b_max))
+            epochs += 1
+            if a == 0:
+                nxt = self._peek()
+                live = nxt is not None and (horizon is None or nxt.arrival < horizon)
+                if live:
+                    if wall:
+                        self._sleeper(min(poll, max(0.0, nxt.arrival - now)))
+                    else:
+                        self.t = nxt.arrival
+                    continue
+                if not self.queue or not drain:
+                    break
+                a = min(len(self.queue), self.b_max)  # capped tail drain
             batch, self.queue = self.queue[:a], self.queue[a:]
+            if wall:
+                start = t0 + (self._timer() - wall0)  # not `now`: exclude
+                self.executor(batch)                  # scheduling overhead
+                done = t0 + (self._timer() - wall0)
+                svc = done - start
+            else:
+                svc = float(self.service.sample(a, self.rng, 1)[0])
+                done = self.t + svc
+            self.t = done
+            zeta = self._zeta(a, svc)
+            if zeta is not None:
+                energy += zeta
+                have_energy = True
+            batch_lats = []
             for r in batch:
-                lat.append(done - r.arrival)
+                batch_lats.append(done - r.arrival)
                 if r.deadline is not None and done > r.deadline:
                     slo_miss += 1
-            if self.energy_table is not None:
-                energy += float(self.energy_table[a])
+            lat.extend(batch_lats)
             batches.append(a)
-            # arrivals during service
-            n_arr = self.rng.poisson(self.lam * svc)
-            offs = np.sort(self.rng.uniform(0.0, svc, size=n_arr))
-            for o in offs:
-                self._arrive(self.t + o)
-            self.t = done
+            metrics.observe_batch(
+                batch_lats,
+                zeta if zeta is not None else float("nan"),
+                done - t0,
+            )
         return EngineReport(
             latencies=np.asarray(lat),
-            energy=energy,
+            energy=energy if have_energy else float("nan"),
             span=self.t - t0,
             n_served=len(lat),
             n_slo_miss=slo_miss,
             mean_batch=float(np.mean(batches)) if batches else 0.0,
+            batch_sizes=np.asarray(batches, dtype=np.int64),
+            metrics=metrics.report(),
         )
 
-    # --- wall-clock executor mode ---------------------------------------
+    # --- public modes ----------------------------------------------------
+    def run(
+        self,
+        n_epochs: Optional[int] = 100_000,
+        *,
+        horizon: Optional[float] = None,
+        drain: Optional[bool] = None,
+    ) -> EngineReport:
+        """Virtual-clock batch service loop (decision-epoch faithful).
+
+        Runs for `n_epochs` decision epochs, or — with n_epochs=None — until
+        the arrival stream ends (trace exhausted / `horizon` reached) and the
+        queue has drained in b_max-capped batches.
+        """
+        if self.service is None:
+            raise RuntimeError("run() needs service=; use run_executor()")
+        if n_epochs is None and horizon is None and not isinstance(
+            self.arrivals, TraceProcess
+        ):
+            raise ValueError("unbounded run: pass n_epochs= or horizon=")
+        if drain is None:
+            drain = n_epochs is None
+        return self._run_events(
+            max_epochs=n_epochs, horizon=horizon, wall=False, poll=0.0,
+            drain=drain,
+        )
+
     def run_executor(
         self, requests: List[Request], *, poll: float = 1e-4
     ) -> EngineReport:
         """Replay `requests` (arrival times in seconds) against a real model.
 
-        The scheduler is consulted whenever the server is idle; service time
-        is the executor's measured wall time.
+        The wall-clock instance of the same kernel: the scheduler is
+        consulted whenever the server is idle; service time is the
+        executor's measured wall time.  Replaces the engine's arrival
+        process with a trace of the given requests.  Arrival times are
+        relative to THIS call: the trace is shifted onto the engine clock,
+        so reusing an engine for a second replay behaves like a fresh one
+        (while self.t stays monotone for snapshot coherence).
         """
-        assert self.executor is not None
-        pending = sorted(requests, key=lambda r: r.arrival)
-        lat: List[float] = []
-        batches = []
-        slo_miss = 0
-        start = time.perf_counter()
-        i = 0
-        while i < len(pending) or self.queue:
-            now = time.perf_counter() - start
-            while i < len(pending) and pending[i].arrival <= now:
-                self.queue.append(pending[i])
-                i += 1
-            a = self.scheduler.decide(len(self.queue))
-            a = min(a, len(self.queue))
-            if a <= 0:
-                if i < len(pending):
-                    time.sleep(min(poll, max(0.0, pending[i].arrival - now)))
-                    continue
-                a = len(self.queue)  # drain tail
-                if a == 0:
-                    break
-            batch, self.queue = self.queue[:a], self.queue[a:]
-            self.executor(batch)
-            done = time.perf_counter() - start
-            for r in batch:
-                lat.append(done - r.arrival)
-                if r.deadline is not None and done > r.deadline:
-                    slo_miss += 1
-            batches.append(a)
-        span = time.perf_counter() - start
-        return EngineReport(
-            latencies=np.asarray(lat),
-            energy=float("nan"),
-            span=span,
-            n_served=len(lat),
-            n_slo_miss=slo_miss,
-            mean_batch=float(np.mean(batches)) if batches else 0.0,
+        if self.executor is None:
+            raise RuntimeError("run_executor() needs executor=; use run()")
+        trace = TraceProcess(requests)
+        if self.t != 0.0:
+            for ev in trace.events:
+                ev.time += self.t
+                if ev.deadline is not None:
+                    ev.deadline += self.t
+        self.arrivals = trace
+        self._pending = None
+        return self._run_events(
+            max_epochs=None, horizon=None, wall=True, poll=poll, drain=True
         )

@@ -1,12 +1,16 @@
-"""Serving metrics: streaming latency quantiles + power integration.
+"""Serving metrics: streaming latency quantiles, power, arrival-rate estimation.
 
 P² streaming quantile estimation (Jain & Chlamtac) so that a 1000-node
-fleet can track P50/P95/P99 without retaining per-request samples.
+fleet can track P50/P95/P99 without retaining per-request samples; every
+engine mode streams its batches through ServingMetrics.  RateEstimator is
+the online lambda-hat (EWMA of inter-arrival gaps, or a sliding window)
+that feeds the bank-retuning AdaptiveController in serving.scheduler.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -66,6 +70,82 @@ class P2Quantile:
         if len(self._init) < 5:
             return float(np.percentile(self._init, self.q * 100)) if self._init else float("nan")
         return self.heights[2]
+
+
+class RateEstimator:
+    """Online arrival-rate estimator lambda-hat from observed arrival times.
+
+    Two modes:
+      * EWMA (default): exponentially weighted mean of inter-arrival gaps,
+        rate = 1 / gap_bar.  Averaging gaps (not their inverses) keeps the
+        estimator unbiased for Poisson input — E[gap] = 1/lambda, while
+        E[1/gap] diverges.
+      * window=N: sliding window of the last N arrival times,
+        rate = (N - 1) / (t_last - t_first).
+    """
+
+    def __init__(
+        self,
+        *,
+        ewma: float = 0.1,
+        window: Optional[int] = None,
+        init: Optional[float] = None,
+        min_gap: float = 1e-12,
+    ):
+        if not 0.0 < ewma <= 1.0:
+            raise ValueError(f"ewma must be in (0, 1], got {ewma}")
+        if window is not None and window < 2:
+            raise ValueError("window needs >= 2 arrivals to estimate a rate")
+        self.ewma = ewma
+        self.window = window
+        self.min_gap = min_gap
+        self._init_rate = init
+        self._gap_bar: Optional[float] = 1.0 / init if init else None
+        self._last: Optional[float] = None
+        self._times: collections.deque = collections.deque(
+            maxlen=window if window is not None else 1
+        )
+        self.n_observed = 0
+
+    def observe(self, t: float) -> None:
+        self.n_observed += 1
+        if self.window is not None:
+            self._times.append(t)
+            return
+        if self._last is not None:
+            gap = max(t - self._last, self.min_gap)
+            if self._gap_bar is None:
+                self._gap_bar = gap
+            else:
+                self._gap_bar = (1 - self.ewma) * self._gap_bar + self.ewma * gap
+        self._last = t
+
+    @property
+    def rate(self) -> float:
+        if self.window is not None:
+            if len(self._times) >= 2:
+                span = self._times[-1] - self._times[0]
+                if span > 0:
+                    return (len(self._times) - 1) / span
+            return self._init_rate if self._init_rate else float("nan")
+        if self._gap_bar is None:
+            return self._init_rate if self._init_rate else float("nan")
+        return 1.0 / max(self._gap_bar, self.min_gap)
+
+    def snapshot(self) -> dict:
+        return {
+            "gap_bar": self._gap_bar,
+            "last": self._last,
+            "times": list(self._times),
+            "n_observed": self.n_observed,
+        }
+
+    def restore(self, state: dict) -> None:
+        self._gap_bar = state["gap_bar"]
+        self._last = state["last"]
+        self._times.clear()
+        self._times.extend(state["times"])
+        self.n_observed = state["n_observed"]
 
 
 @dataclasses.dataclass

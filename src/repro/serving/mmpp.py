@@ -1,64 +1,33 @@
-"""Bursty traffic: MMPP(2) arrivals + phase-aware SMDP scheduling.
+"""Bursty traffic: MMPP(2) phase handling on top of the unified engine.
 
 The paper (Sec. VIII) proposes handling Markov-modulated Poisson traffic as
 "temporal compositions of Poisson process periods ... by detecting phases
-and applying the proposed method to each period."  This module implements
-exactly that:
+and applying the proposed method to each period."  The arrival process
+itself lives in serving.arrivals (MMPP2 / MMPP2Process) and runs through
+the one event-driven kernel in serving.engine; this module keeps the
+phase-aware scheduling side:
 
-  * MMPP2 — a two-phase Markov-modulated Poisson arrival process;
-  * PhaseAwareScheduler — one SMDP policy table per phase, an online
-    rate estimator (EWMA of inter-arrival times) that selects the table;
-  * solve_phase_policies — solves the SMDP once per phase rate offline.
+  * PhaseAwareScheduler — a thin shim over SMDPSchedulerBank /
+    AdaptiveController: one SMDP table per phase rate, selected online by a
+    rate estimator (detect the phase, apply the per-phase policy);
+  * OraclePhaseScheduler — the upper bound: reads the true phase trace
+    instead of estimating it;
+  * solve_phase_policies — solves the SMDP once per phase rate offline;
+  * run_mmpp — back-compat wrapper: an MMPP2 run of the unified engine.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.smdp import SMDPSpec
 from repro.core.solve import solve
 
-from .scheduler import Scheduler
-
-
-@dataclasses.dataclass(frozen=True)
-class MMPP2:
-    """Two-phase MMPP: rates lam1 < lam2, mean phase dwell times t1, t2."""
-
-    lam1: float
-    lam2: float
-    dwell1: float
-    dwell2: float
-
-    @property
-    def mean_rate(self) -> float:
-        p1 = self.dwell1 / (self.dwell1 + self.dwell2)
-        return p1 * self.lam1 + (1 - p1) * self.lam2
-
-    def sample_arrivals(self, horizon: float, rng: np.random.Generator):
-        """Arrival times in [0, horizon) and the phase trace."""
-        t = 0.0
-        phase = 0
-        arrivals: List[float] = []
-        phases: List[Tuple[float, int]] = [(0.0, 0)]
-        next_switch = rng.exponential(self.dwell1)
-        while t < horizon:
-            lam = self.lam1 if phase == 0 else self.lam2
-            dt = rng.exponential(1.0 / lam)
-            if t + dt >= next_switch:
-                t = next_switch
-                phase ^= 1
-                phases.append((t, phase))
-                next_switch = t + rng.exponential(
-                    self.dwell1 if phase == 0 else self.dwell2
-                )
-                continue
-            t += dt
-            if t < horizon:
-                arrivals.append(t)
-        return np.asarray(arrivals), phases
+from .arrivals import MMPP2, MMPP2Process  # noqa: F401  (re-export)
+from .metrics import RateEstimator
+from .scheduler import AdaptiveController, Scheduler, SMDPSchedulerBank
 
 
 def solve_phase_policies(base: SMDPSpec, rates: Dict[int, float]):
@@ -70,39 +39,70 @@ def solve_phase_policies(base: SMDPSpec, rates: Dict[int, float]):
     return tables
 
 
-class PhaseAwareScheduler(Scheduler):
-    """Switches between per-phase SMDP tables via an EWMA rate estimator."""
+class PhaseAwareScheduler(AdaptiveController):
+    """Per-phase SMDP tables selected by an EWMA rate estimator.
+
+    A thin shim: the phase tables become a lambda-keyed SMDPSchedulerBank
+    and AdaptiveController does the estimation + table swapping (margin 0 =
+    always track the nearest phase rate, the original behaviour).
+    """
 
     name = "smdp_phase"
 
     def __init__(self, tables: Dict[int, np.ndarray], rates: Dict[int, float],
                  ewma: float = 0.2):
-        self.tables = {k: np.asarray(v, dtype=np.int64) for k, v in tables.items()}
-        self.rates = rates
-        self.ewma = ewma
-        self._rate_est = float(np.mean(list(rates.values())))
-        self._last_arrival = None
-
-    def observe_arrival(self, t: float) -> None:
-        if self._last_arrival is not None:
-            gap = max(t - self._last_arrival, 1e-9)
-            inst = 1.0 / gap
-            self._rate_est = (1 - self.ewma) * self._rate_est + self.ewma * inst
-        self._last_arrival = t
+        bank = SMDPSchedulerBank(
+            {(float(rates[k]),): np.asarray(tables[k], dtype=np.int64)
+             for k in rates},
+            key_names=("lam",),
+        )
+        self._phase_of = {(float(lam),): phase for phase, lam in rates.items()}
+        init = float(np.mean(list(rates.values())))
+        super().__init__(
+            bank,
+            estimator=RateEstimator(ewma=ewma, init=init),
+            margin=0.0,
+            min_dwell=0.0,
+            init_rate=init,
+        )
 
     def current_phase(self) -> int:
-        return min(self.rates, key=lambda k: abs(self.rates[k] - self._rate_est))
+        return self._phase_of[self.key]
+
+
+class OraclePhaseScheduler(Scheduler):
+    """Phase-aware with the true phase trace (estimation-free upper bound)."""
+
+    name = "smdp_oracle"
+
+    def __init__(
+        self,
+        tables: Dict[int, np.ndarray],
+        switch_log: Sequence[Tuple[float, int]],
+    ):
+        self.tables = {
+            k: np.asarray(v, dtype=np.int64) for k, v in tables.items()
+        }
+        log = sorted(switch_log)
+        self._switch_times = np.asarray([t for t, _ in log])
+        self._phases = [p for _, p in log]
+        self.phase = self._phases[0] if self._phases else 0
+
+    def observe_arrival(self, t: float) -> None:
+        if not self._phases:
+            return
+        i = int(np.searchsorted(self._switch_times, t, side="right")) - 1
+        self.phase = self._phases[max(i, 0)]
 
     def decide(self, queue_len: int) -> int:
-        table = self.tables[self.current_phase()]
+        table = self.tables[self.phase]
         return int(table[min(queue_len, len(table) - 1)])
 
     def snapshot(self) -> dict:
-        return {"rate_est": self._rate_est, "last": self._last_arrival}
+        return {"phase": self.phase}
 
     def restore(self, state: dict) -> None:
-        self._rate_est = state["rate_est"]
-        self._last_arrival = state["last"]
+        self.phase = state["phase"]
 
 
 def run_mmpp(
@@ -114,34 +114,21 @@ def run_mmpp(
     horizon: float,
     seed: int = 0,
 ):
-    """Event-driven MMPP batch-service run; returns (latencies, energy, span)."""
-    rng = np.random.default_rng(seed)
-    arrivals, _ = mmpp.sample_arrivals(horizon, rng)
-    lat: List[float] = []
-    energy = 0.0
-    queue: List[float] = []
-    i = 0
-    t = 0.0
-    n = len(arrivals)
-    while i < n or queue:
-        # admit everything that has arrived by t
-        while i < n and arrivals[i] <= t:
-            queue.append(arrivals[i])
-            if hasattr(scheduler, "observe_arrival"):
-                scheduler.observe_arrival(arrivals[i])
-            i += 1
-        a = min(scheduler.decide(len(queue)), len(queue))
-        if a <= 0:
-            if i < n:
-                t = arrivals[i]
-                continue
-            a = min(len(queue), b_max)  # drain
-            if a == 0:
-                break
-        svc = float(service.sample(a, rng, 1)[0])
-        done = t + svc
-        batch, queue = queue[:a], queue[a:]
-        lat.extend(done - x for x in batch)
-        energy += float(energy_table[a])
-        t = done
-    return np.asarray(lat), energy, t
+    """MMPP batch-service run on the unified engine kernel.
+
+    Back-compat wrapper (returns (latencies, energy, span)); new code
+    should build ServingEngine(arrivals=MMPP2Process(mmpp), ...) directly
+    and keep the full EngineReport.
+    """
+    from .engine import ServingEngine
+
+    eng = ServingEngine(
+        scheduler,
+        arrivals=MMPP2Process(mmpp),
+        b_max=b_max,
+        service=service,
+        energy_table=energy_table,
+        seed=seed,
+    )
+    rep = eng.run(n_epochs=None, horizon=horizon)
+    return rep.latencies, rep.energy, rep.span

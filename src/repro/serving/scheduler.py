@@ -5,9 +5,11 @@ or arrival-at-idle): given s queued requests, what batch size now?
 `0` means wait for more arrivals.
 
 A solved sweep (core.sweep.sweep_solve over a lambda / w2 grid) turns into
-an SMDPSchedulerBank via SMDPScheduler.bank(): a keyed table bank the
-serving layer hot-swaps when traffic or the energy-price weight shifts,
-without re-solving online.
+an SMDPSchedulerBank via SMDPScheduler.bank() or core.sweep.sweep_bank():
+a keyed table bank the serving layer hot-swaps when traffic or the
+energy-price weight shifts, without re-solving online.  AdaptiveController
+closes the loop: an online arrival-rate estimate retunes the active table
+against the bank, with hysteresis at regime boundaries.
 """
 from __future__ import annotations
 
@@ -127,20 +129,48 @@ class SMDPSchedulerBank:
         for key in self.tables:
             if len(key) != len(self.key_names):
                 raise ValueError(f"key {key} does not match {self.key_names}")
+        # the key set is immutable after construction: cache the sorted key
+        # list and point matrix once, so nearest()/distance() stay cheap on
+        # the per-arrival serving hot path
+        self._sorted_keys = sorted(self.tables)
+        self._key_index = {k: i for i, k in enumerate(self._sorted_keys)}
+        self._pts = np.array(self._sorted_keys, dtype=np.float64)
         # per-dimension scale for the nearest-key metric (range, not |max|,
         # so sweeps over a narrow band around a large value still resolve)
-        arr = np.array(sorted(self.tables), dtype=np.float64)
-        span = arr.max(axis=0) - arr.min(axis=0)
+        span = self._pts.max(axis=0) - self._pts.min(axis=0)
         self._scales = np.where(span > 0, span, 1.0)
 
     def __len__(self) -> int:
         return len(self.tables)
 
     def keys(self):
-        return sorted(self.tables)
+        return list(self._sorted_keys)
+
+    def distances(self, **coords: float) -> np.ndarray:
+        """Scaled distance of every key (in keys() order) to the point.
+
+        The one metric behind nearest()/distance(); AdaptiveController's
+        hysteresis reads the whole vector once per arrival instead of
+        recomputing norms per key.
+        """
+        dims, target = self._resolve_coords(coords)
+        pts = self._pts[:, dims]
+        return np.linalg.norm(
+            (pts - target[None, :]) / self._scales[dims], axis=1
+        )
 
     def nearest(self, **coords: float) -> Tuple[float, ...]:
         """Key closest to the given operating point (subset of dims OK)."""
+        return self._sorted_keys[int(np.argmin(self.distances(**coords)))]
+
+    def distance(self, key: Tuple[float, ...], **coords: float) -> float:
+        """Scaled distance of a bank key to an operating point."""
+        key = tuple(float(v) for v in key)
+        if key not in self.tables:
+            raise KeyError(f"{key} not in bank")
+        return float(self.distances(**coords)[self._key_index[key]])
+
+    def _resolve_coords(self, coords: Dict[str, float]):
         unknown = set(coords) - set(self.key_names)
         if unknown:
             raise ValueError(f"unknown key dims {unknown}; have {self.key_names}")
@@ -148,10 +178,7 @@ class SMDPSchedulerBank:
             raise ValueError("need at least one coordinate")
         dims = [i for i, n in enumerate(self.key_names) if n in coords]
         target = np.array([coords[self.key_names[i]] for i in dims])
-        keys = sorted(self.tables)
-        pts = np.array(keys, dtype=np.float64)[:, dims]
-        d = np.linalg.norm((pts - target[None, :]) / self._scales[dims], axis=1)
-        return keys[int(np.argmin(d))]
+        return dims, target
 
     def scheduler(self, **coords: float) -> SMDPScheduler:
         """Mint an SMDPScheduler on the nearest entry, wired for retune()."""
@@ -159,6 +186,98 @@ class SMDPSchedulerBank:
         sch = SMDPScheduler.from_table(self.tables[key])
         sch._bank = self
         return sch
+
+
+class AdaptiveController(Scheduler):
+    """Online regime adaptation: rate estimator -> bank retune, hysteresis.
+
+    Wraps a bank-minted SMDPScheduler.  Every observed arrival updates a
+    RateEstimator (serving.metrics); when the estimate drifts toward a
+    different bank entry the controller retunes the scheduler onto it —
+    guarded by a relative-margin hysteresis (the candidate key must be
+    closer than (1 - margin) x the current key's distance) and a minimum
+    dwell time between switches, so the table does not thrash at regime
+    boundaries.  This is the paper's Sec.-VIII "detect the phase, apply the
+    per-phase policy" run against a solved lambda x w2 sweep bank
+    (core.sweep.sweep_bank) instead of hand-picked phase tables.
+    """
+
+    name = "smdp_adaptive"
+
+    def __init__(
+        self,
+        bank: "SMDPSchedulerBank",
+        *,
+        estimator=None,
+        ewma: float = 0.1,
+        margin: float = 0.25,
+        min_dwell: float = 0.0,
+        init_rate: Optional[float] = None,
+        **fixed: float,  # pinned non-rate coords, e.g. w2=1.0
+    ):
+        from .metrics import RateEstimator
+
+        if "lam" not in bank.key_names:
+            raise ValueError(f"bank has no 'lam' axis: {bank.key_names}")
+        lam_keys = sorted({k[bank.key_names.index("lam")] for k in bank.keys()})
+        if init_rate is None:
+            init_rate = float(np.mean(lam_keys))
+        self.bank = bank
+        self.fixed = {k: float(v) for k, v in fixed.items()}
+        self.estimator = estimator if estimator is not None else RateEstimator(
+            ewma=ewma, init=init_rate
+        )
+        self.margin = margin
+        self.min_dwell = min_dwell
+        rate0 = self.estimator.rate
+        if not np.isfinite(rate0):  # custom estimator with no data yet
+            rate0 = init_rate
+        self.key = bank.nearest(lam=rate0, **self.fixed)
+        self.scheduler = SMDPScheduler.from_table(bank.tables[self.key])
+        self.scheduler._bank = bank
+        self._last_switch = -float("inf")
+        self.n_switches = 0
+
+    def observe_arrival(self, t: float) -> None:
+        self.estimator.observe(t)
+        self._maybe_retune(t)
+
+    def _maybe_retune(self, t: float) -> None:
+        if t - self._last_switch < self.min_dwell:
+            return
+        est = self.estimator.rate
+        if not np.isfinite(est):
+            return
+        d = self.bank.distances(lam=est, **self.fixed)
+        i_cand = int(np.argmin(d))
+        cand = self.bank._sorted_keys[i_cand]
+        if cand == self.key:
+            return
+        d_cur = float(d[self.bank._key_index[self.key]])
+        d_cand = float(d[i_cand])
+        if d_cand < (1.0 - self.margin) * d_cur:
+            self.key = cand
+            self.scheduler.swap_table(self.bank.tables[cand])
+            self._last_switch = t
+            self.n_switches += 1
+
+    def decide(self, queue_len: int) -> int:
+        return self.scheduler.decide(queue_len)
+
+    def snapshot(self) -> dict:
+        return {
+            "estimator": self.estimator.snapshot(),
+            "key": self.key,
+            "last_switch": self._last_switch,
+            "n_switches": self.n_switches,
+        }
+
+    def restore(self, state: dict) -> None:
+        self.estimator.restore(state["estimator"])
+        self.key = tuple(float(v) for v in state["key"])
+        self.scheduler.swap_table(self.bank.tables[self.key])
+        self._last_switch = state["last_switch"]
+        self.n_switches = state["n_switches"]
 
 
 class StaticScheduler(Scheduler):

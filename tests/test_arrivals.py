@@ -1,0 +1,162 @@
+"""Arrival processes + online rate estimation (serving.arrivals / .metrics)."""
+import numpy as np
+import pytest
+
+from repro.serving.arrivals import (
+    ArrivalProcess,
+    MMPP2,
+    MMPP2Process,
+    PoissonProcess,
+    TraceProcess,
+    as_process,
+)
+from repro.serving.metrics import RateEstimator
+
+
+class TestPoissonProcess:
+    def test_rate(self):
+        proc = PoissonProcess(2.5)
+        rng = np.random.default_rng(0)
+        times = [proc.next(rng).time for _ in range(20_000)]
+        gaps = np.diff([0.0] + times)
+        np.testing.assert_allclose(gaps.mean(), 1 / 2.5, rtol=0.05)
+        assert proc.mean_rate == 2.5
+
+    def test_snapshot_resumes_identically(self):
+        proc = PoissonProcess(1.0)
+        rng = np.random.default_rng(1)
+        for _ in range(100):
+            proc.next(rng)
+        snap, rng_state = proc.snapshot(), rng.bit_generator.state
+        a = [proc.next(rng).time for _ in range(50)]
+        proc.restore(snap)
+        rng.bit_generator.state = rng_state
+        b = [proc.next(rng).time for _ in range(50)]
+        assert a == b
+
+
+class TestMMPP2Process:
+    def test_matches_eager_sample_arrivals(self):
+        """The lazy generator and the eager trace share one draw sequence."""
+        m = MMPP2(lam1=0.5, lam2=4.0, dwell1=200.0, dwell2=50.0)
+        horizon = 5_000.0
+        eager, switches = m.sample_arrivals(horizon, np.random.default_rng(3))
+        proc = MMPP2Process(m)
+        rng = np.random.default_rng(3)
+        lazy = []
+        while True:
+            t = proc.next(rng).time
+            if t >= horizon:
+                break
+            lazy.append(t)
+        np.testing.assert_array_equal(eager, np.asarray(lazy))
+        assert switches[0] == (0.0, 0)
+        assert all(p0 != p1 for (_, p0), (_, p1) in zip(switches, switches[1:]))
+
+    def test_mean_rate(self):
+        m = MMPP2(lam1=0.5, lam2=2.5, dwell1=300.0, dwell2=100.0)
+        np.testing.assert_allclose(m.mean_rate, (3 * 0.5 + 1 * 2.5) / 4)
+
+    def test_snapshot_restores_switch_log(self):
+        m = MMPP2(lam1=0.2, lam2=3.0, dwell1=10.0, dwell2=10.0)
+        proc = MMPP2Process(m, log_switches=True)
+        rng = np.random.default_rng(5)
+        for _ in range(300):
+            proc.next(rng)
+        snap, rng_state = proc.snapshot(), rng.bit_generator.state
+        for _ in range(300):
+            proc.next(rng)
+        proc.restore(snap)
+        rng.bit_generator.state = rng_state
+        for _ in range(300):
+            proc.next(rng)
+        times = [t for t, _ in proc.switch_log]
+        assert times == sorted(times) and len(set(times)) == len(times)
+
+    def test_snapshot_resumes_identically(self):
+        m = MMPP2(lam1=0.2, lam2=3.0, dwell1=30.0, dwell2=30.0)
+        proc = MMPP2Process(m)
+        rng = np.random.default_rng(7)
+        for _ in range(500):
+            proc.next(rng)
+        snap, rng_state = proc.snapshot(), rng.bit_generator.state
+        a = [proc.next(rng).time for _ in range(200)]
+        proc.restore(snap)
+        rng.bit_generator.state = rng_state
+        b = [proc.next(rng).time for _ in range(200)]
+        assert a == b
+
+
+class TestTraceProcess:
+    def test_sorts_and_exhausts(self):
+        proc = TraceProcess([3.0, 1.0, 2.0])
+        rng = np.random.default_rng(0)
+        assert [proc.next(rng).time for _ in range(3)] == [1.0, 2.0, 3.0]
+        assert proc.next(rng) is None
+
+    def test_request_attributes_pass_through(self):
+        from repro.serving.engine import Request
+
+        reqs = [Request(5, 1.5, deadline=9.0, payload="p")]
+        ev = TraceProcess(reqs).next(np.random.default_rng(0))
+        assert (ev.time, ev.rid, ev.deadline, ev.payload) == (1.5, 5, 9.0, "p")
+
+    def test_mean_rate(self):
+        proc = TraceProcess(np.arange(11) * 0.5)  # 11 arrivals over 5s
+        np.testing.assert_allclose(proc.mean_rate, 2.0)
+
+
+class TestAsProcess:
+    def test_coercions(self):
+        assert isinstance(as_process(1.5), PoissonProcess)
+        assert isinstance(as_process(MMPP2(1, 2, 3, 4)), MMPP2Process)
+        assert isinstance(as_process([1.0, 2.0]), TraceProcess)
+        p = PoissonProcess(1.0)
+        assert as_process(p) is p
+        with pytest.raises(TypeError):
+            as_process(object())
+
+
+class TestRateEstimator:
+    @pytest.mark.parametrize("lam", [0.5, 4.0])
+    def test_ewma_converges_on_poisson(self, lam):
+        rng = np.random.default_rng(0)
+        est = RateEstimator(ewma=0.02)
+        t = 0.0
+        for _ in range(20_000):
+            t += rng.exponential(1.0 / lam)
+            est.observe(t)
+        np.testing.assert_allclose(est.rate, lam, rtol=0.10)
+
+    @pytest.mark.parametrize("lam", [0.5, 4.0])
+    def test_window_converges_on_poisson(self, lam):
+        rng = np.random.default_rng(1)
+        est = RateEstimator(window=2_000)
+        t = 0.0
+        for _ in range(10_000):
+            t += rng.exponential(1.0 / lam)
+            est.observe(t)
+        np.testing.assert_allclose(est.rate, lam, rtol=0.10)
+
+    def test_init_rate_before_data(self):
+        est = RateEstimator(ewma=0.1, init=3.0)
+        assert est.rate == 3.0
+        assert np.isnan(RateEstimator(ewma=0.1).rate)
+
+    def test_snapshot_round_trip(self):
+        est = RateEstimator(ewma=0.3)
+        for t in (1.0, 2.5, 3.0):
+            est.observe(t)
+        snap = est.snapshot()
+        rate = est.rate
+        est.observe(10.0)
+        est.restore(snap)
+        assert est.rate == rate
+        est2 = RateEstimator(window=4)
+        for t in (1.0, 2.0, 4.0):
+            est2.observe(t)
+        snap2 = est2.snapshot()
+        rate2 = est2.rate
+        est2.observe(9.0)
+        est2.restore(snap2)
+        assert est2.rate == rate2

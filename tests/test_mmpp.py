@@ -5,6 +5,7 @@ per-phase SMDP policies selected by an online rate estimator should beat a
 single SMDP policy solved for the mean rate.
 """
 import numpy as np
+import pytest
 
 from repro.core import (
     GOOGLENET_P4_ENERGY,
@@ -71,3 +72,115 @@ class TestMMPP:
             t += 2.0
             sched.observe_arrival(t)
         assert sched.current_phase() == 0
+
+
+class TestAdaptiveController:
+    def _bank(self):
+        from repro.serving.scheduler import SMDPSchedulerBank
+
+        return SMDPSchedulerBank(
+            {(1.0,): np.full(9, 2), (10.0,): np.full(9, 8)},
+            key_names=("lam",),
+        )
+
+    def _drive(self, ctrl, gap, n, t0=0.0):
+        t = t0
+        for _ in range(n):
+            t += gap
+            ctrl.observe_arrival(t)
+        return t
+
+    def test_retunes_to_observed_rate(self):
+        from repro.serving.scheduler import AdaptiveController
+
+        ctrl = AdaptiveController(self._bank(), ewma=0.3, margin=0.0)
+        t = self._drive(ctrl, 0.1, 50)  # rate 10
+        assert ctrl.key == (10.0,)
+        assert ctrl.decide(5) == 8  # fast-rate table (engine caps at queue)
+        self._drive(ctrl, 1.0, 50, t)  # rate 1
+        assert ctrl.key == (1.0,)
+        assert ctrl.decide(5) == 2
+        assert ctrl.n_switches >= 1
+
+    def test_custom_estimator_without_data_starts_mid_bank(self):
+        from repro.serving.metrics import RateEstimator
+        from repro.serving.scheduler import AdaptiveController
+
+        # estimator rate is NaN before any arrivals: fall back to the
+        # bank-midpoint init_rate, not an arbitrary first key
+        ctrl = AdaptiveController(
+            self._bank(), estimator=RateEstimator(ewma=0.2), init_rate=9.0
+        )
+        assert ctrl.key == (10.0,)
+
+    def test_min_dwell_blocks_thrash(self):
+        from repro.serving.scheduler import AdaptiveController
+
+        ctrl = AdaptiveController(
+            self._bank(), ewma=0.9, margin=0.0, min_dwell=1e9, init_rate=1.0
+        )
+        self._drive(ctrl, 0.1, 100)
+        assert ctrl.n_switches <= 1  # the first switch uses the -inf default
+
+    def test_margin_hysteresis_near_midpoint(self):
+        from repro.serving.scheduler import AdaptiveController
+
+        # estimate hovers just past the midpoint (5.5): with a wide margin
+        # the candidate is not decisively closer, so no switch happens
+        ctrl = AdaptiveController(
+            self._bank(), ewma=1.0, margin=0.5, init_rate=1.0
+        )
+        self._drive(ctrl, 1.0 / 6.0, 40)  # rate 6: just past midpoint
+        assert ctrl.key == (1.0,)
+        ctrl2 = AdaptiveController(
+            self._bank(), ewma=1.0, margin=0.0, init_rate=1.0
+        )
+        self._drive(ctrl2, 1.0 / 6.0, 40)
+        assert ctrl2.key == (10.0,)
+
+
+class TestSweepBank:
+    def test_bank_grid_and_retune(self):
+        from repro.core.sweep import sweep_bank
+
+        lams = [0.3 * BMAX / float(SVC.mean(BMAX)),
+                0.7 * BMAX / float(SVC.mean(BMAX))]
+        bank = sweep_bank(base_spec(lams[0]), lams, w2s=[0.5, 2.0])
+        assert len(bank) == 4
+        assert bank.key_names == ("lam", "w2")
+        sch = bank.scheduler(lam=lams[0], w2=0.5)
+        assert sch.decide(0) == 0
+        key = sch.retune(lam=lams[1], w2=2.0)
+        assert key == (pytest.approx(lams[1]), 2.0)
+
+    def test_bank_tables_match_serial_solver(self):
+        from repro.core.sweep import sweep_bank
+
+        lam = 0.5 * BMAX / float(SVC.mean(BMAX))
+        bank = sweep_bank(base_spec(lam), [lam])
+        serial = solve(base_spec(lam)).action_table()
+        key = bank.nearest(lam=lam)
+        np.testing.assert_array_equal(bank.tables[key], serial)
+
+
+class TestOracleScheduler:
+    def test_phase_lookup(self):
+        from repro.serving.mmpp import OraclePhaseScheduler
+
+        sched = OraclePhaseScheduler(
+            {0: np.full(5, 1), 1: np.full(5, 4)},
+            [(0.0, 0), (10.0, 1), (25.0, 0)],
+        )
+        sched.observe_arrival(5.0)
+        assert sched.phase == 0 and sched.decide(4) == 1
+        sched.observe_arrival(12.0)
+        assert sched.phase == 1 and sched.decide(4) == 4
+        sched.observe_arrival(30.0)
+        assert sched.phase == 0
+
+    def test_empty_switch_log(self):
+        from repro.serving.mmpp import OraclePhaseScheduler
+
+        sched = OraclePhaseScheduler({0: np.full(5, 2)}, [])
+        sched.observe_arrival(1.0)  # no switches known: stay in phase 0
+        assert sched.phase == 0 and sched.decide(3) == 2

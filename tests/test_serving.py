@@ -1,5 +1,7 @@
-"""Serving engine + schedulers: agreement with analytics, restart safety."""
+"""Serving engine + schedulers: agreement with analytics, restart safety,
+one kernel behind every mode (profiled / wall-clock / trace replay)."""
 import numpy as np
+import pytest
 
 from repro.core import (
     GOOGLENET_P4_ENERGY,
@@ -20,6 +22,7 @@ from repro.serving import (
     SMDPScheduler,
     StaticScheduler,
 )
+from repro.serving.scheduler import Scheduler
 
 SVC = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
 BMAX = 32
@@ -84,20 +87,220 @@ class TestEngineVsAnalytics:
         np.testing.assert_allclose(sim.l_bar / LAM, sim.w_bar, rtol=0.02)
 
 
-class TestEngineRestart:
-    def test_snapshot_restore_continues_identically(self):
+class _FakeClock:
+    """Deterministic wall clock for executor-mode tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def timer(self) -> float:
+        return self.t
+
+    def sleep(self, dt: float) -> None:
+        self.t += dt
+
+
+class NeverServe(Scheduler):
+    """Always waits; forces the kernel's tail-drain path."""
+
+    name = "never"
+
+    def decide(self, queue_len: int) -> int:
+        return 0
+
+
+class TestUnifiedKernel:
+    """run(), run_executor() and trace replay are ONE event loop."""
+
+    def test_profiled_and_wallclock_identical_decisions(self):
+        """The same arrival trace through the virtual-clock profiled mode
+        and the wall-clock executor mode (deterministic fake timer whose
+        executor takes exactly l(b)) makes identical batching decisions."""
+        sol = solve(spec(w2=1.6))
+        rng = np.random.default_rng(4)
+        times = np.cumsum(rng.exponential(1.0 / LAM, 400))
+
+        e_virtual = ServingEngine(
+            SMDPScheduler(sol), arrivals=times, b_max=BMAX, service=SVC,
+            energy_table=ENERGY, seed=0,
+        )
+        rep_v = e_virtual.run(n_epochs=None)
+
+        clock = _FakeClock()
+
+        def executor(batch):
+            clock.t += float(SVC.mean(len(batch)))
+
+        e_wall = ServingEngine(
+            SMDPScheduler(sol), b_max=BMAX, executor=executor,
+            energy_model=lambda a, svc: float(ENERGY[a]),
+            timer=clock.timer, sleeper=clock.sleep, lam=LAM,
+        )
+        reqs = [Request(i, float(t)) for i, t in enumerate(times)]
+        rep_w = e_wall.run_executor(reqs, poll=1e12)
+
+        np.testing.assert_array_equal(rep_v.batch_sizes, rep_w.batch_sizes)
+        np.testing.assert_allclose(rep_v.latencies, rep_w.latencies)
+        np.testing.assert_allclose(rep_v.energy, rep_w.energy)
+        assert rep_v.n_served == rep_w.n_served == 400
+
+    def test_executor_drain_capped_at_b_max(self):
+        """Tail drain serves in b_max-sized chunks, never one mega-batch."""
+        calls = []
+        clock = _FakeClock()
+        eng = ServingEngine(
+            NeverServe(), lam=1.0, b_max=8,
+            executor=lambda batch: (calls.append(len(batch)),
+                                    clock.sleep(1e-3))[0],
+            timer=clock.timer, sleeper=clock.sleep,
+        )
+        reqs = [Request(i, arrival=0.0) for i in range(50)]
+        rep = eng.run_executor(reqs)
+        assert rep.n_served == 50
+        assert max(calls) <= 8
+        assert len(calls) == 7  # ceil(50 / 8)
+
+    def test_trace_drain_capped_at_b_max(self):
+        eng = ServingEngine(
+            NeverServe(), arrivals=np.zeros(20) + 0.5, b_max=4,
+            service=SVC, energy_table=ENERGY, lam=LAM,
+        )
+        rep = eng.run(n_epochs=None)
+        assert rep.n_served == 20
+        assert rep.batch_sizes.max() <= 4
+
+    def test_executor_reuse_is_fresh_replay(self):
+        """A second run_executor on the same engine reproduces the first
+        (arrival times are relative to the call, not the engine's past)."""
+        clock = _FakeClock()
+        eng = ServingEngine(
+            GreedyScheduler(1, 4), lam=10.0, b_max=4,
+            executor=lambda batch: clock.sleep(0.05),
+            timer=clock.timer, sleeper=clock.sleep,
+        )
+
+        def replay():
+            reqs = [Request(i, arrival=0.1 * i) for i in range(10)]
+            return eng.run_executor(reqs, poll=1e12)
+
+        r1, r2 = replay(), replay()
+        np.testing.assert_allclose(r1.latencies, r2.latencies)
+        np.testing.assert_array_equal(r1.batch_sizes, r2.batch_sizes)
+        np.testing.assert_allclose(r1.span, r2.span)
+
+    def test_executor_energy_accounting(self):
+        """Executor mode accounts energy via the per-batch callback."""
+        clock = _FakeClock()
+        eng = ServingEngine(
+            GreedyScheduler(1, 8), lam=1000.0, b_max=8,
+            executor=lambda batch: clock.sleep(2e-3),
+            energy_model=lambda a, svc: 5.0 * a,
+            timer=clock.timer, sleeper=clock.sleep,
+        )
+        reqs = [Request(i, arrival=i * 1e-4) for i in range(40)]
+        rep = eng.run_executor(reqs)
+        np.testing.assert_allclose(rep.energy, 5.0 * 40)
+        assert np.isfinite(rep.power) and rep.power > 0
+
+    def test_executor_without_energy_source_reports_nan(self):
+        clock = _FakeClock()
+        eng = ServingEngine(
+            GreedyScheduler(1, 8), lam=1000.0, b_max=8,
+            executor=lambda batch: clock.sleep(1e-3),
+            timer=clock.timer, sleeper=clock.sleep,
+        )
+        rep = eng.run_executor([Request(0, 0.0)])
+        assert np.isnan(rep.energy) and np.isnan(rep.power)
+        # pure-latency objective stays finite without an energy source
+        assert np.isfinite(rep.weighted_cost(0.0))
+
+    def test_streaming_metrics_in_report(self):
         sol = solve(spec())
-        e1 = ServingEngine(SMDPScheduler(sol), lam=LAM, b_max=BMAX,
-                           service=SVC, energy_table=ENERGY, seed=5)
+        eng = ServingEngine(SMDPScheduler(sol), lam=LAM, b_max=BMAX,
+                            service=SVC, energy_table=ENERGY, seed=3)
+        rep = eng.run(20_000)
+        assert set(rep.metrics) >= {"W_mean", "P50", "P95", "P99", "power"}
+        np.testing.assert_allclose(rep.metrics["W_mean"],
+                                   rep.latencies.mean(), rtol=1e-9)
+        np.testing.assert_allclose(rep.metrics["P50"],
+                                   np.percentile(rep.latencies, 50), rtol=0.05)
+        np.testing.assert_allclose(rep.metrics["power"], rep.power, rtol=1e-9)
+
+    def test_simulate_events_delegates_to_kernel(self):
+        """core.simulate_events (the general path) matches the analytic
+        evaluator like the scan fast path does."""
+        from repro.core.simulate import simulate_events
+
+        pol = static_policy(8, 128)
+        mdp = build_smdp(spec())
+        ev = evaluate_policy(mdp, pol)
+        sim = simulate_events(pol, SVC, ENERGY, LAM, BMAX, n_epochs=60_000,
+                              seed=4)
+        np.testing.assert_allclose(sim.w_bar, ev.w_bar, rtol=0.02)
+        np.testing.assert_allclose(sim.p_bar, ev.p_bar, rtol=0.02)
+        # Little's law holds exactly by construction on the event path
+        np.testing.assert_allclose(sim.l_bar / LAM, sim.w_bar, rtol=0.02)
+
+
+class TestEngineRestart:
+    def _engine(self, sol, arrivals, seed):
+        kw = dict(b_max=BMAX, service=SVC, energy_table=ENERGY, seed=seed)
+        if arrivals == "poisson":
+            return ServingEngine(SMDPScheduler(sol), lam=LAM, **kw)
+        if arrivals == "mmpp":
+            from repro.serving.arrivals import MMPP2
+
+            m = MMPP2(lam1=0.3 * LAM, lam2=1.2 * LAM, dwell1=50.0, dwell2=50.0)
+            return ServingEngine(SMDPScheduler(sol), arrivals=m, **kw)
+        times = np.cumsum(np.full(4000, 1.0 / LAM))
+        return ServingEngine(SMDPScheduler(sol), arrivals=times, **kw)
+
+    @pytest.mark.parametrize("arrivals", ["poisson", "mmpp", "trace"])
+    def test_snapshot_restore_continues_identically(self, arrivals):
+        """Mid-run snapshot/restore reproduces the exact EngineReport of an
+        uninterrupted run, in every arrival mode."""
+        sol = solve(spec())
+        e1 = self._engine(sol, arrivals, seed=5)
         e1.run(1000)
         snap = e1.snapshot()
         r_cont = e1.run(1000)
-        e2 = ServingEngine(SMDPScheduler(sol), lam=LAM, b_max=BMAX,
-                           service=SVC, energy_table=ENERGY, seed=99)
+        e2 = self._engine(sol, arrivals, seed=99)
         e2.restore(snap)
         r_rest = e2.run(1000)
         np.testing.assert_allclose(r_cont.latencies, r_rest.latencies)
         np.testing.assert_allclose(r_cont.energy, r_rest.energy)
+        np.testing.assert_array_equal(r_cont.batch_sizes, r_rest.batch_sizes)
+        assert r_cont.span == r_rest.span
+
+    def test_adaptive_controller_restart_safe(self):
+        """Snapshot covers the estimator + active bank key."""
+        from repro.serving import AdaptiveController
+        from repro.serving.arrivals import MMPP2
+        from repro.serving.scheduler import SMDPSchedulerBank
+
+        tables = {
+            (0.5 * LAM,): np.minimum(np.arange(129), 8),
+            (1.2 * LAM,): np.minimum(np.arange(129), BMAX),
+        }
+        def make():
+            ctrl = AdaptiveController(
+                SMDPSchedulerBank(tables, key_names=("lam",)),
+                ewma=0.2, margin=0.1,
+            )
+            m = MMPP2(lam1=0.5 * LAM, lam2=1.2 * LAM, dwell1=40.0,
+                      dwell2=40.0)
+            return ServingEngine(ctrl, arrivals=m, b_max=BMAX, service=SVC,
+                                 energy_table=ENERGY, seed=11)
+
+        e1 = make()
+        e1.run(1500)
+        snap = e1.snapshot()
+        r_cont = e1.run(1500)
+        e2 = make()
+        e2.restore(snap)
+        r_rest = e2.run(1500)
+        np.testing.assert_allclose(r_cont.latencies, r_rest.latencies)
+        np.testing.assert_array_equal(r_cont.batch_sizes, r_rest.batch_sizes)
 
     def test_executor_mode_runs(self):
         """Wall-clock mode with a trivial executor serves all requests."""
@@ -150,6 +353,30 @@ class TestStreamingMetrics:
             est.update(float(x))
         true = np.percentile(data, 95)
         assert abs(est.value - true) / true < 0.05
+
+    @pytest.mark.parametrize("dist", ["expo", "normal", "lognormal", "uniform"])
+    @pytest.mark.parametrize("q", [0.5, 0.9, 0.99])
+    def test_p2_quantile_random_streams(self, dist, q):
+        """P² tracks np.percentile within a tolerance band across stream
+        shapes and quantiles."""
+        import zlib
+
+        from repro.serving.metrics import P2Quantile
+
+        rng = np.random.default_rng(zlib.crc32(f"{dist}:{q}".encode()))
+        n = 30_000
+        data = {
+            "expo": lambda: rng.exponential(2.0, n),
+            "normal": lambda: rng.normal(10.0, 3.0, n),
+            "lognormal": lambda: rng.lognormal(0.0, 0.8, n),
+            "uniform": lambda: rng.uniform(-1.0, 5.0, n),
+        }[dist]()
+        est = P2Quantile(q)
+        for x in data:
+            est.update(float(x))
+        true = np.percentile(data, q * 100)
+        scale = max(abs(true), data.std())
+        assert abs(est.value - true) / scale < 0.05, (est.value, true)
 
     def test_serving_metrics_report(self):
         from repro.serving.metrics import ServingMetrics
