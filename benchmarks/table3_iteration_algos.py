@@ -1,15 +1,42 @@
-"""Paper Table III (App. F): RVI(+abstract cost) vs AVI / API baselines."""
+"""Paper Table III (App. F) + solver accelerants: RVI vs AVI / API vs accel.
+
+Two parts:
+
+  * the paper's comparison — RVI (with/without abstract cost) against the
+    Thomas–Stengos AVI / API schemes on the rho = 0.5 basic scenario
+    (skipped in --smoke: the expanding-window numpy loops dominate CI time);
+  * the solver-acceleration ladder — for rho in {0.3, 0.7, 0.85}, plain
+    lockstep RVI vs accel="mpi" vs accel="anderson" on the batched engine,
+    each checked against the scalar float64 solve() oracle (bit-identical
+    greedy policy, |g - g_oracle|).  --json merges an
+    {iterations, wall time, g-gap, policy match} table per rho into
+    BENCH_solver.json (section "solver"), the artifact the bench-smoke CI
+    job tracks across commits — mirroring mmpp_bursty's BENCH_serving.json.
+"""
 from __future__ import annotations
 
+import argparse
 import dataclasses
 
-from repro.core import build_smdp, evaluate_policy, relative_value_iteration
+import numpy as np
+
+from repro.core import (
+    build_smdp,
+    build_smdp_batched,
+    evaluate_policy,
+    relative_value_iteration,
+    relative_value_iteration_batched,
+    solve,
+)
 from repro.core.rvi import api, avi
 
-from .common import emit, paper_spec, timed
+from .common import emit, emit_json, paper_spec, timed
+
+ACCEL_RHOS = (0.3, 0.7, 0.85)
+ACCEL_MODES = ("none", "mpi", "anderson")
 
 
-def run() -> None:
+def run_paper_baselines() -> None:
     # paper setting: basic scenario, rho=0.5, w1=w2=1
     eval_smax = 160
     spec = paper_spec(rho=0.5, w2=1.0, s_max=eval_smax, c_o=0.0)
@@ -33,5 +60,62 @@ def run() -> None:
         )
 
 
+def run_accel(smoke: bool = False) -> dict:
+    """Accelerated-solver ladder vs the scalar f64 oracle, per rho."""
+    s_max = 96 if smoke else 128
+    sections = {}
+    for rho in ACCEL_RHOS:
+        spec = paper_spec(rho=rho, w2=1.0, s_max=s_max)
+        # the untouched exact oracle: scalar float64 solve() at the SAME
+        # truncation (delta=None -> no auto-grow, c_o fixed) — accelerated
+        # results must reproduce its greedy policy bit-for-bit
+        oracle = solve(spec, auto_c_o=False, delta=None)
+        batch = build_smdp_batched([spec])
+        rows = {}
+        for mode in ACCEL_MODES:
+            relative_value_iteration_batched(batch, accel=mode)  # compile
+            res, us = timed(
+                lambda m=mode: relative_value_iteration_batched(batch, accel=m),
+                repeat=2,
+            )
+            match = bool(np.array_equal(res.policies[0], oracle.policy))
+            g_gap = float(abs(res.g[0] - oracle.eval.g))
+            iters = int(res.iterations[0])
+            emit(
+                f"table3_accel_rho{rho}_{mode}",
+                us,
+                f"iters={iters};g_gap={g_gap:.2e};policy_match={match}",
+            )
+            rows[mode] = {
+                "iterations": iters,
+                "wall_s": us / 1e6,
+                "g_gap_vs_oracle": g_gap,
+                "policy_match": match,
+            }
+        rows["speedup_iters_mpi_vs_none"] = (
+            rows["none"]["iterations"] / max(rows["mpi"]["iterations"], 1)
+        )
+        sections[f"rho={rho}"] = rows
+    return sections
+
+
+def run(smoke: bool = False, json_path: str | None = None) -> None:
+    if not smoke:
+        run_paper_baselines()
+    sections = run_accel(smoke=smoke)
+    if json_path:
+        emit_json(json_path, "solver", sections)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes, skip AVI/API baselines (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge results into this JSON artifact")
+    args = ap.parse_args()
+    run(smoke=args.smoke, json_path=args.json)
+
+
 if __name__ == "__main__":
-    run()
+    main()

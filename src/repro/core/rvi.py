@@ -1,11 +1,11 @@
-"""Relative value iteration (Algorithm 1) and App.-F baselines (AVI / API).
+"""Relative value iteration (Algorithm 1), accelerants, and App.-F baselines.
 
 The discrete-time backup is
 
     J_{i+1}(s) = min_{a in A_s} { c~(s,a) + sum_j m~(j|s,a) H_i(j) }      (29)
     H_{i+1}(s) = J_{i+1}(s) - J_{i+1}(s*)
 
-with span-based stopping.  Two backup implementations:
+with span-based stopping.  Backup implementations:
 
   * dense  — einsum against the (S, A, S) transition tensor;
   * banded — exploits the transition structure m(j|s,a) = p^{[a]}_{j-s+a}:
@@ -13,6 +13,46 @@ with span-based stopping.  Two backup implementations:
              arrival pmf, an O(A*S*K) computation instead of O(A*S^2).
              This is the form the Pallas TPU kernel (kernels/bellman.py)
              implements; here it doubles as its jnp oracle.
+  * pallas — the same banded math with the windowed-matmul core on the
+             Pallas kernel; the batched loop dispatches one spec-batched
+             kernel launch per lockstep iteration (bellman_banded_batched).
+
+Acceleration (``accel=`` on both RVI entry points)
+--------------------------------------------------
+
+At rho >= 0.7 the embedded chain mixes slowly and plain RVI needs many
+hundreds of lockstep backups.  Classical fixes fail here in a specific
+way: the iteration only converges *modulo constants* (H is a relative
+value function, fixed up to an additive shift), so the natural metric is
+the span seminorm  sp(x) = max(x) - min(x), under which the backup is
+nonexpansive.  Momentum and textbook Anderson mixing form affine
+combinations of past iterates whose *constant components* differ —
+J_{i+1}(s*) drifts from step to step — so the extrapolated step picks up
+an uncontrolled shift plus a secant direction fitted in a norm the
+operator does not contract; the result is the divergence observed on
+this repo's high-rho sweeps.  Two principled accelerants are provided:
+
+  * accel="mpi" — batched modified policy iteration: every ``period``
+    backups freeze the greedy policy and polish H by the *exact*
+    gauge-fixed policy-evaluation linear solve (evaluate.
+    policy_matrix_banded / policy_eval_linear, vmapped across the spec
+    batch).  A polish is accepted per spec only if its one-step span
+    residual shrinks (and the linear solve was finite — multichain
+    degeneracies reject safely), so the iteration can never do worse
+    than plain RVI.
+  * accel="anderson" — span-seminorm-safe Anderson: the secant history
+    is built from gauge-fixed iterates (H pinned to H(s*) = 0 before
+    every difference), the least-squares step is Tikhonov-regularized,
+    and each candidate is evaluated by one extra backup: it is taken
+    only where its span residual does not exceed the plain backup's
+    (rejection restarts the history).  Gauge-fixing removes the
+    constant drift; rejection restores the monotone span decrease that
+    makes plain RVI converge.
+
+Both run float64 single-phase (they need tens of backups, so the f32
+lockstep phase of the plain path buys nothing) and finish with an exact
+linear-solve gain for the final greedy policy.  The scalar f64
+``solve()`` path stays the untouched oracle these are tested against.
 """
 from __future__ import annotations
 
@@ -25,6 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .evaluate import policy_eval_linear, policy_matrix_banded
 from .smdp import SMDPSpec, TruncatedSMDP, build_smdp
 
 
@@ -114,6 +155,43 @@ def pallas_backup(
     nxt = jnp.where(jnp.arange(S) < s_max, jnp.arange(S) + 1, S - 1)
     mh = mh_serve.at[:, 0].set(h[nxt])
     return c_tilde + scale * mh + (1.0 - scale) * h[:, None]
+
+
+def pallas_backup_batched(c_tilde, pmfs, tails, scale, s_max: int, h):
+    """Spec-batched banded backup on the Pallas kernel (one launch per step).
+
+    Identical math to vmap(banded_backup); the G[n,t,a] correlation runs in
+    kernels/bellman.py::bellman_banded_batched with the spec axis as a grid
+    dimension.  The kernel core is float32 — the batched driver keeps the
+    exact final policy extraction on the float64 jnp path regardless.
+
+    c_tilde/scale: (N, S, A); pmfs: (N, A, K); tails: (N, A, T); h: (N, S).
+    """
+    from repro.kernels import ops as kops
+
+    N, S, A = c_tilde.shape
+    T = s_max + 1
+    K = pmfs.shape[2]
+    h_main = jnp.zeros((N, T + K), dtype=jnp.float32)
+    h_main = h_main.at[:, :T].set(h[:, :T].astype(jnp.float32))
+    G = kops.bellman_backup_batched(
+        h_main, pmfs, tails.transpose(0, 2, 1), h[:, S - 1]
+    )  # (N, T, A)
+    G = G.astype(h.dtype)
+    s_val = jnp.minimum(jnp.arange(S), s_max)
+    base = s_val[:, None] - jnp.arange(A)[None, :]
+    base_c = jnp.clip(base, 0, s_max)
+    mh_serve = G[:, base_c, jnp.arange(A)[None, :]]  # (N, S, A)
+    nxt = jnp.where(jnp.arange(S) < s_max, jnp.arange(S) + 1, S - 1)
+    mh = mh_serve.at[:, :, 0].set(h[:, nxt])
+    return c_tilde + scale * mh + (1.0 - scale) * h[:, :, None]
+
+
+def _batched_backup(backup_kind: str):
+    """The (N, S, A) Q-backup for the batched loops (trace-time dispatch)."""
+    if backup_kind == "pallas":
+        return pallas_backup_batched
+    return jax.vmap(banded_backup, in_axes=(0, 0, 0, 0, None, 0))
 
 
 #: in-window pmf mass below this is dropped by the banded backups; the
@@ -209,9 +287,51 @@ def relative_value_iteration(
     max_iter: int = 10_000,
     backup: str = "banded",
     eps_rel: float = 2e-4,
+    accel: str = "none",
+    accel_period: int = 6,
+    accel_memory: int = 5,
+    accel_safeguard: bool = True,
 ) -> RVIResult:
-    """Solve the discretized MDP; the policy is eps-optimal for the SMDP."""
+    """Solve the discretized MDP; the policy is eps-optimal for the SMDP.
+
+    ``accel`` ("none" | "mpi" | "anderson") routes through the accelerated
+    batched machinery with N = 1 (see relative_value_iteration_batched);
+    the default stays the plain loop — the exact oracle path of solve().
+    """
     t0 = time.perf_counter()
+    if accel != "none":
+        if backup == "dense":
+            raise ValueError("accelerated RVI requires a banded backup")
+        pmfs, tails, scale = make_banded_inputs(mdp)
+        pm_full = np.asarray(pmfs)  # (A, s_max+1) f64
+        pm_trim = pm_full[:, : trimmed_band(pm_full)]
+        policies, g, h, span, it_conv, _, _ = _run_accel(
+            jnp.asarray(mdp.c_tilde, jnp.float64)[None],
+            jnp.asarray(pm_trim, jnp.float64)[None],
+            jnp.asarray(tails, jnp.float64)[None],
+            jnp.asarray(scale, jnp.float64)[None],
+            mdp.spec.s_max,
+            eps,
+            eps_rel,
+            max_iter,
+            accel,
+            backup,
+            None,
+            accel_period,
+            accel_memory,
+            accel_safeguard,
+        )
+        span_f = float(span[0])
+        g_f = float(g[0])
+        return RVIResult(
+            policy=policies[0],
+            g=g_f,
+            h=h[0],
+            iterations=int(it_conv[0]),
+            span=span_f,
+            converged=span_f < max(eps, eps_rel * abs(g_f)),
+            wall_time_s=time.perf_counter() - t0,
+        )
     c_tilde = jnp.asarray(mdp.c_tilde)
     if backup == "dense":
         m_tilde = jnp.asarray(mdp.m_tilde)
@@ -256,10 +376,14 @@ class BatchedRVIResult:
     policies: np.ndarray  # (N, S)
     g: np.ndarray  # (N,)
     h: np.ndarray  # (N, S)
-    iterations: np.ndarray  # (N,) iteration at which each spec first converged
+    iterations: np.ndarray  # (N,) backup count at which each spec converged
     span: np.ndarray  # (N,)
     converged: np.ndarray  # (N,) bool
     wall_time_s: float
+    accel: str = "none"  # which accelerant produced this result
+    accel_accepts: Optional[np.ndarray] = None  # (N,) accepted accel steps
+    accel_rejects: Optional[np.ndarray] = None  # (N,) span-increasing steps
+    #   (taken when safeguard is off, refused when it is on)
 
     def unstack(self, i: int) -> RVIResult:
         return RVIResult(
@@ -273,7 +397,7 @@ class BatchedRVIResult:
         )
 
 
-@partial(jax.jit, static_argnames=("max_iter", "s_max"))
+@partial(jax.jit, static_argnames=("max_iter", "s_max", "backup_kind"))
 def _rvi_loop_batched(
     c_tilde,  # (N, S, A)
     pmfs,  # (N, A, K+1)
@@ -285,6 +409,7 @@ def _rvi_loop_batched(
     s_max: int,
     h0=None,  # (N, S) warm start; zeros when None
     ref_state: int = 0,
+    backup_kind: str = "banded",
 ):
     """Vectorized Algorithm 1: every spec runs the banded backup in lockstep.
 
@@ -292,7 +417,7 @@ def _rvi_loop_batched(
     already-converged specs keep refining, which only tightens their h.
     """
     N, S, _ = c_tilde.shape
-    backup = jax.vmap(banded_backup, in_axes=(0, 0, 0, 0, None, 0))
+    backup = _batched_backup(backup_kind)
 
     def thresh(g):
         return jnp.maximum(eps, eps_rel * jnp.abs(g))
@@ -328,6 +453,333 @@ def _rvi_loop_batched(
     return policies, g, h, i, span, it_conv
 
 
+# ---------------------------------------------------------------------------
+# Accelerated batched loops (see module docstring): modified policy
+# iteration with a banded linear-solve polish, and span-safe Anderson.
+# Both count *backups* (the dominant cost) in ``nb`` and record per-spec
+# acceptance/rejection of the accelerated steps.
+# ---------------------------------------------------------------------------
+
+
+def _span(diff):
+    return jnp.max(diff, axis=-1) - jnp.min(diff, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("max_iter", "s_max", "backup_kind", "period"))
+def _rvi_loop_batched_mpi(
+    c_tilde,
+    pmfs,
+    tails,
+    scale,
+    eps: float,
+    eps_rel: float,
+    max_iter: int,
+    s_max: int,
+    backup_kind: str = "banded",
+    period: int = 10,
+    h0=None,
+    ref_state: int = 0,
+):
+    """Batched modified policy iteration: RVI backups + periodic exact polish.
+
+    Every ``period`` backups the greedy policy is frozen and h is replaced
+    by its exact gauge-fixed policy evaluation (one vmapped banded linear
+    solve), followed by one verification backup.  The polish is accepted
+    per spec only where it is finite and shrinks the span residual, and
+    never touches specs that already converged (per-spec masking) — so the
+    loop is at worst plain RVI plus an amortized O(S^3/period) overhead.
+    """
+    N, S, A = c_tilde.shape
+    backup = _batched_backup(backup_kind)
+    mat = jax.vmap(policy_matrix_banded, in_axes=(0, 0, 0, None, 0))
+    lin = jax.vmap(policy_eval_linear, in_axes=(0, 0, None))
+
+    def bell(h):
+        q = backup(c_tilde, pmfs, tails, scale, s_max, h)
+        j = jnp.min(q, axis=-1)
+        g = j[:, ref_state]
+        return q, j - g[:, None], g
+
+    def thresh(g):
+        return jnp.maximum(eps, eps_rel * jnp.abs(g))
+
+    def with_polish(args):
+        q, hb, span, g, conv, nb, acc, rej = args
+        pol = jnp.argmin(q, axis=-1)
+        m_pi = mat(pmfs, tails, scale, s_max, pol)
+        c_pi = jnp.take_along_axis(c_tilde, pol[..., None], axis=-1)[..., 0]
+        g_pol, h_pol = lin(c_pi, m_pi, ref_state)
+        _, hb2, g2 = bell(h_pol)
+        span2 = _span(hb2 - h_pol)
+        ok = (
+            jnp.isfinite(g_pol)
+            & jnp.all(jnp.isfinite(h_pol), axis=-1)
+            & (span2 < span)
+            & ~conv
+        )
+        h_out = jnp.where(ok[:, None], hb2, hb)
+        return (
+            h_out,
+            jnp.where(ok, span2, span),
+            jnp.where(ok, g2, g),
+            nb + 1,
+            acc + ok,
+            rej + (~ok & ~conv),
+        )
+
+    def no_polish(args):
+        _, hb, span, g, _, nb, acc, rej = args
+        return hb, span, g, nb, acc, rej
+
+    def cond(carry):
+        it, _, _, span, g, _, _, _ = carry
+        return jnp.logical_and(it < max_iter, jnp.any(span >= thresh(g)))
+
+    def body(carry):
+        it, nb, h, _, _, it_conv, acc, rej = carry
+        q, hb, g = bell(h)
+        nb = nb + 1
+        span = _span(hb - h)
+        conv = span < thresh(g)
+        h_out, span_out, g_out, nb, acc, rej = jax.lax.cond(
+            (it + 1) % period == 0,
+            with_polish,
+            no_polish,
+            (q, hb, span, g, conv, nb, acc, rej),
+        )
+        it_conv = jnp.where(
+            (span_out < thresh(g_out)) & (it_conv < 0), nb, it_conv
+        )
+        return it + 1, nb, h_out, span_out, g_out, it_conv, acc, rej
+
+    if h0 is None:
+        h0 = jnp.zeros((N, S), dtype=c_tilde.dtype)
+    zi = jnp.zeros((N,), dtype=jnp.int32)
+    init = (
+        0,
+        0,
+        jnp.asarray(h0, dtype=c_tilde.dtype),
+        jnp.full((N,), jnp.inf, dtype=c_tilde.dtype),
+        jnp.zeros((N,), dtype=c_tilde.dtype),
+        jnp.full((N,), -1, dtype=jnp.int32),
+        zi,
+        zi,
+    )
+    _, nb, h, span, g, it_conv, acc, rej = jax.lax.while_loop(cond, body, init)
+    # exact final policy extraction always on the float64 jnp banded path
+    q = _batched_backup("banded")(c_tilde, pmfs, tails, scale, s_max, h)
+    policies = jnp.argmin(q, axis=-1)
+    it_conv = jnp.where(it_conv < 0, nb, it_conv)
+    return policies, g, h, nb, span, it_conv, acc, rej
+
+
+@partial(
+    jax.jit,
+    static_argnames=("max_iter", "s_max", "backup_kind", "memory", "safeguard"),
+)
+def _rvi_loop_batched_anderson(
+    c_tilde,
+    pmfs,
+    tails,
+    scale,
+    eps: float,
+    eps_rel: float,
+    max_iter: int,
+    s_max: int,
+    backup_kind: str = "banded",
+    memory: int = 5,
+    safeguard: bool = True,
+    h0=None,
+    ref_state: int = 0,
+    reg: float = 1e-8,
+):
+    """Span-seminorm-safe Anderson acceleration of the batched RVI.
+
+    Each iteration extrapolates a candidate from the last ``memory``
+    gauge-fixed secant pairs (Tikhonov-regularized least squares), then
+    evaluates it with one backup and accepts it per spec only where its
+    span residual does not exceed the current one — the nonexpansiveness
+    bound the plain backup satisfies by construction — so the safeguarded
+    iteration is monotone in span and can never diverge.  Rejected specs
+    fall back to the plain gauge-fixed backup step (one shared extra
+    backup, paid only on iterations where some spec rejects) and restart
+    their history.  With an empty history the candidate IS the plain step,
+    so the scheme needs no warm-up special case.  ``safeguard=False``
+    always takes the finite candidate: the known-divergent textbook
+    variant, kept for the regression test.
+    """
+    N, S, A = c_tilde.shape
+    M = memory
+    backup = _batched_backup(backup_kind)
+
+    def bell(h):
+        q = backup(c_tilde, pmfs, tails, scale, s_max, h)
+        j = jnp.min(q, axis=-1)
+        g = j[:, ref_state]
+        return j - g[:, None], g
+
+    def thresh(g):
+        return jnp.maximum(eps, eps_rel * jnp.abs(g))
+
+    def cond(carry):
+        it, _, _, _, g, span, _, _, _, _, _, _ = carry
+        return jnp.logical_and(it < max_iter, jnp.any(span >= thresh(g)))
+
+    def body(carry):
+        it, nb, h, r, g, span, it_conv, dh, dr, valid, acc, rej = carry
+        # plain step: h + r is the gauge-fixed backup of h (already computed)
+        h_pl = h + r
+        # Anderson candidate: regularized secant over gauge-fixed history
+        # (empty history -> gamma = 0 -> the candidate is the plain step)
+        vm = valid[..., None]
+        rm = jnp.where(vm, dr, 0.0)  # (N, M, S)
+        gram = jnp.einsum("nms,nks->nmk", rm, rm)
+        rhs = jnp.einsum("nms,ns->nm", rm, r)
+        tr = jnp.trace(gram, axis1=-2, axis2=-1)
+        lam = (reg * tr / M + 1e-30)[:, None, None] * jnp.eye(
+            M, dtype=c_tilde.dtype
+        )
+        gamma = jnp.linalg.solve(gram + lam, rhs[..., None])[..., 0]  # (N, M)
+        h_cand = h_pl - jnp.einsum("nm,nms->ns", gamma, jnp.where(vm, dh, 0.0) + rm)
+        h_cand = h_cand - h_cand[:, ref_state][:, None]  # pin the gauge
+        hb_c, g_c = bell(h_cand)
+        r_c = hb_c - h_cand
+        span_c = _span(r_c)
+        nb = nb + 1
+        has_hist = valid.any(axis=-1)
+        finite = jnp.all(jnp.isfinite(h_cand) & jnp.isfinite(r_c), axis=-1)
+        worse = span_c > span  # the step the safeguard exists to refuse
+        if safeguard:
+            take = finite & ~worse
+        else:
+            take = finite & (has_hist | ~worse)
+        rej = rej + (has_hist & finite & worse)
+        acc = acc + (take & has_hist)
+
+        def fallback(nb):
+            # some spec refused its candidate: one shared plain backup
+            hb_pl, g_pl = bell(h_pl)
+            return hb_pl - h_pl, g_pl, nb + 1
+
+        r_pl, g_pl, nb = jax.lax.cond(
+            jnp.all(take),
+            lambda nb: (r_c, g_c, nb),  # unused values; no extra backup
+            fallback,
+            nb,
+        )
+        h_new = jnp.where(take[:, None], h_cand, h_pl)
+        r_new = jnp.where(take[:, None], r_c, r_pl)
+        g_new = jnp.where(take, g_c, g_pl)
+        span_new = jnp.where(take, span_c, _span(r_new))
+        # history update: safe-mode rejection restarts the window
+        reset = ~take if safeguard else jnp.zeros_like(take)
+        valid = jnp.where(reset[:, None], False, valid)
+        slot = it % M
+        dh = dh.at[:, slot].set(h_new - h)
+        dr = dr.at[:, slot].set(r_new - r)
+        valid = valid.at[:, slot].set(True)
+        it_conv = jnp.where(
+            (span_new < thresh(g_new)) & (it_conv < 0), nb, it_conv
+        )
+        return it + 1, nb, h_new, r_new, g_new, span_new, it_conv, dh, dr, valid, acc, rej
+
+    if h0 is None:
+        h0 = jnp.zeros((N, S), dtype=c_tilde.dtype)
+    h0 = jnp.asarray(h0, dtype=c_tilde.dtype)
+    hb0, g0 = bell(h0)
+    r0 = hb0 - h0
+    zi = jnp.zeros((N,), dtype=jnp.int32)
+    init = (
+        0,
+        1,
+        h0,
+        r0,
+        g0,
+        _span(r0),
+        jnp.full((N,), -1, dtype=jnp.int32),
+        jnp.zeros((N, M, S), dtype=c_tilde.dtype),
+        jnp.zeros((N, M, S), dtype=c_tilde.dtype),
+        jnp.zeros((N, M), dtype=bool),
+        zi,
+        zi,
+    )
+    out = jax.lax.while_loop(cond, body, init)
+    _, nb, h, _, g, span, it_conv, _, _, _, acc, rej = out
+    q = _batched_backup("banded")(c_tilde, pmfs, tails, scale, s_max, h)
+    policies = jnp.argmin(q, axis=-1)
+    it_conv = jnp.where(it_conv < 0, nb, it_conv)
+    return policies, g, h, nb, span, it_conv, acc, rej
+
+
+@partial(jax.jit, static_argnames=("s_max",))
+def _exact_gain(c_tilde, pmfs, tails, scale, s_max, policies, ref_state=0):
+    """Exact (linear-solve) gain + relative values of frozen greedy policies."""
+    m_pi = jax.vmap(policy_matrix_banded, in_axes=(0, 0, 0, None, 0))(
+        pmfs, tails, scale, s_max, policies
+    )
+    c_pi = jnp.take_along_axis(c_tilde, policies[..., None], axis=-1)[..., 0]
+    return jax.vmap(policy_eval_linear, in_axes=(0, 0, None))(
+        c_pi, m_pi, ref_state
+    )
+
+
+def _run_accel(
+    c_tilde,  # (N, S, A) f64
+    pmfs,  # (N, A, Kb) f64, band-trimmed
+    tails,  # (N, A, T) f64
+    scale,  # (N, S, A) f64
+    s_max: int,
+    eps: float,
+    eps_rel: float,
+    max_iter: int,
+    accel: str,
+    backup: str,
+    h0,
+    period: int,
+    memory: int,
+    safeguard: bool,
+):
+    """Shared driver for the accelerated loops + exact final gain.
+
+    Returns (policies, g, h, span, it_conv, accepts, rejects) as numpy.
+    ``g`` / ``h`` are the exact linear-solve evaluation of the final greedy
+    policy wherever that solve is finite (it always is for the unichain
+    policies RVI converges to); the loop's own fixed-point estimates back
+    them up otherwise.
+    """
+    loop_args = (c_tilde, pmfs, tails, scale, eps, eps_rel, max_iter, s_max)
+    if accel == "mpi":
+        out = _rvi_loop_batched_mpi(
+            *loop_args, backup_kind=backup, period=period, h0=h0
+        )
+    elif accel == "anderson":
+        out = _rvi_loop_batched_anderson(
+            *loop_args,
+            backup_kind=backup,
+            memory=memory,
+            safeguard=safeguard,
+            h0=h0,
+        )
+    else:
+        raise ValueError(f"unknown accel {accel!r}")
+    policies, g, h, _, span, it_conv, acc, rej = out
+    g_exact, h_exact = _exact_gain(c_tilde, pmfs, tails, scale, s_max, policies)
+    ok = np.isfinite(np.asarray(g_exact)) & np.isfinite(
+        np.asarray(h_exact)
+    ).all(axis=-1)
+    g = np.where(ok, np.asarray(g_exact), np.asarray(g))
+    h = np.where(ok[:, None], np.asarray(h_exact), np.asarray(h))
+    return (
+        np.asarray(policies),
+        g,
+        h,
+        np.asarray(span),
+        np.asarray(it_conv),
+        np.asarray(acc),
+        np.asarray(rej),
+    )
+
+
 def relative_value_iteration_batched(
     batch,  # BatchedSMDP
     eps: float = 1e-2,
@@ -335,6 +787,11 @@ def relative_value_iteration_batched(
     eps_rel: float = 2e-4,
     h0: Optional[np.ndarray] = None,
     mixed_precision: bool = True,
+    accel: str = "none",
+    backup: str = "banded",
+    accel_period: int = 6,
+    accel_memory: int = 5,
+    accel_safeguard: bool = True,
 ) -> BatchedRVIResult:
     """Solve every spec of a BatchedSMDP with one jitted banded-RVI call.
 
@@ -342,12 +799,25 @@ def relative_value_iteration_batched(
     same fixed point; a good one — e.g. interpolated from solved sweep
     anchors — just gets there in far fewer lockstep iterations).
 
-    With ``mixed_precision`` the bulk of the lockstep runs in float32 —
-    halving the per-iteration memory traffic — and a float64 polish loop
-    finishes from the float32 fixed point; the float32 stopping thresholds
-    are floored above single-precision resolution so the first phase can
-    never stall, and the final policy/gain always comes from the float64
-    backup.
+    ``accel`` selects the solve path (see the module docstring):
+      * "none"     — plain lockstep RVI.  With ``mixed_precision`` the bulk
+        runs in float32 — halving the per-iteration memory traffic — and a
+        float64 polish loop finishes from the float32 fixed point; the
+        float32 stopping thresholds are floored above single-precision
+        resolution so the first phase can never stall.
+      * "mpi"      — modified policy iteration: every ``accel_period``
+        backups, a vmapped exact policy-evaluation linear solve polishes h
+        (per-spec safeguarded).  The high-rho default of the sweep engine.
+      * "anderson" — span-safe restarted Anderson with ``accel_memory``
+        secant pairs; ``accel_safeguard=False`` exposes the unsafeguarded
+        (divergent) textbook variant for tests.
+    Accelerated paths run float64 single-phase; ``iterations`` counts
+    Bellman backups (including safeguard verification backups) so plain
+    and accelerated counts are directly comparable.
+
+    ``backup`` ("banded" | "pallas") picks the lockstep backup kernel; the
+    final policy extraction and the float64 polish phase always use the
+    float64 jnp banded path, so policies are bit-stable across backends.
     """
     t0 = time.perf_counter()
     pm = batch.pmfs_banded
@@ -358,6 +828,74 @@ def relative_value_iteration_batched(
         np.asarray(batch.scale),
     )
     s_max = batch.specs[0].s_max
+    if accel != "none":
+        acc = rej = None
+        it_accel = 0
+        if mixed_precision:
+            # accelerated f32 coarse phase on the narrow band: the floored
+            # thresholds (see below) keep it from stalling, the per-spec
+            # safeguards absorb any f32 conditioning loss in the polish
+            pm32 = pm[:, :, : trimmed_band(pm, tol=1e-8)]
+            _, _, h32, span32, it_conv32, acc, rej = _run_accel(
+                jnp.asarray(arrs[0], jnp.float32),
+                jnp.asarray(pm32, jnp.float32),
+                jnp.asarray(arrs[2], jnp.float32),
+                jnp.asarray(arrs[3], jnp.float32),
+                s_max,
+                max(eps, 1e-4),
+                max(eps_rel, 1e-5),
+                max_iter,
+                accel,
+                backup,
+                None if h0 is None else jnp.asarray(h0, jnp.float32),
+                accel_period,
+                accel_memory,
+                accel_safeguard,
+            )
+            h0 = h32.astype(np.float64)
+            it_accel = int(it_conv32.max())
+            # float64 finish: plain lockstep from the f32 fixed point (a
+            # handful of backups), exact gain from the final greedy policy
+            f64 = tuple(jnp.asarray(a, jnp.float64) for a in arrs)
+            policies, g, h, _, span, it_conv = _rvi_loop_batched(
+                *f64, eps, eps_rel, max_iter, s_max, h0=jnp.asarray(h0)
+            )
+            g_exact, h_exact = _exact_gain(*f64[:4], s_max, policies)
+            ok = np.isfinite(np.asarray(g_exact)) & np.isfinite(
+                np.asarray(h_exact)
+            ).all(axis=-1)
+            g = np.where(ok, np.asarray(g_exact), np.asarray(g))
+            h = np.where(ok[:, None], np.asarray(h_exact), np.asarray(h))
+            policies = np.asarray(policies)
+            span = np.asarray(span)
+            it_conv = np.asarray(it_conv) + it_accel
+            acc, rej = np.asarray(acc), np.asarray(rej)
+        else:
+            policies, g, h, span, it_conv, acc, rej = _run_accel(
+                *(jnp.asarray(a, jnp.float64) for a in arrs),
+                s_max,
+                eps,
+                eps_rel,
+                max_iter,
+                accel,
+                backup,
+                None if h0 is None else jnp.asarray(h0, jnp.float64),
+                accel_period,
+                accel_memory,
+                accel_safeguard,
+            )
+        return BatchedRVIResult(
+            policies=policies,
+            g=g,
+            h=h,
+            iterations=it_conv,
+            span=span,
+            converged=span < np.maximum(eps, eps_rel * np.abs(g)),
+            wall_time_s=time.perf_counter() - t0,
+            accel=accel,
+            accel_accepts=acc,
+            accel_rejects=rej,
+        )
     if mixed_precision:
         # the float32 phase cannot resolve pmf mass below its epsilon anyway,
         # so it runs on a narrower band than the float64 polish
@@ -372,6 +910,7 @@ def relative_value_iteration_batched(
             max_iter,
             s_max,
             h0=None if h0 is None else jnp.asarray(h0, jnp.float32),
+            backup_kind=backup,
         )
         h0 = np.asarray(coarse[2], np.float64)
         it_coarse = int(coarse[3])

@@ -159,6 +159,74 @@ class BatchedSMDP:
             scale=self.scale[idx],
         )
 
+    def with_c_o(self, c_os: Sequence[float]) -> "BatchedSMDP":
+        """Copy of the batch with new per-spec abstract overflow costs.
+
+        c_o only enters the S_o row of c_hat (eq. 19) and its discretized
+        c_tilde — transitions, eta and scale are untouched — so swapping it
+        is a row patch, not a rebuild.  This is how sweep_solve reuses the
+        c_o = 0 probe batch of the abstract-cost calibration as the first
+        solve batch.
+        """
+        c_os = np.asarray(c_os, dtype=np.float64)
+        if c_os.shape != (self.n_specs,):
+            raise ValueError(f"need {self.n_specs} c_o values")
+        old = np.array([sp.c_o for sp in self.specs])
+        s_o = self.s_o
+        c_hat = self.c_hat.copy()
+        c_hat[:, s_o, :] += (c_os - old)[:, None] * self.y[:, s_o, :]
+        c_tilde = self.c_tilde.copy()
+        with np.errstate(invalid="ignore"):
+            c_tilde[:, s_o, :] = np.where(
+                self.feasible[:, s_o, :],
+                c_hat[:, s_o, :] / self.y[:, s_o, :],
+                np.inf,
+            )
+        return dataclasses.replace(
+            self,
+            specs=[
+                dataclasses.replace(sp, c_o=float(c))
+                for sp, c in zip(self.specs, c_os)
+            ],
+            c_hat=c_hat,
+            c_tilde=c_tilde,
+        )
+
+    def policy_transitions_batched(self, policies: np.ndarray) -> np.ndarray:
+        """(N, S, S) m_hat rows under per-spec policies — no dense tensor.
+
+        The batch-wide form of policy_transitions: one broadcast gather
+        instead of N python loops, feeding the batched stationary solve of
+        evaluate.evaluate_policy_batched.
+        """
+        s_max = self.specs[0].s_max
+        S = self.n_states
+        s_o = S - 1
+        N = self.n_specs
+        acts = np.asarray(policies, dtype=np.int64)  # (N, S)
+        if acts.shape != (N, S):
+            raise ValueError(f"policies shape {acts.shape} != ({N}, {S})")
+        s_val = _state_values(s_max).astype(np.int64)
+        s_idx = np.arange(S)
+        serve = acts >= 1
+        base = np.clip(s_val[None, :] - acts, 0, s_max)  # (N, S)
+        k = np.arange(s_max + 1)[None, None, :] - base[..., None]  # (N, S, K)
+        nn = np.arange(N)[:, None, None]
+        gathered = self.pmfs_banded[nn, acts[..., None], np.clip(k, 0, s_max)]
+        p = np.zeros((N, S, S))
+        p[:, :, : s_max + 1] = np.where((k >= 0) & serve[..., None], gathered, 0.0)
+        p[:, :, s_o] += np.where(
+            serve, self.tails[np.arange(N)[:, None], acts, base], 0.0
+        )
+        nxt = np.where(s_idx < s_max, s_idx + 1, s_o)
+        onehot = np.zeros((S, S))
+        onehot[s_idx, nxt] = 1.0
+        p = np.where(serve[..., None], p, onehot[None])
+        # normalize tiny numerical drift (same rule as the dense path)
+        row_sums = p.sum(axis=-1, keepdims=True)
+        np.divide(p, row_sums, out=p, where=row_sums > 1e-12)
+        return p
+
     def policy_transitions(self, i: int, policy: np.ndarray) -> np.ndarray:
         """(S, S) m_hat rows of spec ``i`` under ``policy`` — no dense tensor.
 

@@ -78,14 +78,22 @@ def solve(
     max_s_max: int = 4096,
     backup: str = "banded",
     auto_c_o: bool = True,
+    accel: str = "none",
 ) -> SolveResult:
-    """Solve the dynamic-batching SMDP; auto-grow s_max until Delta < delta."""
+    """Solve the dynamic-batching SMDP; auto-grow s_max until Delta < delta.
+
+    The default (accel="none") is the plain float64 lockstep loop — the
+    exact oracle every accelerated path is tested against; accel="mpi" /
+    "anderson" route through the accelerated machinery (rvi docstring).
+    """
     cur = spec
     if auto_c_o:
         cur = resolve_abstract_cost(cur)
     while True:
         mdp = build_smdp(cur)
-        res = relative_value_iteration(mdp, eps=eps, max_iter=max_iter, backup=backup)
+        res = relative_value_iteration(
+            mdp, eps=eps, max_iter=max_iter, backup=backup, accel=accel
+        )
         ev = evaluate_policy(mdp, res.policy)
         if delta is None or ev.delta < delta or cur.s_max >= max_s_max:
             return SolveResult(spec=cur, rvi=res, eval=ev, _mdp=mdp)

@@ -13,6 +13,16 @@ tolerance Delta^pi < delta, else grow s_max) is applied batch-wide: after
 each batched solve only the specs whose Delta still exceeds delta are
 regrown and re-solved together, so a sweep costs O(#rounds) jitted calls
 instead of O(#specs x #rounds).
+
+Since the high-rho mixing wall is the dominant cost (rho >= 0.7 needs
+hundreds of lockstep backups for plain RVI), the sweep path defaults to
+accel="auto" — the accelerated solver (rvi accel="mpi") whenever the
+sweep reaches the slow-mixing regime, plain lockstep otherwise — and
+each batch is internally re-ordered along (rho, w2) so the
+anchor-interpolated warm starts chain along the rho axis: the ends of
+the sorted batch are the extreme-rho specs, exactly where interpolation
+buys the most.  Results always come back in the caller's original spec
+order.
 """
 from __future__ import annotations
 
@@ -21,7 +31,12 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from .evaluate import evaluate_policy_banded
+from .evaluate import (
+    _finish_from_batch,
+    evaluate_policy_banded,
+    evaluate_policy_batched,
+    stationary_distribution_batched,
+)
 from .policies import greedy_policy
 from .rvi import relative_value_iteration_batched
 from .smdp import SMDPSpec, build_smdp_batched
@@ -77,57 +92,104 @@ def pad_specs(specs: Sequence[SMDPSpec]) -> List[SMDPSpec]:
     ]
 
 
+def _greedy_c_o(batch) -> np.ndarray:
+    """Per-spec abstract cost c_o = max(100, 2 * g_greedy) from a c_o=0 batch.
+
+    The greedy gains of the whole probe batch come from one batched
+    stationary solve; specs whose greedy chain degenerates keep the paper
+    default of 100 (same fallback as the serial resolver).
+    """
+    pols = np.stack(
+        [
+            greedy_policy(sp.s_max, sp.b_min, sp.b_max)
+            for sp in batch.specs
+        ]
+    )
+    p = batch.policy_transitions_batched(pols)
+    mu, ok = stationary_distribution_batched(p)
+    out = np.empty(batch.n_specs)
+    for i in range(batch.n_specs):
+        if ok[i]:
+            g = _finish_from_batch(batch, i, pols[i], mu[i]).g
+        else:
+            try:
+                g = evaluate_policy_banded(batch, i, pols[i]).g
+            except RuntimeError:
+                g = 100.0
+        out[i] = max(100.0, 2.0 * g)
+    return out
+
+
 def resolve_abstract_cost_batched(
     specs: Sequence[SMDPSpec],
 ) -> List[SMDPSpec]:
     """Batched solve.resolve_abstract_cost: c_o = max(100, 2 * g_greedy).
 
     One banded batch build of the c_o = 0 probes calibrates every spec's
-    abstract cost; specs whose greedy chain degenerates keep the paper
-    default of 100 (same fallback as the serial resolver).
+    abstract cost (one batched stationary solve for all greedy gains).
     """
     specs = list(specs)
     probes = [dataclasses.replace(sp, c_o=0.0) for sp in specs]
     batch = build_smdp_batched(probes)
-    out = []
-    for i, sp in enumerate(specs):
-        pol = greedy_policy(sp.s_max, sp.b_min, sp.b_max)
-        try:
-            g = evaluate_policy_banded(batch, i, pol).g
-        except RuntimeError:
-            g = 100.0
-        out.append(dataclasses.replace(sp, c_o=max(100.0, 2.0 * g)))
-    return out
+    c_os = _greedy_c_o(batch)
+    return [
+        dataclasses.replace(sp, c_o=float(c)) for sp, c in zip(specs, c_os)
+    ]
 
 
 #: below this batch width the anchor pre-solve costs more than it saves
 _WARM_START_MIN = 6
 
+#: accel="auto": rho at which the MPI polish starts paying for itself —
+#: below it plain lockstep converges in ~100 backups and the polish
+#: machinery (anchor accel solve, linear solves, extra jit phases) is
+#: pure overhead; above it mixing slows exponentially and MPI wins big
+_ACCEL_RHO_THRESHOLD = 0.5
 
-def _anchor_warm_start(batch, eps: float, max_iter: int):
+
+def _anchor_warm_start(batch, eps: float, max_iter: int, **rvi_kw):
     """Interpolated h0 from solving the two end-of-batch anchor specs.
 
-    c_tilde is affine in the swept parameter for the common sweeps (w2,
-    energy-profile scale), so each spec's relative values are well
-    approximated by interpolating between the solved anchors; projecting
-    the cost tensors onto the anchor segment recovers the interpolation
-    coordinate without knowing which parameter the caller swept.  Any h0
-    reaches the same fixed point — a good one just makes the batched RVI
-    converge in far fewer lockstep iterations.
+    Any h0 reaches the same fixed point — a good one just makes the
+    batched RVI converge in far fewer lockstep iterations.  The batch is
+    pre-sorted along (rho, w2) by sweep_solve, so the anchors are the
+    extreme-rho specs and interpolation chains along the rho axis where
+    mixing (and hence iteration count) is worst.  The interpolation
+    coordinate per spec:
+
+      * rho varies across the batch — project the normalized (rho, w2)
+        parameter point onto the anchor segment (c_tilde is NOT affine in
+        lambda: the arrival pmfs move with it, so cost-space projection
+        would misplace lambda-swept specs);
+      * rho constant (w2 / energy-profile sweeps) — project the cost
+        tensors onto the anchor segment, which is exact for any parameter
+        c_tilde is affine in, without knowing which one the caller swept.
     """
     if batch.n_specs < _WARM_START_MIN:
         return None
     anchors = relative_value_iteration_batched(
-        batch.take([0, batch.n_specs - 1]), eps=eps, max_iter=max_iter
+        batch.take([0, batch.n_specs - 1]), eps=eps, max_iter=max_iter, **rvi_kw
     )
-    mask = batch.feasible.all(axis=0)  # finite c_tilde in every spec
-    c = batch.c_tilde[:, mask]
-    d = c[-1] - c[0]
-    denom = float(d @ d)
-    if denom <= 0.0:
-        t = np.zeros(batch.n_specs)
+    rhos = np.array([sp.rho for sp in batch.specs])
+    w2s = np.array([sp.w2 for sp in batch.specs])
+    if abs(rhos[-1] - rhos[0]) > 1e-12:
+
+        def norm(v):
+            span = v[-1] - v[0]
+            return (v - v[0]) / span if abs(span) > 1e-12 else np.zeros_like(v)
+
+        theta = np.stack([norm(rhos), norm(w2s)], axis=1)  # (N, 2)
+        d = theta[-1] - theta[0]
+        t = np.clip(theta @ d / float(d @ d), 0.0, 1.0)
     else:
-        t = np.clip((c - c[0]) @ d / denom, 0.0, 1.0)
+        mask = batch.feasible.all(axis=0)  # finite c_tilde in every spec
+        c = batch.c_tilde[:, mask]
+        d = c[-1] - c[0]
+        denom = float(d @ d)
+        if denom <= 0.0:
+            t = np.zeros(batch.n_specs)
+        else:
+            t = np.clip((c - c[0]) @ d / denom, 0.0, 1.0)
     return (1.0 - t)[:, None] * anchors.h[0] + t[:, None] * anchors.h[1]
 
 
@@ -139,6 +201,8 @@ def sweep_solve(
     grow_factor: float = 1.5,
     max_s_max: int = 4096,
     auto_c_o: bool = True,
+    accel: str = "auto",
+    backup: str = "banded",
 ) -> List[SolveResult]:
     """Batched equivalent of solve.solve() over a list of specs.
 
@@ -146,13 +210,41 @@ def sweep_solve(
     serial solver's output for the same spec to solver tolerance.  Specs with
     differing s_max are padded to the batch maximum first.  Results carry no
     dense tensors — ``result.mdp`` materializes one lazily if accessed.
+
+    ``accel`` / ``backup`` are forwarded to the batched RVI (rvi module
+    docstring).  The default "auto" routes through accel="mpi" whenever the
+    sweep reaches into the slow-mixing regime (any rho >=
+    _ACCEL_RHO_THRESHOLD) — breaking the high-rho mixing wall (tens of
+    backups instead of hundreds) while staying bit-identical in policy to
+    the scalar float64 solve() oracle — and stays on the plain lockstep
+    path for fast-mixing sweeps where the polish is pure overhead.  Pass
+    accel="none"/"mpi"/"anderson" to force a path.
     """
     specs = pad_specs(specs)
     if not specs:
         return []
+    if accel == "auto":
+        accel = (
+            "mpi"
+            if max(sp.rho for sp in specs) >= _ACCEL_RHO_THRESHOLD
+            else "none"
+        )
+    # chain the work along rho (then w2) once, up front: the warm-start
+    # anchors become the extreme-rho specs, where mixing is worst, and the
+    # c_o probe batch can be reused (row-patched) as the first solve batch
+    order = sorted(
+        range(len(specs)), key=lambda i: (specs[i].rho, specs[i].w2)
+    )
+    prebuilt = None
     if auto_c_o:
-        specs = resolve_abstract_cost_batched(specs)
-    pending = list(enumerate(specs))
+        probe_batch = build_smdp_batched(
+            [dataclasses.replace(specs[i], c_o=0.0) for i in order]
+        )
+        prebuilt = probe_batch.with_c_o(_greedy_c_o(probe_batch))
+        pending = list(zip(order, prebuilt.specs))
+    else:
+        pending = [(i, specs[i]) for i in order]
+    rvi_kw = dict(accel=accel, backup=backup)
     results: List[SolveResult] = [None] * len(specs)  # type: ignore[list-item]
     while pending:
         # group by truncation level: re-grown specs share their new s_max
@@ -160,15 +252,25 @@ def sweep_solve(
         still_pending = []
         for s_max in levels:
             group = [(i, sp) for i, sp in pending if sp.s_max == s_max]
-            batch = build_smdp_batched([sp for _, sp in group])
+            group.sort(key=lambda t: (t[1].rho, t[1].w2))
+            if (
+                prebuilt is not None
+                and len(group) == prebuilt.n_specs
+                and all(a is b for (_, a), b in zip(group, prebuilt.specs))
+            ):
+                batch = prebuilt
+            else:
+                batch = build_smdp_batched([sp for _, sp in group])
             rvi = relative_value_iteration_batched(
                 batch,
                 eps=eps,
                 max_iter=max_iter,
-                h0=_anchor_warm_start(batch, eps, max_iter),
+                h0=_anchor_warm_start(batch, eps, max_iter, **rvi_kw),
+                **rvi_kw,
             )
+            evs = evaluate_policy_batched(batch, rvi.policies)
             for row, (idx, sp) in enumerate(group):
-                ev = evaluate_policy_banded(batch, row, rvi.policies[row])
+                ev = evs[row]
                 if delta is None or ev.delta < delta or sp.s_max >= max_s_max:
                     results[idx] = SolveResult(
                         spec=sp, rvi=rvi.unstack(row), eval=ev
@@ -186,5 +288,6 @@ def sweep_solve(
                             ),
                         )
                     )
+        prebuilt = None
         pending = still_pending
     return results

@@ -22,6 +22,7 @@ Validated in interpret mode against ref.bellman_banded_ref.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +31,14 @@ from jax.experimental import pallas as pl
 TB = 128  # base-state tile
 AB = 128  # action tile (A is padded up; extra actions have zero pmfs)
 KB = 128  # k-chunk width
+
+
+def auto_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve the backend-aware default: real lowering on TPU/GPU,
+    interpret mode everywhere else (CPU has no Mosaic/Triton path)."""
+    if interpret is None:
+        return jax.default_backend() not in ("tpu", "gpu")
+    return interpret
 
 
 def _kernel(h_ref, pmf_ref, tail_ref, hso_ref, out_ref, *, k_pad: int):
@@ -54,12 +63,16 @@ def _kernel(h_ref, pmf_ref, tail_ref, hso_ref, out_ref, *, k_pad: int):
     out_ref[...] = acc + tail_ref[...] * hso_ref[0, 0]
 
 
-def bellman_banded(h_main, pmfs, tails, h_overflow, *, interpret: bool = True):
+def bellman_banded(
+    h_main, pmfs, tails, h_overflow, *, interpret: Optional[bool] = None
+):
     """G[t, a] = sum_k pmfs[a,k] h_main[t+k] + tails[t,a] * h_overflow.
 
     h_main: (T + K,) f32 (zero-padded past s_max); pmfs: (A, K); tails: (T, A).
-    Returns (T, A) f32.
+    Returns (T, A) f32.  ``interpret=None`` autodetects the backend
+    (lowered on TPU/GPU, interpret on CPU).
     """
+    interpret = auto_interpret(interpret)
     T, A = tails.shape
     K = pmfs.shape[1]
     t_pad = -(-T // TB) * TB
@@ -91,3 +104,71 @@ def bellman_banded(h_main, pmfs, tails, h_overflow, *, interpret: bool = True):
         interpret=interpret,
     )(h_p, pmf_p, tail_p, hso)
     return out[:T, :A]
+
+
+def _kernel_batched(h_ref, pmf_ref, tail_ref, hso_ref, out_ref, *, k_pad: int):
+    # identical math to _kernel, one spec per leading grid step
+    ti = pl.program_id(1)
+    t0 = ti * TB
+    h = h_ref[0]  # (T_pad + K_pad,) this spec's h, resident in VMEM
+    acc = jnp.zeros((TB, AB), dtype=jnp.float32)
+    for c in range(k_pad // KB):
+        cols = [
+            jax.lax.dynamic_slice(h, (t0 + c * KB + kk,), (TB,))
+            for kk in range(KB)
+        ]
+        hwin = jnp.stack(cols, axis=1)  # (TB, KB)
+        pmf_chunk = pmf_ref[0, :, c * KB : (c + 1) * KB]  # (AB, KB)
+        acc = acc + jax.lax.dot_general(
+            hwin,
+            pmf_chunk,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    out_ref[0] = acc + tail_ref[0] * hso_ref[0, 0]
+
+
+def bellman_banded_batched(
+    h_main, pmfs, tails, h_overflow, *, interpret: Optional[bool] = None
+):
+    """Spec-batched bellman_banded: one kernel launch for a whole sweep.
+
+    The spec axis is a third grid dimension — not a vmap of the scalar
+    kernel — so a lowered TPU run walks N x (T/TB) x (A/AB) tiles of one
+    pallas_call; this is what the batched RVI lockstep (rvi.
+    relative_value_iteration_batched with backup="pallas") dispatches.
+
+    h_main: (N, T + K); pmfs: (N, A, K); tails: (N, T, A); h_overflow: (N,).
+    Returns (N, T, A) f32.
+    """
+    interpret = auto_interpret(interpret)
+    N, T, A = tails.shape
+    K = pmfs.shape[2]
+    t_pad = -(-T // TB) * TB
+    a_pad = -(-A // AB) * AB
+    k_pad = -(-K // KB) * KB
+    h_p = jnp.zeros((N, t_pad + k_pad), jnp.float32)
+    h_p = h_p.at[:, : h_main.shape[1]].set(h_main.astype(jnp.float32))
+    pmf_p = jnp.zeros((N, a_pad, k_pad), jnp.float32).at[:, :A, :K].set(
+        pmfs.astype(jnp.float32)
+    )
+    tail_p = jnp.zeros((N, t_pad, a_pad), jnp.float32).at[:, :T, :A].set(
+        tails.astype(jnp.float32)
+    )
+    hso = h_overflow.astype(jnp.float32).reshape(N, 1)
+
+    grid = (N, t_pad // TB, a_pad // AB)
+    out = pl.pallas_call(
+        functools.partial(_kernel_batched, k_pad=k_pad),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t_pad + k_pad), lambda n, i, j: (n, 0)),
+            pl.BlockSpec((1, AB, k_pad), lambda n, i, j: (n, j, 0)),
+            pl.BlockSpec((1, TB, AB), lambda n, i, j: (n, i, j)),
+            pl.BlockSpec((1, 1), lambda n, i, j: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TB, AB), lambda n, i, j: (n, i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, t_pad, a_pad), jnp.float32),
+        interpret=interpret,
+    )(h_p, pmf_p, tail_p, hso)
+    return out[:, :T, :A]

@@ -31,10 +31,32 @@ def _bellman_jit(h_main, pmfs, tails, h_overflow, interpret=True):
 
 
 def bellman_backup(h_main, pmfs, tails, h_overflow, interpret: Optional[bool] = None):
-    """Banded RVI backup G[t,a] (see kernels/bellman.py)."""
+    """Banded RVI backup G[t,a] (see kernels/bellman.py).
+
+    The bellman kernels resolve ``interpret=None`` via their own
+    backend-aware default (lowered on TPU *and* GPU — the kernel is a plain
+    tiled matmul loop — interpret on CPU).
+    """
     return _bellman_jit(
         h_main, pmfs, tails, jnp.asarray(h_overflow, jnp.float32),
-        interpret=_auto_interpret(interpret),
+        interpret=_bellman.auto_interpret(interpret),
+    )
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _bellman_batched_jit(h_main, pmfs, tails, h_overflow, interpret=True):
+    return _bellman.bellman_banded_batched(
+        h_main, pmfs, tails, h_overflow, interpret=interpret
+    )
+
+
+def bellman_backup_batched(
+    h_main, pmfs, tails, h_overflow, interpret: Optional[bool] = None
+):
+    """Spec-batched banded RVI backup G[n,t,a] (see kernels/bellman.py)."""
+    return _bellman_batched_jit(
+        h_main, pmfs, tails, jnp.asarray(h_overflow, jnp.float32),
+        interpret=_bellman.auto_interpret(interpret),
     )
 
 

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.bellman import bellman_banded
+from repro.kernels.bellman import bellman_banded, bellman_banded_batched
 from repro.kernels.flash_attention import flash_attention as flash_pallas
 
 
@@ -26,6 +26,21 @@ class TestBellmanKernel:
         got = bellman_banded(h_main, pmfs, tails, 2.5)
         want = ref.bellman_banded_ref(h_main, pmfs, tails, 2.5)
         np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-5)
+
+    @pytest.mark.parametrize("N,T,A,K", [(1, 64, 9, 40), (3, 130, 33, 130), (4, 128, 17, 260)])
+    def test_batched_matches_ref(self, N, T, A, K):
+        ks = jax.random.split(jax.random.fold_in(KEY, N * T + K), 4)
+        h = jax.random.normal(ks[0], (N, T + K)) * 10
+        pmfs = jax.nn.softmax(jax.random.normal(ks[1], (N, A, K)), axis=-1)
+        tails = jax.random.uniform(ks[2], (N, T, A))
+        hso = jax.random.normal(ks[3], (N,)) * 3
+        got = bellman_banded_batched(h, pmfs, tails, hso)
+        assert got.shape == (N, T, A)
+        for n in range(N):
+            want = ref.bellman_banded_ref(h[n], pmfs[n], tails[n], hso[n])
+            np.testing.assert_allclose(got[n], want, atol=1e-4, rtol=1e-5)
+            scalar = bellman_banded(h[n], pmfs[n], tails[n], hso[n])
+            np.testing.assert_allclose(got[n], scalar, atol=1e-5, rtol=1e-6)
 
     def test_rvi_with_pallas_backup_matches_banded(self):
         from repro.core import (GOOGLENET_P4_ENERGY, GOOGLENET_P4_LATENCY,
