@@ -15,7 +15,9 @@ from .common import emit, timed
 B = 8
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    rhos = (0.3, 0.7) if smoke else (0.1, 0.3, 0.5, 0.7, 0.9)
+    w2s = (0.0, 1.0) if smoke else (0.0, 0.5, 1.0)
     cases = {
         # case 4: B_min = 5 (violates Assumption 2)
         "case4_bmin5": dict(latency=ConstantProfile(2.4252), family="det",
@@ -37,8 +39,8 @@ def run() -> None:
             nonlocal broke, total
             svc = ServiceModel(latency=kw["latency"], family=kw["family"])
             mu = 1.0 / float(svc.mean(B))
-            for rho in (0.1, 0.3, 0.5, 0.7, 0.9):
-                for w2 in (0.0, 0.5, 1.0):
+            for rho in rhos:
+                for w2 in w2s:
                     spec = SMDPSpec(
                         lam=rho * B * mu, service=svc, energy=kw["energy"],
                         b_min=kw["b_min"], b_max=B, w1=1.0, w2=w2,

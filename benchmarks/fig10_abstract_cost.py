@@ -31,9 +31,9 @@ def min_smax(c_o: float, rho: float = 0.9, w2: float = 1.0):
     return None, None, None
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     results = {}
-    for c_o in C_OS:
+    for c_o in (100.0, 0.0) if smoke else C_OS:
         (s_min, res, ev), us = timed(min_smax, c_o)
         if s_min is None:
             emit(f"table2_co_{c_o:g}", us, "no_acceptable_smax<=256")

@@ -18,7 +18,9 @@ CASES = [
 B = 8
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    rhos = (0.3, 0.7) if smoke else (0.1, 0.3, 0.5, 0.7, 0.9)
+    w2s = (0.0, 1.0) if smoke else (0.0, 0.5, 1.0, 100.0)
     total = 0
     control_limit_ok = 0
     prop4_ok = 0
@@ -29,8 +31,8 @@ def run() -> None:
         for name, lat, family in CASES:
             svc = ServiceModel(latency=lat, family=family)
             mu = 1.0 / float(svc.mean(B))
-            for rho in (0.1, 0.3, 0.5, 0.7, 0.9):
-                for w2 in (0.0, 0.5, 1.0, 100.0):
+            for rho in rhos:
+                for w2 in w2s:
                     spec = SMDPSpec(
                         lam=rho * B * mu, service=svc,
                         energy=GOOGLENET_P4_ENERGY, b_min=1, b_max=B,

@@ -12,9 +12,9 @@ from repro.core.tradeoff import average_cost_grid
 from .common import emit, paper_spec, timed
 
 
-def run() -> None:
-    w2s = [0.0, 1.0, 3.0, 7.0, 15.0]
-    for rho in (0.1, 0.3, 0.7):
+def run(smoke: bool = False) -> None:
+    w2s = [0.0, 1.0, 7.0] if smoke else [0.0, 1.0, 3.0, 7.0, 15.0]
+    for rho in (0.3, 0.7) if smoke else (0.1, 0.3, 0.7):
         grid, us = timed(average_cost_grid, paper_spec(rho=rho), w2s)
         smdp = np.asarray(grid["smdp"])
         worst_violation = 0.0

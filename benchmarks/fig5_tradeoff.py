@@ -10,12 +10,14 @@ from repro.core.tradeoff import benchmark_points, smdp_tradeoff_curve
 from .common import emit, paper_spec, timed
 
 W2S = [0.0, 0.3, 0.8, 1.3, 1.6, 2.2, 5.0, 15.0, 50.0]
+W2S_SMOKE = [0.0, 1.6, 15.0]
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    w2s = W2S_SMOKE if smoke else W2S
     for rho in (0.3, 0.7):
         spec = paper_spec(rho=rho)
-        curve, us = timed(smdp_tradeoff_curve, spec, W2S)
+        curve, us = timed(smdp_tradeoff_curve, spec, w2s)
         bench = benchmark_points(spec)
         dominated_by_bench = 0
         for pt in curve:
@@ -25,7 +27,7 @@ def run() -> None:
         pts = ";".join(f"w2={p.w2}:W={p.w_bar:.2f}ms:P={p.p_bar:.2f}W" for p in curve[:4])
         emit(
             f"fig5_tradeoff_rho{rho}",
-            us / len(W2S),
+            us / len(w2s),
             f"smdp_points_dominated={dominated_by_bench}/ {len(curve)};{pts}",
         )
 

@@ -22,7 +22,9 @@ PAPER = {
 }
 
 
-def run(n_epochs: int = 150_000) -> None:
+def run(n_epochs: int = 150_000, smoke: bool = False) -> None:
+    if smoke:
+        n_epochs = min(n_epochs, 25_000)
     spec = paper_spec(rho=0.7)
     en = energy_table(spec)
     policies = {"static8": static_policy(8, spec.s_max)}

@@ -9,10 +9,11 @@ from .common import emit, paper_spec, timed
 W2S = [0.0, 0.5, 1.5, 5.0, 20.0]
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    w2s = [0.0, 1.5, 20.0] if smoke else W2S
     for rho in (0.3, 0.7):
         spec = paper_spec(rho=rho, latency=IDEAL_PARALLEL_LATENCY)
-        curve, us = timed(smdp_tradeoff_curve, spec, W2S)
+        curve, us = timed(smdp_tradeoff_curve, spec, w2s)
         bench = benchmark_points(spec)
         # paper claim: with constant l(b), max batching approaches greedy
         # latency at high load; SMDP still never dominated
@@ -24,7 +25,7 @@ def run() -> None:
         m_w = bench.get("static_32", (float("nan"),) * 2)[0]
         emit(
             f"fig7_ideal_parallel_rho{rho}",
-            us / len(W2S),
+            us / len(w2s),
             f"dominated={dominated};greedy_W={g_w:.2f};max_batch_W={m_w:.2f}",
         )
 

@@ -13,10 +13,11 @@ from .common import emit, paper_spec, timed
 W2S = [0.0, 0.3, 1.0, 3.0, 10.0]
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    w2s = [0.0, 1.0, 10.0] if smoke else W2S
     for rho in (0.3, 0.7):
         spec = paper_spec(rho=rho, energy=LOG_ENERGY)
-        curve, us = timed(smdp_tradeoff_curve, spec, W2S)
+        curve, us = timed(smdp_tradeoff_curve, spec, w2s)
         bench = benchmark_points(spec)
         dominated = sum(
             1 for pt in curve for (w_b, p_b) in bench.values()
@@ -26,7 +27,7 @@ def run() -> None:
         p_range = max(pt.p_bar for pt in curve) - min(pt.p_bar for pt in curve)
         emit(
             f"fig8_log_energy_rho{rho}",
-            us / len(W2S),
+            us / len(w2s),
             f"dominated={dominated};power_range={p_range:.2f}W",
         )
 

@@ -13,10 +13,11 @@ from .common import emit, paper_spec, timed
 FAMILIES = ("det", "erlang", "expo", "hyperexpo")
 
 
-def run() -> None:
-    for rho in (0.3, 0.7):
+def run(smoke: bool = False) -> None:
+    for rho in (0.3,) if smoke else (0.3, 0.7):
         specs = [
-            paper_spec(rho=rho, family=fam, s_max=192) for fam in FAMILIES
+            paper_spec(rho=rho, family=fam, s_max=128 if smoke else 192)
+            for fam in FAMILIES
         ]
         results, us = timed(sweep_solve, specs)
         ws = {fam: res.eval.w_bar for fam, res in zip(FAMILIES, results)}

@@ -13,7 +13,8 @@ from repro.kernels import ops
 from .common import emit, timed
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    del smoke  # already CPU-reduced: uniform interface for run.py --smoke
     key = jax.random.PRNGKey(0)
 
     # bellman: paper-size backup (s_max=192, Bmax=32)

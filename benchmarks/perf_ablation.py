@@ -27,7 +27,8 @@ def _load(d: Path):
     return out
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    del smoke  # already CPU-reduced: uniform interface for run.py --smoke
     base = _load(BASE)
     opt = _load(OPT)
     if not base or not opt:

@@ -21,7 +21,8 @@ def rows(mesh: str = "single_pod"):
     return out
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    del smoke  # already CPU-reduced: uniform interface for run.py --smoke
     recs = rows()
     if not recs:
         emit("roofline_report", 0.0, "no_artifacts_run_launch.dryrun_first")

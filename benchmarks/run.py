@@ -1,11 +1,19 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark suite entry point: every paper table/figure + beyond-paper runs.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--only substring]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only substring] [--smoke]
+
+--smoke runs every suite in its reduced mode (smaller grids / horizons /
+epoch counts — each module's ``run(smoke=True)``), the same modes the CI
+bench-smoke job exercises; a full pass in minutes instead of hours.
+Serving-side suites route through the unified engine (and its compiled
+backend where the contender is table-static); solver-side suites route
+through the batched sweep engine.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -14,6 +22,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter on module names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced mode for every benchmark (CI-sized)")
     args = ap.parse_args()
 
     from . import (
@@ -58,9 +68,17 @@ def main() -> None:
     for name, fn in suites:
         if args.only and args.only not in name:
             continue
+        kw = {}
+        if args.smoke:
+            if "smoke" not in inspect.signature(fn).parameters:
+                raise SystemExit(
+                    f"{name}.run() has no reduced mode; every benchmark "
+                    "must accept smoke= (see --smoke)"
+                )
+            kw["smoke"] = True
         t0 = time.perf_counter()
         try:
-            fn()
+            fn(**kw)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)

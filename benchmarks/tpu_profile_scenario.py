@@ -39,8 +39,11 @@ def arch_workload(cfg, chips=8):
     )
 
 
-def run() -> None:
-    for name, cfg in ARCHS.items():
+def run(smoke: bool = False) -> None:
+    archs = list(ARCHS.items())
+    if smoke:
+        archs = archs[:3]
+    for name, cfg in archs:
         svc, energy = tpu_service_model(arch_workload(cfg))
         lam = 0.6 * BMAX / float(svc.mean(BMAX))
 

@@ -1,5 +1,10 @@
 """Quickstart: solve the paper's GoogLeNet/TESLA-P4 scenario end to end.
 
+Solves the SMDP, compares against benchmark policies analytically, then
+serves 100k decision epochs through the unified serving engine's compiled
+backend (one jitted scan — the same engine that runs MMPP / trace /
+executor modes).
+
     PYTHONPATH=src python examples/quickstart.py [--rho 0.7] [--w2 1.6]
 """
 import argparse
@@ -17,7 +22,7 @@ from repro.core import (
     solve,
     static_policy,
 )
-from repro.core.simulate import simulate
+from repro.serving import ServingEngine, SMDPScheduler
 
 
 def main():
@@ -57,10 +62,16 @@ def main():
             print(f"{name:9s}: unstable at this load")
 
     en = np.array([0.0] + [float(GOOGLENET_P4_ENERGY(b)) for b in range(1, args.b_max + 1)])
-    sim = simulate(res.policy[:-1], svc, en, lam, args.b_max, n_epochs=100_000, seed=0)
-    p50, p95, p99 = sim.percentile([50, 95, 99])
-    print(f"\nsimulated ({sim.n_served} requests): W={sim.w_bar:.3f} ms  "
-          f"P={sim.p_bar:.2f} W  P50={p50:.2f}  P95={p95:.2f}  P99={p99:.2f}")
+    eng = ServingEngine(
+        SMDPScheduler(res), lam=lam, b_max=args.b_max, service=svc,
+        energy_table=en, seed=0,
+    )
+    rep = eng.run(100_000, backend="compiled")
+    p50, p95, p99 = rep.percentile([50, 95, 99])
+    print(f"\nserved ({rep.n_served} requests, compiled engine backend): "
+          f"W={rep.latencies.mean():.3f} ms  P={rep.power:.2f} W  "
+          f"P50={p50:.2f}  P95={p95:.2f}  P99={p99:.2f}  "
+          f"mean_batch={rep.mean_batch:.1f}")
 
 
 if __name__ == "__main__":

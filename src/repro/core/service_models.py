@@ -196,6 +196,37 @@ class ServiceModel:
         raise ValueError(f"unknown family {self.family!r}")
 
     # -- sampling (for the event-driven simulator) ---------------------------
+    def unit_draws(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """n unit-scale draws U with sample(b) ~ mean(b) * U for every b.
+
+        Every family is a scale mixture around the batch mean, so a single
+        a-independent draw sequence parameterizes the whole service law —
+        the compiled simulator (serving.compiled) consumes one draw per
+        serve epoch, and a shared sequence makes the compiled and Python
+        backends decision-for-decision identical.  `det` consumes no rng
+        state (matching sample(), which never touches the generator).
+        """
+        if self.family == "det":
+            return np.ones(n)
+        if self.family == "erlang":
+            k = self.erlang_k
+            return rng.gamma(shape=k, scale=1.0 / k, size=n)
+        if self.family == "expo":
+            return rng.exponential(scale=1.0, size=n)
+        if self.family == "hyperexpo":
+            w = np.asarray(self.hyper_weights)
+            s = np.asarray(self.hyper_scales)
+            s = s / float(np.sum(w * s))
+            comp = rng.choice(len(w), size=n, p=w / w.sum())
+            return rng.exponential(scale=s[comp], size=n)
+        if self.family == "atoms":
+            w = np.asarray(self.atom_weights)
+            s = np.asarray(self.atom_scales)
+            s = s / float(np.sum(w * s))
+            comp = rng.choice(len(w), size=n, p=w / w.sum())
+            return s[comp]
+        raise ValueError(f"unknown family {self.family!r}")
+
     def sample(self, b: int, rng: np.random.Generator, n: int) -> np.ndarray:
         m = float(self.mean(b))
         if self.family == "det":

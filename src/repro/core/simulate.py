@@ -1,4 +1,4 @@
-"""Simulation of the batch-service queue: scan fast path + shared kernel.
+"""Simulation of the batch-service queue: two backends, one queue semantics.
 
 Simulates the exact SMDP dynamics epoch-by-epoch (decision epochs = service
 completions, or arrivals while idle) under an arbitrary policy table, and
@@ -6,15 +6,29 @@ records *per-request* response times so that latency CDFs / percentiles
 (paper Fig. 6, Table I) can be measured — the analytic evaluator only gives
 averages.
 
-Two entry points, one queue semantics:
-  * simulate()        — the jax.lax.scan specialization for Poisson
-    arrivals: all randomness is jax.random (seeded, reproducible), the
-    request FIFO is a fixed-size circular buffer, and the whole horizon
-    runs as one jitted scan.
+Backends (cross-checked decision-for-decision in the test suite):
+
+  * Python event loop (repro.serving.engine._run_events) — the reference
+    kernel.  Arrivals from any ArrivalProcess, stateful online schedulers,
+    wall-clock executors.  Interpreter-speed: right for moderate horizons
+    and anything adaptive.
+  * Compiled scan (repro.serving.compiled) — the SAME decision-epoch
+    semantics as one jitted `jax.lax.scan`, vmappable across
+    seeds x scenarios x policy tables.  Right for measurement-grade
+    replication sweeps and million-event horizons; placeable on TPU/GPU
+    unchanged.
+
+Entry points here:
+  * simulate()        — the historical jax.lax.scan specialization for
+    Poisson arrivals (randomness from jax.random, request FIFO as a ring
+    buffer, one jitted scan).  Kept as the independent cross-check
+    implementation — it draws arrivals *during* service from Poisson
+    counts, where the compiled backend replays a pre-generated stream —
+    and as the l_bar time-integral reference.
   * simulate_events() — the general path for any arrival process (MMPP,
-    traces, ...): a thin wrapper over the unified serving kernel
-    (repro.serving.engine), so the event-driven queue loop exists exactly
-    once in the repo.  The two are cross-checked in tests/test_serving.py.
+    traces, ...): a thin wrapper over the unified serving engine, so the
+    event-driven queue semantics exists exactly once in the repo.
+    ``backend="compiled"`` routes it through the scan kernel.
 """
 from __future__ import annotations
 
@@ -55,14 +69,17 @@ def simulate_events(
     n_epochs: int | None = 100_000,
     horizon: float | None = None,
     seed: int = 0,
+    backend: str = "python",
 ) -> SimResult:
-    """General event-driven simulation via the unified serving kernel.
+    """General event-driven simulation via the unified serving engine.
 
     Same decision-epoch semantics as simulate(), but arrivals come from any
     serving.arrivals.ArrivalProcess instead of being fixed to Poisson, and
     the queue loop is the serving engine's — not a duplicate.  l_bar is
     exact by Little's law on the served set (the scan keeps its independent
-    time-integral as a cross-check).
+    time-integral as a cross-check).  ``backend="compiled"`` runs the jitted
+    scan kernel instead of the Python loop (identical decisions; see
+    serving.engine.run).
     """
     from repro.serving.arrivals import as_process
     from repro.serving.engine import ServingEngine
@@ -76,7 +93,7 @@ def simulate_events(
         energy_table=energy_table,
         seed=seed,
     )
-    rep = eng.run(n_epochs=n_epochs, horizon=horizon)
+    rep = eng.run(n_epochs=n_epochs, horizon=horizon, backend=backend)
     lat_sum = float(rep.latencies.sum())
     return SimResult(
         response_times=rep.latencies,

@@ -47,14 +47,24 @@ def sweep_bank(
     base: SMDPSpec,
     lams: Sequence[float],
     w2s: Optional[Sequence[float]] = None,
+    profiles: Optional[dict] = None,
     **solve_kw,
 ):
-    """Solve a lambda x w2 grid and return it as an SMDPSchedulerBank.
+    """Solve a lambda x w2 (x service-profile) grid as an SMDPSchedulerBank.
 
     The serving-side entry point for regime-adaptive scheduling: the bank's
-    (lam, w2)-keyed action tables are what AdaptiveController retunes
-    against as the observed arrival rate (or the energy price) drifts.
-    ``w2s`` defaults to the base spec's w2 (a pure lambda grid).
+    keyed action tables are what AdaptiveController retunes against as the
+    observed arrival rate (or the energy price) drifts.  ``w2s`` defaults
+    to the base spec's w2 (a pure lambda grid).
+
+    ``profiles`` adds the third bank axis: a mapping from a numeric
+    service-profile id to the spec fields that profile overrides (a dict
+    for dataclasses.replace — typically ``{"service": ..., "energy": ...}``
+    from a profiled or roofline-derived model, core.profiles).  Keys become
+    (lam, w2, profile) and the serving layer selects the slice by pinning
+    the coordinate: ``bank.scheduler(lam=..., w2=..., profile=pid)`` or
+    ``AdaptiveController(bank, w2=..., profile=pid)``.  All profiles must
+    share b_max (the action axis cannot be padded).
     """
     from repro.serving.scheduler import SMDPScheduler
 
@@ -62,14 +72,29 @@ def sweep_bank(
     w2s = [base.w2] if w2s is None else list(w2s)
     if len(lams) == 0 or len(w2s) == 0:
         raise ValueError("sweep_bank needs at least one lam and one w2")
+    variants = [(None, {})] if profiles is None else [
+        (float(pid), dict(over)) for pid, over in profiles.items()
+    ]
+    if not variants:
+        raise ValueError("profiles= must contain at least one profile")
     specs, keys = [], []
-    for lam in lams:
-        for w2 in w2s:
-            specs.append(
-                dataclasses.replace(base, lam=float(lam), w2=float(w2))
-            )
-            keys.append((float(lam), float(w2)))
-    return SMDPScheduler.bank(sweep_solve(specs, **solve_kw), keys=keys)
+    for pid, over in variants:
+        for lam in lams:
+            for w2 in w2s:
+                specs.append(
+                    dataclasses.replace(
+                        base, lam=float(lam), w2=float(w2), **over
+                    )
+                )
+                keys.append(
+                    (float(lam), float(w2))
+                    if pid is None
+                    else (float(lam), float(w2), pid)
+                )
+    key_names = ("lam", "w2") if profiles is None else ("lam", "w2", "profile")
+    return SMDPScheduler.bank(
+        sweep_solve(specs, **solve_kw), keys=keys, key_names=key_names
+    )
 
 
 def pad_specs(specs: Sequence[SMDPSpec]) -> List[SMDPSpec]:

@@ -1,10 +1,15 @@
-"""Serving layer: one event-driven kernel, pluggable arrivals, bank retuning.
+"""Serving layer: one event semantics, two backends, pluggable arrivals.
 
 serving.engine runs every mode (profiled virtual clock, wall-clock
-executor, MMPP / trace replay) through a single kernel; serving.arrivals
-supplies the arrival processes; serving.scheduler holds the policy tables,
-the solved-sweep banks, and the online AdaptiveController; serving.metrics
-streams latency quantiles, power, and the arrival-rate estimate.
+executor, MMPP / trace replay) through a single Python kernel, and exposes
+the same semantics compiled (run(backend="compiled")); serving.compiled is
+that jitted lax.scan kernel plus the vmapped seeds x scenarios x policies
+grid runner; serving.arrivals supplies the arrival processes (lazy numpy
+and scan-compatible jax samplers); serving.scheduler holds the policy
+tables, the solved-sweep banks (lambda x w2 x service-profile axes), and
+the online AdaptiveController; serving.metrics streams latency quantiles
+(P² on the Python path, fixed-bin histogram sketch on the compiled path),
+power, and the arrival-rate estimate.
 """
 from .arrivals import (  # noqa: F401
     ArrivalEvent,
@@ -22,6 +27,24 @@ from .scheduler import (  # noqa: F401
     SMDPSchedulerBank,
     StaticScheduler,
     QPolicyScheduler,
+    as_action_table,
 )
-from .metrics import P2Quantile, RateEstimator, ServingMetrics  # noqa: F401
-from .engine import ServingEngine, Request, EngineReport  # noqa: F401
+from .metrics import (  # noqa: F401
+    P2Quantile,
+    RateEstimator,
+    ServingMetrics,
+    histogram_quantiles,
+)
+from .engine import (  # noqa: F401
+    EngineReport,
+    Request,
+    ServingEngine,
+    verify_backends,
+)
+from .compiled import (  # noqa: F401
+    CompiledResult,
+    pad_arrivals,
+    pad_arrivals_batch,
+    run_grid,
+    simulate_compiled,
+)

@@ -1,4 +1,4 @@
-"""Pluggable arrival processes for the unified serving kernel.
+"""Pluggable arrival processes for the unified serving kernel, both backends.
 
 The serving engine (serving.engine) is one event-driven loop; what differs
 between scenarios is *where the next request comes from*.  An
@@ -16,6 +16,16 @@ Implemented processes:
 
 `as_process` coerces a rate, an MMPP2, an array of times, or a Request list
 into the right process, so engine call-sites stay terse.
+
+The compiled backend (serving.compiled) replays every mode as a padded
+sorted arrival array.  Two routes produce one:
+  * eager pre-generation — `take(process, rng, ...)` drains the stateful
+    numpy process up to a horizon/count, consuming exactly the draws the
+    lazy engine path would (draw-for-draw parity with backend="python");
+  * scan-compatible jax samplers — `poisson_times_jax` /`mmpp2_times_jax`
+    generate whole seed batches on-device (the MMPP2 phase chain folded
+    into the sampler's scan carry), for statistically-equivalent
+    seeds x scenarios sweeps at device throughput.
 """
 from __future__ import annotations
 
@@ -201,6 +211,23 @@ class TraceProcess(ArrivalProcess):
         self._i += 1
         return ev
 
+    def drain(self) -> List[ArrivalEvent]:
+        """Consume and return every remaining event (cursor to the end).
+
+        The compiled backend materializes the whole remaining trace at
+        once; paired with rewind() it is the batch equivalent of repeated
+        next() calls, keeping the cursor authoritative.
+        """
+        evs = self.events[self._i:]
+        self._i = len(self.events)
+        return evs
+
+    def rewind(self, n: int) -> None:
+        """Push the last n consumed events back onto the stream."""
+        if not 0 <= n <= self._i:
+            raise ValueError(f"cannot rewind {n} of {self._i} consumed")
+        self._i -= n
+
     @property
     def mean_rate(self) -> float:
         if len(self.events) < 2:
@@ -213,6 +240,98 @@ class TraceProcess(ArrivalProcess):
 
     def restore(self, state: dict) -> None:
         self._i = state["i"]
+
+
+def take(
+    process: ArrivalProcess,
+    rng: np.random.Generator,
+    *,
+    horizon: Optional[float] = None,
+    n: Optional[int] = None,
+) -> Tuple[List[ArrivalEvent], Optional[ArrivalEvent]]:
+    """Eagerly drain a process: events below the bound + the first beyond.
+
+    With ``horizon``, draws until the first event at or past it (that event
+    is returned separately so the caller can push it back — exactly the
+    peek-and-hold discipline of the lazy engine path, consuming exactly the
+    same rng draws).  With ``n``, draws n events (or until exhaustion).
+    """
+    if (horizon is None) == (n is None):
+        raise ValueError("exactly one of horizon= or n= required")
+    events: List[ArrivalEvent] = []
+    overshoot: Optional[ArrivalEvent] = None
+    while True:
+        ev = process.next(rng)
+        if ev is None:
+            break
+        if horizon is not None and ev.time >= horizon:
+            overshoot = ev
+            break
+        events.append(ev)
+        if n is not None and len(events) >= n:
+            break
+    return events, overshoot
+
+
+# ---------------------------------------------------------------------------
+# Scan-compatible samplers (compiled-backend seed sweeps)
+# ---------------------------------------------------------------------------
+
+
+def poisson_times_jax(key, lam: float, n: int):
+    """(n,) sorted Poisson arrival times: cumulative sum of Exp(lam) gaps.
+
+    Pure jax (jit/vmap-safe): vmap over keys for a seeds axis.  Draws are
+    statistically equivalent to PoissonProcess, not bit-equal (different
+    generator) — use `take` for draw-for-draw parity with the Python loop.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    gaps = jax.random.exponential(key, (n,), dtype=jnp.float64) / lam
+    return jnp.cumsum(gaps)
+
+
+def mmpp2_times_jax(key, mmpp: "MMPP2", n_steps: int):
+    """MMPP(2) arrival times via one scan, phase chain in the carry.
+
+    Each scan step draws one candidate exponential gap at the current
+    phase's rate; if it crosses the pending phase switch the step emits no
+    arrival and re-draws the dwell of the new phase (same competing-clocks
+    construction as MMPP2Process.next).  Returns (times, mask): ``times``
+    sorted ascending with non-arrivals pushed to +inf, ``mask`` marking the
+    real arrivals (expected count ≈ n_steps * P(no switch per step)).
+    vmap over keys for a seeds axis; feed `serving.compiled` directly.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    lam = jnp.asarray([mmpp.lam1, mmpp.lam2], dtype=jnp.float64)
+    dwell = jnp.asarray([mmpp.dwell1, mmpp.dwell2], dtype=jnp.float64)
+    k0, kscan = jax.random.split(key)
+
+    def step(carry, ks):
+        t, phase, nsw = carry
+        kg, kd = jax.random.split(ks)
+        gap = jax.random.exponential(kg, dtype=jnp.float64) / lam[phase]
+        switch = t + gap >= nsw
+        new_phase = jnp.where(switch, 1 - phase, phase)
+        t_new = jnp.where(switch, nsw, t + gap)
+        nsw_new = jnp.where(
+            switch,
+            nsw + jax.random.exponential(kd, dtype=jnp.float64)
+            * dwell[new_phase],
+            nsw,
+        )
+        return (t_new, new_phase, nsw_new), (t_new, ~switch)
+
+    nsw0 = jax.random.exponential(k0, dtype=jnp.float64) * dwell[0]
+    carry0 = (jnp.asarray(0.0, dtype=jnp.float64), jnp.asarray(0), nsw0)
+    _, (times, emitted) = jax.lax.scan(
+        step, carry0, jax.random.split(kscan, n_steps)
+    )
+    order = jnp.argsort(jnp.where(emitted, times, jnp.inf))
+    return jnp.where(emitted, times, jnp.inf)[order], emitted[order]
 
 
 def as_process(x) -> ArrivalProcess:

@@ -1,0 +1,521 @@
+"""Compiled serving simulator: ONE jitted `lax.scan` decision-epoch kernel.
+
+The Python engine (serving.engine._run_events) walks the queue one event at
+a time — perfect for wall-clock executors and stateful online controllers,
+hopeless for replication sweeps: a multi-seed bank comparison is minutes of
+interpreter time while the solver finishes in milliseconds.  This module is
+the compiled backend: the SAME decision-epoch semantics as `_run_events`,
+expressed as a single `jax.lax.scan` step and `vmap`-ped across
+(seeds x scenarios) x policy tables so an entire bank comparison is one
+device dispatch.
+
+Key representation choices:
+
+  * Arrivals are a pre-sorted, +inf-padded array.  Requests are served FIFO
+    and admitted in time order, so the queue at any moment is a contiguous
+    window ``arrivals[n_served : n_admitted]`` — no ring buffer, just two
+    carried indices.  Every arrival mode reduces to this form: traces
+    directly, Poisson / MMPP2 via the scan-compatible samplers in
+    serving.arrivals (the MMPP2 phase chain lives in that sampler's carry)
+    or via eager numpy pre-generation when draw-for-draw parity with the
+    Python engine is wanted (ServingEngine.run(backend="compiled")).
+  * One *event* per scan step — an O(1) admission pointer increment or a
+    decision epoch — and a scalars-only carry; per-request accounting
+    (latencies, the fixed-bin log-spaced histogram sketch, SLO misses) is
+    reconstructed vectorized after the scan, so `run_grid` returns O(bins)
+    aggregates per lane no matter the horizon and `record=True` yields the
+    full decision/latency record for the equivalence harness.
+  * Service times are ``means[a] * unit_draws[k]`` — every ServiceModel
+    family is a unit-scale draw times the batch-size mean, so a shared draw
+    sequence makes the compiled and Python backends decision-for-decision
+    identical (the equivalence harness in serving.engine).
+  * Scan length and array sizes are bucketed to powers of two and the
+    actual epoch budget is a traced scalar, so re-runs at nearby sizes hit
+    the jit cache; finished lanes freeze via a `done` flag, and a lane that
+    runs out of steps is re-dispatched at a doubled length.
+
+Termination mirrors the Python kernel exactly: a wait decision with no
+live arrival left either drains the queue in b_max-capped batches
+(drain=True) or terminates; an epoch budget caps the run regardless.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.service_models import ServiceModel  # noqa: F401  (x64 on import)
+
+#: default fixed-bin latency sketch resolution (log-spaced bins)
+DEFAULT_N_BINS = 256
+
+
+def default_hist_edges(
+    means: np.ndarray, n_bins: int = DEFAULT_N_BINS,
+    lo_scale: float = 0.25, hi_scale: float = 2000.0,
+) -> np.ndarray:
+    """Log-spaced latency bin edges from the service-mean scale.
+
+    Latencies are bounded below by (a fraction of) the single-request
+    service time and above by queueing delay; ~4%-wide log bins over
+    [means[1]/4, 2000 * means[b_max]] keep the sketch quantile error well
+    inside the tolerance band tested against np.percentile.
+    """
+    lo = max(float(means[1]) * lo_scale, 1e-9)
+    hi = max(float(means[-1]) * hi_scale, lo * 10.0)
+    return np.geomspace(lo, hi, n_bins + 1)
+
+
+def _bucket(n: int, floor: int = 256) -> int:
+    """Smallest size >= n from {2^k, 3*2^k} (jit-cache friendly shapes).
+
+    The half-step sizes bound the padding waste at 33% instead of 100% —
+    scan steps are the whole cost of a frozen lane, so the finer ladder is
+    worth the few extra jit cache entries.
+    """
+    b = floor
+    while b < n:
+        h = (b * 3) // 2
+        if h >= n:
+            return h
+        b <<= 1
+    return b
+
+
+#: scan lengths that completed, keyed by problem shape — repeat dispatches
+#: (benchmark loops, warmed sweeps) skip the escalation ladder entirely
+_NSTEPS_CACHE: dict = {}
+
+
+def _initial_steps(key, n_arr: int, max_eps: int, cap: int) -> int:
+    # a completed run caches its exact-fit size (from the kernel's step
+    # counter), so repeat dispatches carry no padding slack beyond the
+    # bucket; a fresh shape starts from the typical-count heuristic
+    # (admissions run _ADMIT_W-wide, epochs ~0.5 per arrival) and the
+    # escalation loop covers the rare policies that need more
+    cached = _NSTEPS_CACHE.get(key)
+    if cached is not None:
+        return min(cached, cap)
+    return min(
+        _bucket(
+            n_arr // _ADMIT_W + max(256, min(max_eps, n_arr) // 2 + 2)
+        ),
+        cap,
+    )
+
+
+#: arrivals admitted per scan step (a dynamic_slice window): bursts cost
+#: ceil(m / _ADMIT_W) steps instead of m.  Padded arrays must end in at
+#: least this many +inf sentinels so the slice never clamps into real data.
+_ADMIT_W = 4
+
+
+def pad_arrivals(times, deadlines=None, size: Optional[int] = None):
+    """Sort + pad an arrival-time array with +inf to a bucketed size.
+
+    Returns (arrivals, deadlines) float64 arrays of length ``size`` (or the
+    next power-of-two above len(times) plus the kernel's sentinel margin).
+    Padded deadlines are +inf (never miss).
+    """
+    t = np.asarray(times, dtype=np.float64)
+    finite = np.isfinite(t)  # idempotent: +inf padding is re-derived
+    d = None
+    if deadlines is not None:
+        d = np.asarray(deadlines, dtype=np.float64)
+        if len(d) != len(t):
+            raise ValueError("deadlines must align with times")
+        d = d[finite]
+    t = t[finite]
+    order = np.argsort(t, kind="stable")
+    t = t[order]
+    n = len(t)
+    size = _bucket(n + _ADMIT_W) if size is None else size
+    if size < n + _ADMIT_W:
+        raise ValueError(
+            f"pad size {size} < n_arrivals + {_ADMIT_W} = {n + _ADMIT_W}"
+        )
+    arr = np.full(size, np.inf)
+    arr[:n] = t
+    dl = np.full(size, np.inf)
+    if d is not None:
+        dl[:n] = d[order]
+    return arr, dl
+
+
+def pad_arrivals_batch(traces, size: Optional[int] = None):
+    """Pad several traces to one shared bucketed size: the (S, N) array
+    `run_grid` wants for its seeds/scenarios axis.
+
+    Derives the common size (largest trace plus the kernel's sentinel
+    margin, bucketed) so callers never touch the sizing internals.
+    """
+    traces = [np.asarray(t, dtype=np.float64) for t in traces]
+    if not traces:
+        raise ValueError("pad_arrivals_batch needs at least one trace")
+    if size is None:
+        size = _bucket(max(len(t) for t in traces) + _ADMIT_W)
+    return np.stack([pad_arrivals(t, size=size)[0] for t in traces])
+
+
+@dataclasses.dataclass
+class CompiledResult:
+    """Aggregates of one compiled run (arrays already on host)."""
+
+    t_final: float
+    n_served: int
+    n_batches: int
+    n_epochs: int
+    n_admitted: int
+    energy: float
+    lat_sum: float
+    slo_miss: int
+    terminated: bool  # stream exhausted (vs epoch budget reached)
+    hist: np.ndarray  # (n_bins + 2,) counts; [0]=underflow, [-1]=overflow
+    hist_edges: np.ndarray  # (n_bins + 1,)
+    # record=True only:
+    actions: Optional[np.ndarray] = None  # (n_epochs,) batch size, 0 = wait
+    serve: Optional[np.ndarray] = None  # (n_epochs,) bool
+    latencies: Optional[np.ndarray] = None  # (n_served,) in service order
+
+    @property
+    def batch_sizes(self) -> np.ndarray:
+        if self.actions is None:
+            raise ValueError("run with record=True for per-epoch decisions")
+        return self.actions[self.serve]
+
+
+def _scan_core(
+    table, arrivals, deadlines, draws, means, zeta, edges,
+    t0, horizon, max_eps, drain, b_max, *, n_steps: int, record: bool,
+):
+    """The event kernel: one scan step == one admission OR one epoch.
+
+    Pure jax function; shapes only (no jit here — callers jit/vmap it).
+    `arrivals` must be sorted with at least one trailing +inf sentinel.
+
+    Two throughput-critical choices:
+
+      * One *event* per step, not one epoch: when the next arrival is due
+        (<= the clock) the step admits it — a single O(1) gather — and only
+        otherwise takes a decision epoch.  Batch-admission inside an epoch
+        would need a binary search over the arrival array every step; the
+        event formulation replaces it with pointer increments, the same
+        trick that makes the Python loop O(1) per event.
+      * The scan carry is scalars-only (clock, window indices, energy): all
+        per-request accounting — latencies, the histogram sketch, SLO
+        misses — is reconstructed *after* the scan in one vectorized pass,
+        by mapping each request slot to the serve epoch that completed it
+        (a searchsorted into the cumulative batch sizes).
+
+    A lane that exhausts n_steps before terminating or filling its epoch
+    budget reports ``incomplete``; callers re-dispatch at a doubled step
+    count (the scan is deterministic, so the prefix replays identically).
+    """
+    L = table.shape[0]
+    size = arrivals.shape[0]
+    n_bins = edges.shape[0] - 1
+    arr_adm = jnp.where(arrivals < horizon, arrivals, jnp.inf)
+    n_draws = draws.shape[0]
+    i64 = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+    def step(carry, _):
+        t, n_srv, n_adm, n_bat, n_eps, n_used, done = carry
+        active = jnp.logical_not(done) & (n_eps < max_eps)
+        # arrivals due by `now` are admitted before any decision is taken,
+        # up to _ADMIT_W per step (they are a prefix of the sorted window;
+        # the sentinel margin keeps the slice from clamping into real data)
+        window = jax.lax.dynamic_slice(arr_adm, (n_adm,), (_ADMIT_W,))
+        nxt = window[0]  # +inf once exhausted / beyond the horizon
+        n_due = jnp.sum(window <= t).astype(i64)
+        admit = active & (n_due > 0)
+        dec = active & ~admit
+        q = n_adm - n_srv
+        a = table[jnp.minimum(q, L - 1)]
+        a = jnp.clip(a, 0, jnp.minimum(q, b_max))
+        live = jnp.isfinite(nxt)
+        wait = dec & (a == 0) & live
+        term = dec & (a == 0) & ~live & ((q == 0) | ~drain)
+        a = jnp.where(
+            dec & (a == 0) & ~live & ~term, jnp.minimum(q, b_max), a
+        )
+        serve = dec & ~wait & ~term
+        a = a * serve
+        svc = means[a] * draws[jnp.minimum(n_bat, n_draws - 1)]
+        t_done = t + svc
+        t_next = jnp.where(wait, nxt, jnp.where(serve, t_done, t))
+        carry = (
+            t_next,
+            n_srv + a,
+            n_adm + jnp.where(admit, n_due, 0),
+            n_bat + serve.astype(i64),
+            n_eps + dec.astype(i64),
+            n_used + active.astype(i64),
+            done | term,
+        )
+        # (a > 0) <=> serve, so the aggregate path only needs (a, t_done) —
+        # energy is summed from a_seq after the scan; the decision flag is
+        # recorded only for the equivalence harness
+        a32 = a.astype(jnp.int32)
+        return carry, ((a32, dec, t_done) if record else (a32, t_done))
+
+    zero = jnp.asarray(0, dtype=i64)
+    carry0 = (
+        jnp.asarray(t0, dtype=jnp.float64),
+        zero, zero, zero, zero, zero,
+        jnp.asarray(False),
+    )
+    carry, outs = jax.lax.scan(step, carry0, None, length=n_steps, unroll=4)
+    a_seq, tdone_seq = (outs[0], outs[2]) if record else outs
+    t, n_srv, n_adm, n_bat, n_eps, n_used, done = carry
+
+    # --- vectorized per-request reconstruction (one pass, no scan) -------
+    # request slot j was completed by the serve step whose request interval
+    # [cum_a - a, cum_a) contains j.  Interval starts are strictly
+    # increasing over serve steps, so scattering each serve's step index at
+    # its interval start and taking a running max assigns every slot its
+    # completing step — O(size) instead of a per-slot binary search.
+    energy = jnp.sum(zeta[a_seq])  # zeta[0] forced to 0 by the wrappers
+    cum_a = jnp.cumsum(a_seq.astype(i64))
+    start = jnp.where(a_seq > 0, cum_a - a_seq, size)  # non-serves dropped
+    mark = jnp.zeros(size, dtype=jnp.int32).at[start].max(
+        jnp.arange(n_steps, dtype=jnp.int32), mode="drop"
+    )
+    epoch_of = jax.lax.cummax(mark)
+    completion = tdone_seq[epoch_of]
+    slots = jnp.arange(size)
+    valid = slots < n_srv
+    lat = jnp.where(valid, completion - arrivals, 0.0)
+    lat_sum = jnp.sum(lat)
+    miss = jnp.sum(valid & (completion > deadlines))
+    bins = jnp.clip(jnp.searchsorted(edges, lat, side="right"), 0, n_bins + 1)
+    hist = jnp.zeros(n_bins + 2, dtype=i64).at[
+        jnp.where(valid, bins, 0)
+    ].add(valid.astype(i64))
+
+    agg = {
+        "t_final": t, "n_served": n_srv, "n_admitted": n_adm,
+        "n_batches": n_bat, "n_epochs": n_eps, "n_steps_used": n_used,
+        "terminated": done,
+        "incomplete": jnp.logical_not(done) & (n_eps < max_eps),
+        "energy": energy, "lat_sum": lat_sum, "slo_miss": miss, "hist": hist,
+    }
+    return (agg, (a_seq, outs[1], lat, valid)) if record else agg
+
+
+@partial(jax.jit, static_argnames=("n_steps", "record"))
+def _simulate_jit(table, arrivals, deadlines, draws, means, zeta, edges,
+                  t0, horizon, max_eps, drain, b_max, n_steps, record):
+    return _scan_core(
+        table, arrivals, deadlines, draws, means, zeta, edges,
+        t0, horizon, max_eps, drain, b_max,
+        n_steps=n_steps, record=record,
+    )
+
+
+def simulate_compiled(
+    table,
+    arrivals,
+    *,
+    means,
+    zeta=None,
+    draws=None,
+    b_max: int,
+    max_epochs: Optional[int] = None,
+    t0: float = 0.0,
+    horizon: Optional[float] = None,
+    drain: bool = True,
+    deadlines=None,
+    hist_edges=None,
+    record: bool = False,
+) -> CompiledResult:
+    """Run one policy table over one padded arrival trace, compiled.
+
+    ``arrivals``/``deadlines`` may be raw times (padded internally) or
+    already-padded arrays from `pad_arrivals`.  ``draws`` are unit-scale
+    service draws (ones for deterministic service); service time of a batch
+    of size a is ``means[a] * draws[n_batches_so_far]`` — exactly one draw
+    consumed per serve epoch, matching the Python engine's rng discipline.
+    """
+    arr = np.asarray(arrivals, dtype=np.float64)
+    if len(arr) < _ADMIT_W or not np.isinf(arr[-_ADMIT_W:]).all():
+        arr, dl = pad_arrivals(arr, deadlines)
+    else:
+        dl = (
+            np.asarray(deadlines, dtype=np.float64)
+            if deadlines is not None
+            else np.full(len(arr), np.inf)
+        )
+    n_arr = int(np.sum(np.isfinite(arr)))
+    if max_epochs is None:
+        max_eps = 2 * n_arr + 2
+    else:
+        max_eps = int(max_epochs)
+    means = np.asarray(means, dtype=np.float64)
+    zeta_a = (
+        np.zeros(b_max + 1)
+        if zeta is None
+        else np.asarray(zeta, dtype=np.float64).copy()
+    )
+    zeta_a[0] = 0.0  # a = 0 never accounts energy (kernel sums zeta[a_seq])
+    if draws is None:
+        draws = np.ones(1)
+    draws = np.asarray(draws, dtype=np.float64)
+    edges = (
+        default_hist_edges(means)
+        if hist_edges is None
+        else np.asarray(hist_edges, dtype=np.float64)
+    )
+    table = np.asarray(table, dtype=np.int64)
+    # one scan step per event: admissions + epochs.  Start from the typical
+    # count and re-dispatch doubled if the lane ran out of steps (the cap
+    # n_arr + max_eps + 1 is a hard upper bound: every step admits one of
+    # n_arr arrivals or consumes one of max_eps epochs).
+    cap = _bucket(n_arr + max_eps + 1)
+    ck = ("single", len(arr), len(table), cap)
+    n_steps = _initial_steps(ck, n_arr, max_eps, cap)
+    while True:
+        out = _simulate_jit(
+            jnp.asarray(table), jnp.asarray(arr), jnp.asarray(dl),
+            jnp.asarray(draws), jnp.asarray(means), jnp.asarray(zeta_a),
+            jnp.asarray(edges),
+            float(t0), np.inf if horizon is None else float(horizon),
+            max_eps, bool(drain), int(b_max), int(n_steps), bool(record),
+        )
+        agg = out[0] if record else out
+        if n_steps >= cap or not bool(agg["incomplete"]):
+            break
+        n_steps = min(2 * n_steps, cap)
+    _NSTEPS_CACHE[ck] = min(_bucket(int(agg["n_steps_used"]) + 1), cap)
+    rec = out[1] if record else None
+    agg = {k: np.asarray(v) for k, v in agg.items()}
+    res = CompiledResult(
+        t_final=float(agg["t_final"]),
+        n_served=int(agg["n_served"]),
+        n_batches=int(agg["n_batches"]),
+        n_epochs=int(agg["n_epochs"]),
+        n_admitted=int(agg["n_admitted"]),
+        energy=float(agg["energy"]),
+        lat_sum=float(agg["lat_sum"]),
+        slo_miss=int(agg["slo_miss"]),
+        terminated=bool(agg["terminated"]),
+        hist=agg["hist"],
+        hist_edges=edges,
+    )
+    if record:
+        acts, dec, lat, valid = (np.asarray(x) for x in rec)
+        res.actions = acts[dec].astype(np.int64)  # one entry per epoch
+        res.serve = res.actions > 0
+        res.latencies = lat[valid]  # arrival order == FIFO service order
+    return res
+
+
+@partial(jax.jit, static_argnames=("n_steps",))
+def _grid_jit(tables, arrivals, deadlines, draws, means, zeta, edges,
+              t0, horizon, max_eps, drain, b_max, n_steps):
+    def one(arr, dl, dr):
+        return jax.vmap(
+            lambda tab: _scan_core(
+                tab, arr, dl, dr, means, zeta, edges, t0, horizon,
+                max_eps, drain, b_max, n_steps=n_steps, record=False,
+            )
+        )(tables)
+
+    return jax.vmap(one)(arrivals, deadlines, draws)
+
+
+def run_grid(
+    tables,
+    arrivals,
+    *,
+    means,
+    zeta=None,
+    draws=None,
+    b_max: int,
+    max_epochs: Optional[int] = None,
+    t0: float = 0.0,
+    horizon: Optional[float] = None,
+    drain: bool = True,
+    deadlines=None,
+    hist_edges=None,
+):
+    """The vmapped sweep: (seeds x scenarios) traces x policy tables.
+
+    ``tables``  — (P, L) stacked action tables (SMDPSchedulerBank.stacked()
+    or scheduler.as_action_table per contender); ``arrivals`` — (S, N)
+    padded sorted traces (pad_arrivals per trace, common N); ``draws`` —
+    (S, D) unit service draws per trace lane (ones for det service).
+
+    One jitted dispatch returns dict of (S, P) aggregate arrays plus the
+    (S, P, n_bins + 2) histogram sketch: everything a bank comparison needs
+    (mean latency, power, weighted cost, sketch quantiles) without ever
+    materializing per-request data.
+    """
+    tables = np.asarray(tables, dtype=np.int64)
+    arr = np.asarray(arrivals, dtype=np.float64)
+    if arr.ndim != 2 or tables.ndim != 2:
+        raise ValueError("run_grid wants (S, N) arrivals and (P, L) tables")
+    if arr.shape[1] < _ADMIT_W or not np.isinf(arr[:, -_ADMIT_W:]).all():
+        raise ValueError("pad each trace with pad_arrivals first")
+    dl = (
+        np.asarray(deadlines, dtype=np.float64)
+        if deadlines is not None
+        else np.full_like(arr, np.inf)
+    )
+    means = np.asarray(means, dtype=np.float64)
+    zeta_a = (
+        np.zeros(b_max + 1)
+        if zeta is None
+        else np.asarray(zeta, dtype=np.float64).copy()
+    )
+    zeta_a[0] = 0.0  # a = 0 never accounts energy (kernel sums zeta[a_seq])
+    if draws is None:
+        draws = np.ones((arr.shape[0], 1))
+    draws = np.asarray(draws, dtype=np.float64)
+    n_arr_max = int(np.isfinite(arr).sum(axis=1).max())
+    max_eps = 2 * n_arr_max + 2 if max_epochs is None else int(max_epochs)
+    edges = (
+        default_hist_edges(means)
+        if hist_edges is None
+        else np.asarray(hist_edges, dtype=np.float64)
+    )
+    cap = _bucket(n_arr_max + max_eps + 1)
+    ck = ("grid", arr.shape, tables.shape, cap)
+    n_steps = _initial_steps(ck, n_arr_max, max_eps, cap)
+    while True:
+        out = _grid_jit(
+            jnp.asarray(tables), jnp.asarray(arr), jnp.asarray(dl),
+            jnp.asarray(draws), jnp.asarray(means), jnp.asarray(zeta_a),
+            jnp.asarray(edges),
+            float(t0), np.inf if horizon is None else float(horizon),
+            max_eps, bool(drain), int(b_max), int(n_steps),
+        )
+        if n_steps >= cap or not bool(np.asarray(out["incomplete"]).any()):
+            break
+        n_steps = min(2 * n_steps, cap)
+    _NSTEPS_CACHE[ck] = min(
+        _bucket(int(np.asarray(out["n_steps_used"]).max()) + 1), cap
+    )
+    out = {k: np.asarray(v) for k, v in out.items()}
+    out["hist_edges"] = edges
+    with np.errstate(invalid="ignore", divide="ignore"):
+        span = out["t_final"] - t0
+        out["w_mean"] = out["lat_sum"] / np.maximum(out["n_served"], 1)
+        # same convention as the engine's have_energy flag: a lane with no
+        # energy source or no served batch reports NaN power, not 0
+        have_energy = zeta is not None
+        out["power"] = np.where(
+            have_energy & (out["n_batches"] > 0) & (span > 0),
+            out["energy"] / span,
+            np.nan,
+        )
+        # served requests + decision epochs: the event count a throughput
+        # figure divides by (same definition as the BENCH_serving series)
+        out["events_total"] = int(
+            out["n_served"].sum() + out["n_epochs"].sum()
+        )
+    return out

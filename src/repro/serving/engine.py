@@ -1,9 +1,9 @@
-"""Batch-service engine: ONE event-driven kernel behind every serving mode.
+"""Batch-service engine: ONE event semantics, two backends.
 
 The paper's queue (M/G^[b]/1 under a batching policy), run as a serving
-system.  A single kernel (`_run_events`) owns the queue / admission / drain
-/ SLO / energy / metrics logic; the modes differ only in their clock and in
-where arrivals come from (serving.arrivals.ArrivalProcess):
+system.  A single Python kernel (`_run_events`) owns the queue / admission
+/ drain / SLO / energy / metrics logic; the modes differ only in their
+clock and in where arrivals come from (serving.arrivals.ArrivalProcess):
 
   * run()          — virtual clock, service times drawn from the profiled
     ServiceModel (G_b); arrivals from any ArrivalProcess (Poisson by
@@ -13,25 +13,45 @@ where arrivals come from (serving.arrivals.ArrivalProcess):
     real time.  The timer/sleeper pair is injectable, so the wall-clock path
     is testable against the virtual path decision-for-decision.
 
+run(backend="compiled") executes the same decision-epoch semantics as one
+jitted `lax.scan` (serving.compiled): arrivals are pre-generated from the
+engine's own rng (draw-for-draw the stream the lazy path would consume;
+over-drawn events are buffered and replayed to later runs), the scheduler
+is lowered to its dense action table, and the report is decision-for-
+decision identical to the Python loop on the same trace — `verify_backends`
+is the harness that asserts exactly that.  Use the Python backend for
+wall-clock executors and online-adaptive schedulers; the compiled backend
+for measurement-grade replication (and serving.compiled.run_grid for whole
+seeds x scenarios x policies sweeps in one dispatch).
+
 Every mode streams per-batch observations into ServingMetrics (P² latency
-quantiles, power) and supports snapshot()/restore() — queue, clock,
-RNG, scheduler and arrival-process state — so a restored engine reproduces
-an uninterrupted run exactly, in every arrival mode.  Energy is accounted
+quantiles, power; the compiled path reports quantiles from its fixed-bin
+histogram sketch) and supports snapshot()/restore() — queue, clock, RNG,
+scheduler and arrival-process state — so a restored engine reproduces an
+uninterrupted run exactly, in every arrival mode.  Energy is accounted
 whenever a source is available: a zeta(a) `energy_table` or a per-batch
 `energy_model(a, service_time)` callback (the executor-mode option).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
 from repro.core.service_models import ServiceModel
 
-from .arrivals import ArrivalProcess, PoissonProcess, TraceProcess, as_process
-from .metrics import ServingMetrics
+from .arrivals import (
+    ArrivalEvent,
+    ArrivalProcess,
+    PoissonProcess,
+    TraceProcess,
+    as_process,
+    take,
+)
+from .metrics import ServingMetrics, histogram_quantiles
 from .scheduler import Scheduler
 
 
@@ -112,6 +132,12 @@ class ServingEngine:
         self.t = 0.0
         self.next_rid = 0
         self._pending: Optional[Request] = None  # peeked, not yet admitted
+        # events the compiled backend pre-drew from the process but did not
+        # consume; replayed before the process is asked again, so the
+        # arrival stream the engine sees stays identical to the lazy path
+        # (a deque: a compiled run can buffer ~n_epochs events, and the
+        # python loop then consumes them one per arrival)
+        self._future: Deque[ArrivalEvent] = collections.deque()
         self._timer = timer
         self._sleeper = sleeper
 
@@ -123,6 +149,7 @@ class ServingEngine:
             "pending": (
                 dataclasses.asdict(self._pending) if self._pending else None
             ),
+            "future": [dataclasses.asdict(ev) for ev in self._future],
             "next_rid": self.next_rid,
             "rng": self.rng.bit_generator.state,
             "sched": self.scheduler.snapshot(),
@@ -133,6 +160,9 @@ class ServingEngine:
         self.t = snap["t"]
         self.queue = [Request(**r) for r in snap["queue"]]
         self._pending = Request(**snap["pending"]) if snap["pending"] else None
+        self._future = collections.deque(
+            ArrivalEvent(**ev) for ev in snap.get("future", [])
+        )
         self.next_rid = snap["next_rid"]
         self.rng.bit_generator.state = snap["rng"]
         self.scheduler.restore(snap["sched"])
@@ -150,7 +180,11 @@ class ServingEngine:
     def _peek(self) -> Optional[Request]:
         """Next un-admitted arrival (generated lazily, held until due)."""
         if self._pending is None:
-            ev = self.arrivals.next(self.rng)
+            ev = (
+                self._future.popleft()
+                if self._future
+                else self.arrivals.next(self.rng)
+            )
             if ev is not None:
                 self._pending = self._to_request(ev)
         return self._pending
@@ -267,12 +301,24 @@ class ServingEngine:
         *,
         horizon: Optional[float] = None,
         drain: Optional[bool] = None,
+        backend: str = "python",
     ) -> EngineReport:
         """Virtual-clock batch service loop (decision-epoch faithful).
 
         Runs for `n_epochs` decision epochs, or — with n_epochs=None — until
         the arrival stream ends (trace exhausted / `horizon` reached) and the
         queue has drained in b_max-capped batches.
+
+        ``backend="compiled"`` executes the identical decision-epoch
+        semantics as one jitted scan (serving.compiled): same decisions,
+        same per-request latencies, same energy on the same arrival stream.
+        Requirements: a table-representable scheduler (SMDP / static /
+        greedy / Q-policy — online-adaptive controllers stay on the Python
+        backend) and zeta-table (or absent) energy accounting.  With
+        deterministic service the two backends are draw-for-draw
+        reproductions of each other at equal seeds; stochastic service
+        draws the same law from a differently-ordered stream (the compiled
+        path blocks its unit draws up front).
         """
         if self.service is None:
             raise RuntimeError("run() needs service=; use run_executor()")
@@ -282,9 +328,181 @@ class ServingEngine:
             raise ValueError("unbounded run: pass n_epochs= or horizon=")
         if drain is None:
             drain = n_epochs is None
+        if backend == "compiled":
+            return self._run_compiled(
+                max_epochs=n_epochs, horizon=horizon, drain=drain
+            )
+        if backend != "python":
+            raise ValueError(f"unknown backend {backend!r}")
         return self._run_events(
             max_epochs=n_epochs, horizon=horizon, wall=False, poll=0.0,
             drain=drain,
+        )
+
+    # --- the compiled backend --------------------------------------------
+    def _collect_events(
+        self, max_epochs: Optional[int], horizon: Optional[float],
+        extend_from: Optional[int] = None,
+    ) -> List[ArrivalEvent]:
+        """Materialize the arrival stream the lazy path would consume.
+
+        Buffered (`_future`) and already-peeked events come first; a trace
+        contributes its remaining events; an infinite process is drained
+        eagerly from the engine rng — up to the horizon (the overshoot
+        event is buffered, mirroring the lazy peek-and-hold), or in bounded
+        chunks that `_run_compiled` grows until the epoch budget is met.
+        """
+        events: List[ArrivalEvent] = []
+        if self._pending is not None:
+            r = self._pending
+            events.append(
+                ArrivalEvent(r.arrival, r.payload, r.deadline, r.rid)
+            )
+            self._pending = None
+        events.extend(self._future)
+        self._future.clear()
+        proc = self.arrivals
+        if isinstance(proc, TraceProcess):
+            events.extend(proc.drain())
+        elif horizon is not None:
+            drawn, overshoot = take(proc, self.rng, horizon=horizon)
+            events.extend(drawn)
+            if overshoot is not None:
+                events.append(overshoot)
+        else:
+            assert max_epochs is not None
+            base = extend_from if extend_from is not None else 0
+            target = max(1024, 2 * max_epochs)
+            if extend_from is not None:
+                target = max(target, 2 * extend_from)
+            drawn, _ = take(proc, self.rng, n=max(target - base, 1024))
+            events.extend(drawn)
+        return events
+
+    def _run_compiled(
+        self,
+        *,
+        max_epochs: Optional[int],
+        horizon: Optional[float],
+        drain: bool,
+        unit_draws: Optional[np.ndarray] = None,
+    ) -> EngineReport:
+        from .compiled import simulate_compiled
+        from .scheduler import as_action_table
+
+        if self.energy_model is not None and self.energy_table is None:
+            raise ValueError(
+                "compiled backend accounts energy via energy_table=; "
+                "per-batch energy_model callbacks need backend='python'"
+            )
+        table = as_action_table(self.scheduler, self.b_max)
+        means = np.asarray(
+            [0.0]
+            + [float(self.service.mean(b)) for b in range(1, self.b_max + 1)]
+        )
+        t0 = self.t
+        queue0 = list(self.queue)
+        self.queue = []
+        queued_events = [
+            ArrivalEvent(r.arrival, r.payload, r.deadline, r.rid)
+            for r in queue0
+        ]
+        events = queued_events + self._collect_events(max_epochs, horizon)
+        infinite = not isinstance(self.arrivals, TraceProcess) and (
+            horizon is None
+        )
+        # the extension loop below only triggers on epoch-budgeted runs
+        # (max_epochs set), so the budget — and hence the one unit-draw
+        # block — is fixed up front: re-dispatches replay the exact same
+        # service times, and the rng advances once per run, not per retry
+        draws = unit_draws
+        if draws is None:
+            budget0 = (
+                2 * len(events) + 2 if max_epochs is None else max_epochs
+            )
+            draws = self.service.unit_draws(self.rng, budget0)
+        while True:
+            n_arr = len(events)
+            budget = 2 * n_arr + 2 if max_epochs is None else max_epochs
+            times = np.asarray([ev.time for ev in events])
+            deadlines = np.asarray(
+                [
+                    ev.deadline
+                    if ev.deadline is not None
+                    else (ev.time + self.slo if self.slo is not None
+                          else np.inf)
+                    for ev in events
+                ]
+            )
+            res = simulate_compiled(
+                table, times,
+                means=means, zeta=self.energy_table, draws=draws,
+                b_max=self.b_max, max_epochs=budget, t0=t0,
+                horizon=horizon, drain=drain, deadlines=deadlines,
+                record=True,
+            )
+            if not (infinite and res.terminated and res.n_epochs < budget):
+                break
+            # the pre-drawn stream ran dry before the epoch budget: a lazy
+            # engine would keep drawing — extend the stream and re-run (the
+            # scan is deterministic, so the prefix replays identically)
+            events.extend(self._collect_events(
+                max_epochs, None, extend_from=n_arr
+            ))
+
+        # --- sync engine state so later runs continue the same stream ----
+        self.t = res.t_final
+        admitted, future = events[: res.n_admitted], events[res.n_admitted:]
+        if any(ev.rid is not None for ev in admitted):
+            reqs = [self._to_request(ev) for ev in admitted]
+            self.queue = reqs[res.n_served:]
+        else:
+            base = self.next_rid
+            self.next_rid = base + len(admitted)
+            self.queue = [
+                self._to_request(
+                    dataclasses.replace(ev, rid=base + res.n_served + i)
+                )
+                for i, ev in enumerate(admitted[res.n_served:])
+            ]
+        if not isinstance(self.arrivals, TraceProcess):
+            self._future = collections.deque(future)
+        else:
+            # un-admitted trace events stay in the trace: rewind its cursor
+            # (the un-admitted tail is always a suffix of what drain() took,
+            # since buffered/queued events precede trace events in time)
+            self.arrivals.rewind(len(future))
+
+        lat = res.latencies
+        # a run with no served batch accounted no energy (NaN, like the
+        # Python kernel's have_energy flag)
+        energy = (
+            res.energy
+            if self.energy_table is not None and res.n_batches > 0
+            else float("nan")
+        )
+        span = res.t_final - t0
+        qs = histogram_quantiles(
+            res.hist, res.hist_edges, [0.5, 0.95, 0.99]
+        )
+        metrics = {
+            "W_mean": res.lat_sum / max(res.n_served, 1),
+            "P50": float(qs[0]),
+            "P95": float(qs[1]),
+            "P99": float(qs[2]),
+            "power": energy / span if span > 0 else float("nan"),
+            "mean_batch": res.n_served / max(res.n_batches, 1),
+            "n_served": float(res.n_served),
+        }
+        return EngineReport(
+            latencies=lat,
+            energy=energy,
+            span=span,
+            n_served=res.n_served,
+            n_slo_miss=res.slo_miss,
+            mean_batch=res.n_served / max(res.n_batches, 1),
+            batch_sizes=res.batch_sizes,
+            metrics=metrics,
         )
 
     def run_executor(
@@ -310,6 +528,99 @@ class ServingEngine:
                     ev.deadline += self.t
         self.arrivals = trace
         self._pending = None
+        self._future.clear()  # replay replaces the arrival source wholesale
         return self._run_events(
             max_epochs=None, horizon=None, wall=True, poll=poll, drain=True
         )
+
+
+# ---------------------------------------------------------------------------
+# Compiled-vs-Python equivalence harness
+# ---------------------------------------------------------------------------
+
+
+class _ScriptedService:
+    """ServiceModel stand-in replaying a shared unit-draw sequence.
+
+    Every ServiceModel family factors as mean(b) * unit_draw, so feeding
+    one pre-drawn sequence to both backends makes their service times — and
+    hence every decision — identical even for stochastic families.  One
+    draw is consumed per serve call, the Python kernel's exact discipline.
+    """
+
+    def __init__(self, base: ServiceModel, draws: np.ndarray):
+        self.base = base
+        self.draws = np.asarray(draws, dtype=np.float64)
+        self.k = 0
+
+    def mean(self, b):
+        return self.base.mean(b)
+
+    def sample(self, b: int, rng: np.random.Generator, n: int) -> np.ndarray:
+        out = float(self.base.mean(b)) * self.draws[self.k: self.k + n]
+        self.k += n
+        return out
+
+
+def verify_backends(
+    table: np.ndarray,
+    trace,
+    *,
+    service: ServiceModel,
+    energy_table: Optional[np.ndarray] = None,
+    b_max: int,
+    n_epochs: Optional[int] = None,
+    horizon: Optional[float] = None,
+    drain: Optional[bool] = None,
+    slo: Optional[float] = None,
+    seed: int = 0,
+    atol: float = 1e-9,
+) -> Dict[str, object]:
+    """Decision-for-decision harness: both backends on one shared trace.
+
+    Runs the Python event loop and the compiled scan on the same arrival
+    trace and the same unit service-draw sequence, then checks the batch
+    schedule, per-request latencies, energy, SLO misses and span against
+    each other.  Returns the two EngineReports plus the comparison verdict;
+    raises AssertionError on any divergence (this is the acceptance gate
+    for the compiled backend, run per arrival mode in the test suite).
+    """
+    from .scheduler import SMDPScheduler
+
+    trace = list(np.asarray(trace, dtype=np.float64))
+    if drain is None:
+        drain = n_epochs is None
+    budget = n_epochs if n_epochs is not None else 2 * len(trace) + 2
+    draws = service.unit_draws(np.random.default_rng(seed), budget)
+
+    def engine(svc):
+        return ServingEngine(
+            SMDPScheduler.from_table(table),
+            arrivals=TraceProcess(trace),
+            b_max=b_max, service=svc, energy_table=energy_table,
+            slo=slo, seed=seed,
+        )
+
+    rep_py = engine(_ScriptedService(service, draws)).run(
+        n_epochs, horizon=horizon, drain=drain
+    )
+    rep_c = engine(service)._run_compiled(
+        max_epochs=n_epochs, horizon=horizon, drain=drain, unit_draws=draws
+    )
+    np.testing.assert_array_equal(rep_py.batch_sizes, rep_c.batch_sizes)
+    assert rep_py.n_served == rep_c.n_served
+    np.testing.assert_allclose(rep_py.latencies, rep_c.latencies, atol=atol)
+    assert rep_py.n_slo_miss == rep_c.n_slo_miss
+    if energy_table is not None:
+        np.testing.assert_allclose(rep_py.energy, rep_c.energy, atol=atol)
+    np.testing.assert_allclose(rep_py.span, rep_c.span, atol=atol)
+    return {
+        "python": rep_py,
+        "compiled": rep_c,
+        "n_decisions": int(len(rep_py.batch_sizes)),
+        "max_latency_err": float(
+            np.max(np.abs(rep_py.latencies - rep_c.latencies))
+            if rep_py.n_served
+            else 0.0
+        ),
+    }

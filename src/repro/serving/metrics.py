@@ -1,10 +1,20 @@
 """Serving metrics: streaming latency quantiles, power, arrival-rate estimation.
 
-P² streaming quantile estimation (Jain & Chlamtac) so that a 1000-node
-fleet can track P50/P95/P99 without retaining per-request samples; every
-engine mode streams its batches through ServingMetrics.  RateEstimator is
-the online lambda-hat (EWMA of inter-arrival gaps, or a sliding window)
-that feeds the bank-retuning AdaptiveController in serving.scheduler.
+Two O(1)-memory latency-quantile sketches, one per backend:
+
+  * P² streaming estimation (Jain & Chlamtac) for the Python event loop —
+    sequential updates, arbitrary stream shapes, no samples retained; every
+    engine mode streams its batches through ServingMetrics.
+  * A fixed-bin log-spaced histogram for the compiled scan kernel
+    (serving.compiled keeps the counts in the scan carry; scatter-adds are
+    jit/vmap-friendly where P²'s data-dependent marker moves are not).
+    `histogram_quantiles` reconstructs P50/P95/P99 from the counts by
+    within-bin linear interpolation; both sketches are reconciled against
+    np.percentile within a tolerance band in the test suite.
+
+RateEstimator is the online lambda-hat (EWMA of inter-arrival gaps, or a
+sliding window) that feeds the bank-retuning AdaptiveController in
+serving.scheduler.
 """
 from __future__ import annotations
 
@@ -70,6 +80,50 @@ class P2Quantile:
         if len(self._init) < 5:
             return float(np.percentile(self._init, self.q * 100)) if self._init else float("nan")
         return self.heights[2]
+
+
+def histogram_quantiles(counts, edges, qs) -> np.ndarray:
+    """Quantiles from a fixed-bin histogram sketch (compiled-kernel side).
+
+    ``counts`` has ``len(edges) + 1`` entries: counts[0] is mass below
+    edges[0], counts[-1] mass at or above edges[-1] (the scan kernel's
+    under/overflow bins); counts[i] covers [edges[i-1], edges[i]).  The
+    quantile is the within-bin linear interpolation of the empirical CDF;
+    under/overflow quantiles clamp to the nearest edge, so callers should
+    size edges (serving.compiled.default_hist_edges) to cover the data.
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    edges = np.asarray(edges, dtype=np.float64)
+    if counts.ndim != 1:
+        raise ValueError(
+            "histogram_quantiles takes one lane of counts; index "
+            "run_grid's hist per (scenario, policy) before calling"
+        )
+    if counts.shape[-1] != len(edges) + 1:
+        raise ValueError(
+            f"counts last dim {counts.shape[-1]} != len(edges) + 1"
+        )
+    qs = np.atleast_1d(np.asarray(qs, dtype=np.float64))
+    total = counts.sum()
+    if total <= 0:
+        return np.full(qs.shape, np.nan)
+    cum = np.cumsum(counts)
+    out = np.empty(qs.shape)
+    for j, q in enumerate(qs):
+        target = q * total
+        i = int(np.searchsorted(cum, target, side="left"))
+        i = min(i, len(counts) - 1)
+        if i == 0:
+            out[j] = edges[0]
+        elif i == len(counts) - 1:
+            out[j] = edges[-1]
+        else:
+            below = cum[i - 1]
+            inbin = counts[i]
+            frac = (target - below) / inbin if inbin > 0 else 0.0
+            lo, hi = edges[i - 1], edges[i]
+            out[j] = lo + frac * (hi - lo)
+    return out
 
 
 class RateEstimator:

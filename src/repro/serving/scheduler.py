@@ -4,12 +4,19 @@ A scheduler answers one question at each decision epoch (batch completion,
 or arrival-at-idle): given s queued requests, what batch size now?
 `0` means wait for more arrivals.
 
-A solved sweep (core.sweep.sweep_solve over a lambda / w2 grid) turns into
-an SMDPSchedulerBank via SMDPScheduler.bank() or core.sweep.sweep_bank():
-a keyed table bank the serving layer hot-swaps when traffic or the
-energy-price weight shifts, without re-solving online.  AdaptiveController
-closes the loop: an online arrival-rate estimate retunes the active table
-against the bank, with hysteresis at regime boundaries.
+A solved sweep (core.sweep.sweep_solve over a lambda / w2 / service-profile
+grid) turns into an SMDPSchedulerBank via SMDPScheduler.bank() or
+core.sweep.sweep_bank(): a keyed table bank the serving layer hot-swaps
+when traffic, the energy-price weight, or the active service profile
+shifts, without re-solving online.  AdaptiveController closes the loop: an
+online arrival-rate estimate retunes the active table against the bank,
+with hysteresis at regime boundaries; non-rate axes (w2, profile) are
+pinned coordinates.
+
+Two exports feed the compiled simulator (serving.compiled): ``stacked()``
+turns a bank into one (P, L) array for the vmapped policy axis, and
+``as_action_table()`` lowers any stateless scheduler (SMDP / static /
+greedy / Q-policy) to the dense table the scan kernel indexes.
 """
 from __future__ import annotations
 
@@ -187,6 +194,35 @@ class SMDPSchedulerBank:
         sch._bank = self
         return sch
 
+    def stacked(self, keys=None):
+        """(keys, (P, L) array): the bank as a dense policy axis.
+
+        Tables shorter than the longest are padded by repeating their last
+        entry — exactly the eq.-(30) extension decide() applies, so the
+        padded row is decision-for-decision the same scheduler.  Row order
+        follows ``keys`` (default: sorted keys()).  This is what the
+        compiled simulator vmaps over for whole-bank comparisons.
+        """
+        ks = [
+            tuple(float(v) for v in k)
+            for k in (self._sorted_keys if keys is None else keys)
+        ]
+        if not ks:
+            raise ValueError("stacked() with an empty key list")
+        missing = [k for k in ks if k not in self.tables]
+        if missing:
+            raise KeyError(f"keys not in bank: {missing}")
+        L = max(len(self.tables[k]) for k in ks)
+        out = np.stack(
+            [
+                np.concatenate(
+                    [t, np.full(L - len(t), t[-1], dtype=np.int64)]
+                )
+                for t in (self.tables[k] for k in ks)
+            ]
+        )
+        return ks, out
+
 
 class AdaptiveController(Scheduler):
     """Online regime adaptation: rate estimator -> bank retune, hysteresis.
@@ -314,3 +350,35 @@ class QPolicyScheduler(Scheduler):
 
     def decide(self, queue_len: int) -> int:
         return min(queue_len, self.b_max) if queue_len >= self.q else 0
+
+
+def as_action_table(scheduler: Scheduler, b_max: int) -> np.ndarray:
+    """Lower a stateless scheduler to the dense table decide() implements.
+
+    The compiled simulator indexes ``table[min(s, len - 1)]`` — identical
+    to each scheduler's decide() for every queue length, because all four
+    families are constant beyond their largest interesting state.  Stateful
+    schedulers (AdaptiveController, phase-aware) have no static table and
+    raise: they stay on the Python backend.
+    """
+    if isinstance(scheduler, SMDPScheduler):
+        return np.asarray(scheduler.table, dtype=np.int64)
+    if isinstance(scheduler, StaticScheduler):
+        s = np.arange(max(scheduler.b, b_max) + 1)
+        return np.where(s >= scheduler.b, scheduler.b, 0).astype(np.int64)
+    if isinstance(scheduler, GreedyScheduler):
+        cap = min(scheduler.b_max, b_max)
+        s = np.arange(max(scheduler.b_min, cap) + 1)
+        return np.where(
+            s >= scheduler.b_min, np.minimum(s, cap), 0
+        ).astype(np.int64)
+    if isinstance(scheduler, QPolicyScheduler):
+        cap = min(scheduler.b_max, b_max)
+        s = np.arange(max(scheduler.q, cap) + 1)
+        return np.where(s >= scheduler.q, np.minimum(s, cap), 0).astype(
+            np.int64
+        )
+    raise TypeError(
+        f"{type(scheduler).__name__} has no static action table; "
+        "online-adaptive schedulers run on the Python backend"
+    )
