@@ -1,0 +1,133 @@
+"""Exact MMPP-aware serving: phase-modulated SMDP end to end.
+
+Bursty traffic (two-phase MMPP) served three ways, all against the same
+arrival trace:
+
+  * exact     — the (phase, queue) product-chain solve (core.solve_modulated):
+    ONE policy that knows the bursts are coming, served through the
+    compiled phase-indexed lane with the true phase trace;
+  * heuristic — the paper's Sec.-VIII phase decomposition: one independent
+    Poisson solve per phase rate, the oracle switching tables;
+  * belief    — the exact policy driven by the *filtered* phase posterior
+    (no oracle: serving.PhaseBeliefFilter infers the phase from gaps).
+
+    PYTHONPATH=src python examples/serve_mmpp_exact.py [--rho-burst 0.85]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import (
+    GOOGLENET_P4_ENERGY,
+    GOOGLENET_P4_LATENCY,
+    PhaseConfig,
+    ServiceModel,
+    SMDPSpec,
+    evaluate_policy_modulated,
+    build_smdp_modulated,
+    modulated_spec,
+    solve,
+    solve_modulated,
+)
+from repro.serving import (
+    BeliefPhaseScheduler,
+    OraclePhaseScheduler,
+    PhaseBeliefFilter,
+    ServingEngine,
+    TraceProcess,
+)
+from repro.serving.arrivals import MMPP2
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rho-floor", type=float, default=0.10)
+    ap.add_argument("--rho-burst", type=float, default=0.85)
+    ap.add_argument("--w2", type=float, default=0.5)
+    ap.add_argument("--b-max", type=int, default=32)
+    ap.add_argument("--horizon", type=float, default=20_000.0)
+    args = ap.parse_args()
+
+    svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+    mu_max = args.b_max / float(svc.mean(args.b_max))
+    m = MMPP2(
+        lam1=args.rho_floor * mu_max, lam2=args.rho_burst * mu_max,
+        dwell1=4000.0, dwell2=800.0,
+    )
+    phases = PhaseConfig.from_mmpp(m)
+    base = SMDPSpec(
+        lam=1.0, service=svc, energy=GOOGLENET_P4_ENERGY, b_min=1,
+        b_max=args.b_max, w1=1.0, w2=args.w2, s_max=128,
+    )
+    spec = modulated_spec(base, phases)
+    print(
+        f"MMPP2: floor rho={args.rho_floor} burst rho={args.rho_burst} "
+        f"(mean rate {phases.mean_rate:.3f}/ms), w2={args.w2}"
+    )
+
+    exact = solve_modulated(spec, phases, max_s_max=384)
+    print(
+        f"exact modulated solve: s_max={exact.spec.s_max}, "
+        f"g={exact.eval.g:.4f}, W={exact.eval.w_bar:.3f} ms, "
+        f"P={exact.eval.p_bar:.2f} W"
+    )
+    tab = exact.action_table(32)
+    for z in range(phases.n_phases):
+        print(f"  phase {z} (rate {phases.rates[z]:.3f}):",
+              " ".join(f"{int(a):2d}" for a in tab[z, ::4]))
+
+    # the per-phase heuristic: independent Poisson solves, lifted to (K, S)
+    import dataclasses
+    s_max = exact.spec.s_max
+    heur = {}
+    for z, lam in enumerate(phases.rates):
+        heur[z] = solve(
+            dataclasses.replace(spec, lam=float(lam))
+        ).action_table(s_max)
+    heur_pol = np.stack([np.append(t, t[-1]) for t in (heur[0], heur[1])])
+    mb = build_smdp_modulated(exact.spec, phases)
+    g_heur = evaluate_policy_modulated(mb, 0, heur_pol).g
+    print(
+        f"phase-decomposition heuristic on the true chain: g={g_heur:.4f} "
+        f"(exact gains {(g_heur - exact.eval.g) / g_heur:.2%})"
+    )
+
+    # serve the same trace three ways
+    trace, switches = m.sample_arrivals(args.horizon, np.random.default_rng(7))
+    en = np.array(
+        [0.0] + [float(GOOGLENET_P4_ENERGY(b)) for b in range(1, args.b_max + 1)]
+    )
+    contenders = {
+        "exact+oracle-phase (compiled)": (
+            OraclePhaseScheduler(
+                {z: tab_z for z, tab_z in enumerate(exact.action_table())},
+                switches,
+            ),
+            "compiled",
+        ),
+        "heuristic+oracle-phase": (
+            OraclePhaseScheduler(heur, switches), "compiled",
+        ),
+        "exact+belief-phase (python)": (
+            BeliefPhaseScheduler(
+                exact.action_table(),
+                PhaseBeliefFilter(phases.rates, phases.gen),
+            ),
+            "python",
+        ),
+    }
+    for name, (sched, backend) in contenders.items():
+        eng = ServingEngine(
+            sched, arrivals=TraceProcess(trace), b_max=args.b_max,
+            service=svc, energy_table=en, seed=0,
+        )
+        rep = eng.run(n_epochs=None, backend=backend)
+        print(
+            f"{name:30s}: cost={rep.weighted_cost(args.w2):8.4f}  "
+            f"W={rep.latencies.mean():7.3f} ms  P={rep.power:6.2f} W  "
+            f"P95={rep.percentile(95):7.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

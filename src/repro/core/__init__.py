@@ -21,16 +21,22 @@ from .service_models import (  # noqa: E402,F401
 )
 from .smdp import (  # noqa: E402,F401
     BatchedSMDP,
+    ModulatedBatchedSMDP,
+    PhaseConfig,
     SMDPSpec,
     TruncatedSMDP,
     build_smdp,
     build_smdp_batched,
+    build_smdp_modulated,
+    build_smdp_modulated_batched,
+    modulated_spec,
 )
 from .rvi import (  # noqa: E402,F401
     BatchedRVIResult,
     RVIResult,
     relative_value_iteration,
     relative_value_iteration_batched,
+    relative_value_iteration_modulated,
 )
 from .policies import (  # noqa: E402,F401
     static_policy,
@@ -38,6 +44,19 @@ from .policies import (  # noqa: E402,F401
     q_policy,
     optimal_q_closed_form,
 )
-from .evaluate import PolicyEval, evaluate_policy  # noqa: E402,F401
-from .solve import solve, SolveResult  # noqa: E402,F401
-from .sweep import pad_specs, sweep_solve  # noqa: E402,F401
+from .evaluate import (  # noqa: E402,F401
+    PolicyEval,
+    evaluate_policy,
+    evaluate_policy_modulated,
+)
+from .solve import (  # noqa: E402,F401
+    ModulatedSolveResult,
+    SolveResult,
+    solve,
+)
+from .sweep import (  # noqa: E402,F401
+    pad_specs,
+    solve_modulated,
+    sweep_solve,
+    sweep_solve_modulated,
+)

@@ -17,16 +17,24 @@ Two families of routines live here:
     polish step of the accelerated batched RVI (rvi.accel="mpi").
     Both are dense-free: the (S, A, S) tensor is never materialized,
     only the (S, S) matrix of the frozen policy.
+
+Both families have phase-modulated counterparts operating on the K*S
+product chain of smdp.ModulatedBatchedSMDP (phase-blocked flattening,
+z * S + s): evaluate_policy_modulated(_batched) for the physical chain —
+delta sums over *every* phase's overflow state — and
+policy_matrix_banded_modulated feeding the same policy_eval_linear for
+the MPI polish of the modulated RVI.  Nothing is ever densified beyond
+the (K*S, K*S) matrix of one frozen policy.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
-from .smdp import BatchedSMDP, TruncatedSMDP
+from .smdp import BatchedSMDP, ModulatedBatchedSMDP, TruncatedSMDP
 
 
 @dataclasses.dataclass
@@ -77,10 +85,20 @@ def _finish_eval(
     c_pi: np.ndarray,
     hold_pi: np.ndarray,
     energy_pi: np.ndarray,
+    overflow: Optional[np.ndarray] = None,
 ) -> PolicyEval:
+    """Aggregate (g, Delta, W_bar, P_bar, ...) from mu and gathered rows.
+
+    ``overflow`` marks the overflow state(s) for the Delta term; default is
+    the last state (the scalar chain).  The modulated chain passes a mask
+    over every phase's S_o.
+    """
     denom = float(mu @ y_pi)
     g = float(mu @ c_pi) / denom
-    delta = float(mu[-1] * c_pi[-1]) / denom
+    if overflow is None:
+        delta = float(mu[-1] * c_pi[-1]) / denom
+    else:
+        delta = float(mu[overflow] @ c_pi[overflow]) / denom
 
     # objective decomposition (abstract cost excluded — it is a solver device,
     # not part of the physical objective)
@@ -247,6 +265,156 @@ def policy_matrix_banded(pmfs, tails, scale, s_max: int, policy):
     m_hat = jnp.where(serve[:, None], m_hat, wait_rows)
     # discretize (eq. 23): scale towards eta-uniformization
     return sc[:, None] * m_hat + (1.0 - sc) * jnp.eye(S, dtype=scale.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Phase-modulated product chain (K*S states, phase-blocked flattening)
+# ---------------------------------------------------------------------------
+
+
+def _gather_modulated(mbatch: ModulatedBatchedSMDP, i: int, acts: np.ndarray):
+    """Flattened (K*S,) per-state rows of y/c/hold/energy under a policy."""
+    K, S = mbatch.n_phases, mbatch.n_states
+    zz = np.arange(K)[:, None]
+    ss = np.arange(S)[None, :]
+    gather = lambda arr: arr[i, zz, ss, acts].reshape(-1)  # noqa: E731
+    return (
+        gather(mbatch.y),
+        gather(mbatch.c_hat),
+        gather(mbatch.c_hold),
+        gather(mbatch.c_energy),
+    )
+
+
+def _check_feasible_modulated(
+    mbatch: ModulatedBatchedSMDP, i: int, acts: np.ndarray
+) -> None:
+    K, S = mbatch.n_phases, mbatch.n_states
+    if acts.shape != (K, S):
+        raise ValueError(f"policy shape {acts.shape} != ({K}, {S})")
+    feas = mbatch.feasible[i][np.arange(S)[None, :], acts]
+    if not feas.all():
+        bad = np.argwhere(~feas)
+        raise ValueError(
+            f"policy takes infeasible actions at (phase, state) {bad[:5]}"
+        )
+
+
+def _overflow_mask(K: int, S: int) -> np.ndarray:
+    m = np.zeros((K, S), dtype=bool)
+    m[:, -1] = True
+    return m.reshape(-1)
+
+
+def _finish_modulated(
+    mbatch: ModulatedBatchedSMDP, i: int, acts: np.ndarray, mu: np.ndarray
+) -> PolicyEval:
+    y_pi, c_pi, hold_pi, energy_pi = _gather_modulated(mbatch, i, acts)
+    return _finish_eval(
+        mu,
+        acts.reshape(-1),
+        y_pi,
+        c_pi,
+        hold_pi,
+        energy_pi,
+        overflow=_overflow_mask(mbatch.n_phases, mbatch.n_states),
+    )
+
+
+def evaluate_policy_modulated(
+    mbatch: ModulatedBatchedSMDP, i: int, policy: np.ndarray
+) -> PolicyEval:
+    """evaluate_policy on the (phase, queue) product chain of spec ``i``.
+
+    ``policy`` is a (K, S) phase-indexed action table.  Delta (the paper's
+    tail-tolerance, eq. 22) sums the contribution of every phase's overflow
+    state, so the adaptive-truncation rule carries over unchanged.
+    """
+    acts = np.asarray(policy, dtype=np.int64)
+    _check_feasible_modulated(mbatch, i, acts)
+    p_pi = mbatch.take([i]).policy_transitions_batched(acts[None])[0]
+    mu = stationary_distribution(p_pi)
+    return _finish_modulated(mbatch, i, acts, mu)
+
+
+def evaluate_policy_modulated_batched(
+    mbatch: ModulatedBatchedSMDP, policies: np.ndarray
+) -> List[PolicyEval]:
+    """Per-spec evaluation of (N, K, S) policies: one batched K*S solve.
+
+    Specs whose batched stationary solve degenerates fall back to the
+    scalar-path solver, mirroring evaluate_policy_batched.
+    """
+    acts = np.asarray(policies, dtype=np.int64)
+    if acts.shape[0] != mbatch.n_specs:
+        raise ValueError(f"{acts.shape[0]} policies for {mbatch.n_specs} specs")
+    for i in range(mbatch.n_specs):
+        _check_feasible_modulated(mbatch, i, acts[i])
+    p = mbatch.policy_transitions_batched(acts)
+    mu, ok = stationary_distribution_batched(p)
+    out = []
+    for i in range(mbatch.n_specs):
+        if ok[i]:
+            out.append(_finish_modulated(mbatch, i, acts[i], mu[i]))
+        else:
+            out.append(
+                _finish_modulated(
+                    mbatch, i, acts[i], stationary_distribution(p[i])
+                )
+            )
+    return out
+
+
+def policy_matrix_banded_modulated(
+    pmfs, tails, wait_m, scale, s_max: int, policy
+):
+    """(K*S, K*S) discretized transition matrix of a frozen (K, S) policy.
+
+    The modulated analogue of policy_matrix_banded: built from the
+    phase-coupled banded data only (pmfs possibly band-trimmed), feeding
+    the same policy_eval_linear for the MPI polish and the exact final
+    gain of the modulated RVI.  Flattened index = z * S + s.
+
+    pmfs: (A, K, K, Kb); tails: (A, K, K, s_max+1); wait_m: (K, K);
+    scale: (K, S, A); policy: (K, S) int.
+    """
+    K, S, A = scale.shape
+    Kb = pmfs.shape[-1]
+    s_o = S - 1
+    s_idx = jnp.arange(S)
+    s_val = jnp.minimum(s_idx, s_max)
+    a = policy  # (K, S)
+    sc = jnp.take_along_axis(scale, a[..., None], axis=-1)[..., 0]  # (K, S)
+    serve = a >= 1
+    base = jnp.clip(s_val[None, :] - a, 0, s_max)  # (K, S)
+    k = jnp.arange(s_max + 1)[None, None, :] - base[..., None]  # (K, S, s_max+1)
+    in_band = (k >= 0) & (k < Kb)
+    zi = jnp.arange(K)
+    # window[z, s, w, j] = pmfs[a[z,s], z, w, k[z,s,j]]
+    window = jnp.where(
+        in_band[:, :, None, :] & serve[:, :, None, None],
+        pmfs[
+            a[:, :, None, None],
+            zi[:, None, None, None],
+            zi[None, None, :, None],
+            jnp.clip(k, 0, Kb - 1)[:, :, None, :],
+        ],
+        0.0,
+    )  # (K, S, K, s_max+1)
+    m_hat = jnp.zeros((K, S, K, S), dtype=scale.dtype)
+    m_hat = m_hat.at[..., : s_max + 1].set(window)
+    tail = tails[
+        a[:, :, None], zi[:, None, None], zi[None, None, :], base[:, :, None]
+    ]  # (K, S, K)
+    m_hat = m_hat.at[..., s_o].add(jnp.where(serve[..., None], tail, 0.0))
+    # wait rows: (z, s) -> (w, s + 1) (S_o self-block) weighted by wait_m
+    nxt = jnp.where(s_idx < s_max, s_idx + 1, s_o)
+    onehot = jnp.zeros((S, S), dtype=scale.dtype).at[s_idx, nxt].set(1.0)
+    wait_rows = wait_m[:, None, :, None] * onehot[None, :, None, :]
+    m_hat = jnp.where(serve[:, :, None, None], m_hat, wait_rows)
+    m_flat = m_hat.reshape(K * S, K * S)
+    sc_flat = sc.reshape(-1)
+    return sc_flat[:, None] * m_flat + jnp.diag(1.0 - sc_flat)
 
 
 def policy_eval_linear(c_pi, m_pi, ref_state: int = 0):

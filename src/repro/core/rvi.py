@@ -65,8 +65,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .evaluate import policy_eval_linear, policy_matrix_banded
-from .smdp import SMDPSpec, TruncatedSMDP, build_smdp
+from .evaluate import (
+    policy_eval_linear,
+    policy_matrix_banded,
+    policy_matrix_banded_modulated,
+)
+from .smdp import SMDPSpec, TruncatedSMDP, build_smdp, phase_rho
+
+#: rho at which the MPI polish starts paying for itself — below it plain
+#: lockstep converges in ~100 backups and the polish machinery (anchor
+#: accel solve, linear solves, extra jit phases) is pure overhead; above
+#: it mixing slows exponentially and MPI wins big.  Shared by every
+#: accel="auto" decision (sweep_solve and the modulated loops).
+ACCEL_RHO_THRESHOLD = 0.5
 
 
 @dataclasses.dataclass
@@ -934,6 +945,326 @@ def relative_value_iteration_batched(
         span=span,
         converged=span < np.maximum(eps, eps_rel * np.abs(g)),
         wall_time_s=time.perf_counter() - t0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Phase-modulated RVI: the same lockstep/MPI machinery on the (phase, queue)
+# product chain.  h carries a (K, S) phase-blocked layout; the backup is the
+# phase-coupled windowed correlation (one einsum against the K x K
+# matrix-valued arrival pmfs), the wait column mixes phases through the
+# arrival-phase matrix, and the MPI polish reuses policy_eval_linear on the
+# (K*S, K*S) banded policy matrix.  Nothing is densified beyond that.
+# ---------------------------------------------------------------------------
+
+
+def banded_backup_modulated(
+    c_tilde: jnp.ndarray,  # (K, S, A), +inf at infeasible
+    pmfs: jnp.ndarray,  # (A, K, K, Kb) phase-coupled arrival pmfs
+    tails: jnp.ndarray,  # (A, K, K, T) overflow mass per base state
+    wait_m: jnp.ndarray,  # (K, K) arrival-phase matrix (a = 0)
+    scale: jnp.ndarray,  # (K, S, A) eta / y
+    s_max: int,
+    h: jnp.ndarray,  # (K, S) with h[:, -1] = h(z, S_o)
+):
+    """Phase-blocked structured backup; K = 1 degenerates to banded_backup.
+
+    For a != 0 and base t = s - a:
+        (M^ h)(z, s) = sum_{w,k<=s_max-t} p^{[a]}_k[z,w] h(w, t+k)
+                       + sum_w tail[a,z,w,t] h(w, S_o)
+    For a == 0: (M^ h)(z, s) = sum_w wait_m[z,w] h(w, min(s+1 -> S_o)).
+    Discretized:  Q = c~ + scale * (M^ h) + (1 - scale) * h(z, s).
+    """
+    K, S, A = c_tilde.shape
+    T = s_max + 1
+    Kb = pmfs.shape[-1]
+    t_idx = jnp.arange(T)[:, None]
+    k_idx = jnp.arange(Kb)[None, :]
+    j = t_idx + k_idx
+    valid = j <= s_max
+    hwin = jnp.where(valid[None], h[:, jnp.minimum(j, s_max)], 0.0)  # (K,T,Kb)
+    # G[z, t, a] = sum_{w, k} pmfs[a, z, w, k] hwin[w, t, k]  (phase-coupled
+    # correlation; the K = 1 slice is exactly banded_backup's hwin @ pmfs.T)
+    G = jnp.einsum("azwk,wtk->zta", pmfs, hwin)
+    G = G + jnp.einsum("azwt,w->zta", tails, h[:, S - 1])
+    s_val = jnp.minimum(jnp.arange(S), s_max)
+    base = jnp.clip(s_val[:, None] - jnp.arange(A)[None, :], 0, s_max)  # (S,A)
+    mh_serve = G[:, base, jnp.arange(A)[None, :]]  # (K, S, A)
+    nxt = jnp.where(jnp.arange(S) < s_max, jnp.arange(S) + 1, S - 1)
+    mh_wait = wait_m @ h[:, nxt]  # (K, S)
+    mh = mh_serve.at[:, :, 0].set(mh_wait)
+    return c_tilde + scale * mh + (1.0 - scale) * h[:, :, None]
+
+
+def trimmed_band_modulated(pm: np.ndarray, tol: float = BAND_TOL) -> int:
+    """Band width holding all but ``tol`` of every (action, phase) row.
+
+    ``pm`` is (N, A, K, K, T); the row mass sums over end phases w.  The
+    overflow tails stay full-width (exact), so trimming only drops in-band
+    mass below ``tol`` — the same guarantee as trimmed_band.
+    """
+    row = pm[:, 1:].sum(axis=3)  # (N, A-1, K, T): mass per (a, z) over w
+    tot = row.sum(axis=-1, keepdims=True)
+    width = int((np.cumsum(row, axis=-1) < tot - tol).sum(-1).max()) + 2
+    return min(width, pm.shape[-1])
+
+
+def _span_flat(diff):
+    d = diff.reshape(diff.shape[0], -1)
+    return jnp.max(d, axis=-1) - jnp.min(d, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("max_iter", "s_max"))
+def _rvi_loop_modulated(
+    c_tilde,  # (N, K, S, A)
+    pmfs,  # (N, A, K, K, Kb)
+    tails,  # (N, A, K, K, T)
+    wait_m,  # (N, K, K)
+    scale,  # (N, K, S, A)
+    eps: float,
+    eps_rel: float,
+    max_iter: int,
+    s_max: int,
+    h0=None,  # (N, K, S) warm start
+):
+    """Vectorized lockstep RVI on the product chain (gauge at (z=0, s=0))."""
+    N, K, S, _ = c_tilde.shape
+    backup = jax.vmap(banded_backup_modulated, in_axes=(0, 0, 0, 0, 0, None, 0))
+
+    def thresh(g):
+        return jnp.maximum(eps, eps_rel * jnp.abs(g))
+
+    def cond(carry):
+        i, h, span, g, _ = carry
+        return jnp.logical_and(i < max_iter, jnp.any(span >= thresh(g)))
+
+    def body(carry):
+        i, h, _, _, it_conv = carry
+        q = backup(c_tilde, pmfs, tails, wait_m, scale, s_max, h)
+        j = jnp.min(q, axis=-1)  # (N, K, S)
+        g = j[:, 0, 0]
+        h_new = j - g[:, None, None]
+        span = _span_flat(h_new - h)
+        it_conv = jnp.where((span < thresh(g)) & (it_conv < 0), i + 1, it_conv)
+        return i + 1, h_new, span, g, it_conv
+
+    if h0 is None:
+        h0 = jnp.zeros((N, K, S), dtype=c_tilde.dtype)
+    init = (
+        0,
+        jnp.asarray(h0, dtype=c_tilde.dtype),
+        jnp.full((N,), jnp.inf, dtype=c_tilde.dtype),
+        jnp.zeros((N,), dtype=c_tilde.dtype),
+        jnp.full((N,), -1, dtype=jnp.int32),
+    )
+    i, h, span, g, it_conv = jax.lax.while_loop(cond, body, init)
+    q = backup(c_tilde, pmfs, tails, wait_m, scale, s_max, h)
+    policies = jnp.argmin(q, axis=-1)
+    it_conv = jnp.where(it_conv < 0, i, it_conv)
+    return policies, g, h, i, span, it_conv
+
+
+@partial(jax.jit, static_argnames=("max_iter", "s_max", "period"))
+def _rvi_loop_modulated_mpi(
+    c_tilde,
+    pmfs,
+    tails,
+    wait_m,
+    scale,
+    eps: float,
+    eps_rel: float,
+    max_iter: int,
+    s_max: int,
+    period: int = 6,
+    h0=None,
+):
+    """Modulated modified policy iteration: lockstep + periodic exact polish.
+
+    The polish freezes the greedy (K, S) policy and replaces h by its exact
+    gauge-fixed evaluation on the (K*S, K*S) banded policy matrix — same
+    per-spec safeguard discipline as _rvi_loop_batched_mpi (accepted only
+    where finite and span-shrinking), so it can never do worse than plain
+    lockstep on the product chain.
+    """
+    N, K, S, A = c_tilde.shape
+    backup = jax.vmap(banded_backup_modulated, in_axes=(0, 0, 0, 0, 0, None, 0))
+    mat = jax.vmap(
+        policy_matrix_banded_modulated, in_axes=(0, 0, 0, 0, None, 0)
+    )
+    lin = jax.vmap(policy_eval_linear, in_axes=(0, 0, None))
+
+    def bell(h):
+        q = backup(c_tilde, pmfs, tails, wait_m, scale, s_max, h)
+        j = jnp.min(q, axis=-1)
+        g = j[:, 0, 0]
+        return q, j - g[:, None, None], g
+
+    def thresh(g):
+        return jnp.maximum(eps, eps_rel * jnp.abs(g))
+
+    def with_polish(args):
+        q, hb, span, g, conv, nb, acc, rej = args
+        pol = jnp.argmin(q, axis=-1)  # (N, K, S)
+        m_pi = mat(pmfs, tails, wait_m, scale, s_max, pol)
+        c_pi = jnp.take_along_axis(c_tilde, pol[..., None], axis=-1)[
+            ..., 0
+        ].reshape(N, K * S)
+        g_pol, h_pol_flat = lin(c_pi, m_pi, 0)
+        h_pol = h_pol_flat.reshape(N, K, S)
+        _, hb2, g2 = bell(h_pol)
+        span2 = _span_flat(hb2 - h_pol)
+        ok = (
+            jnp.isfinite(g_pol)
+            & jnp.all(jnp.isfinite(h_pol_flat), axis=-1)
+            & (span2 < span)
+            & ~conv
+        )
+        h_out = jnp.where(ok[:, None, None], hb2, hb)
+        return (
+            h_out,
+            jnp.where(ok, span2, span),
+            jnp.where(ok, g2, g),
+            nb + 1,
+            acc + ok,
+            rej + (~ok & ~conv),
+        )
+
+    def no_polish(args):
+        _, hb, span, g, _, nb, acc, rej = args
+        return hb, span, g, nb, acc, rej
+
+    def cond(carry):
+        it, _, _, span, g, _, _, _ = carry
+        return jnp.logical_and(it < max_iter, jnp.any(span >= thresh(g)))
+
+    def body(carry):
+        it, nb, h, _, _, it_conv, acc, rej = carry
+        q, hb, g = bell(h)
+        nb = nb + 1
+        span = _span_flat(hb - h)
+        conv = span < thresh(g)
+        h_out, span_out, g_out, nb, acc, rej = jax.lax.cond(
+            (it + 1) % period == 0,
+            with_polish,
+            no_polish,
+            (q, hb, span, g, conv, nb, acc, rej),
+        )
+        it_conv = jnp.where(
+            (span_out < thresh(g_out)) & (it_conv < 0), nb, it_conv
+        )
+        return it + 1, nb, h_out, span_out, g_out, it_conv, acc, rej
+
+    if h0 is None:
+        h0 = jnp.zeros((N, K, S), dtype=c_tilde.dtype)
+    zi = jnp.zeros((N,), dtype=jnp.int32)
+    init = (
+        0,
+        0,
+        jnp.asarray(h0, dtype=c_tilde.dtype),
+        jnp.full((N,), jnp.inf, dtype=c_tilde.dtype),
+        jnp.zeros((N,), dtype=c_tilde.dtype),
+        jnp.full((N,), -1, dtype=jnp.int32),
+        zi,
+        zi,
+    )
+    _, nb, h, span, g, it_conv, acc, rej = jax.lax.while_loop(cond, body, init)
+    q = jax.vmap(banded_backup_modulated, in_axes=(0, 0, 0, 0, 0, None, 0))(
+        c_tilde, pmfs, tails, wait_m, scale, s_max, h
+    )
+    policies = jnp.argmin(q, axis=-1)
+    it_conv = jnp.where(it_conv < 0, nb, it_conv)
+    return policies, g, h, nb, span, it_conv, acc, rej
+
+
+@partial(jax.jit, static_argnames=("s_max",))
+def _exact_gain_modulated(
+    c_tilde, pmfs, tails, wait_m, scale, s_max, policies, ref_state=0
+):
+    """Exact linear-solve gain + relative values of frozen (K, S) policies."""
+    N, K, S, _ = c_tilde.shape
+    m_pi = jax.vmap(
+        policy_matrix_banded_modulated, in_axes=(0, 0, 0, 0, None, 0)
+    )(pmfs, tails, wait_m, scale, s_max, policies)
+    c_pi = jnp.take_along_axis(c_tilde, policies[..., None], axis=-1)[
+        ..., 0
+    ].reshape(N, K * S)
+    g, h = jax.vmap(policy_eval_linear, in_axes=(0, 0, None))(
+        c_pi, m_pi, ref_state
+    )
+    return g, h.reshape(N, K, S)
+
+
+def relative_value_iteration_modulated(
+    mbatch,  # ModulatedBatchedSMDP
+    eps: float = 1e-2,
+    max_iter: int = 10_000,
+    eps_rel: float = 2e-4,
+    h0: Optional[np.ndarray] = None,
+    accel: str = "auto",
+    accel_period: int = 6,
+) -> BatchedRVIResult:
+    """Solve every spec of a ModulatedBatchedSMDP (one jitted call, f64).
+
+    Returns a BatchedRVIResult whose per-spec policy/h carry the (K, S)
+    phase-blocked layout.  ``accel`` in {"none", "mpi", "auto"}; "auto"
+    routes through the MPI polish once any spec's *within-phase* traffic
+    intensity reaches the sweep threshold (bursty phases mix slowly even
+    when the mean rho is small — the burst phase sets the wall, so the
+    decision keys on max_z rho_z, not on the mean).  Modulated solves run
+    float64 single-phase: product chains are small (K*S states) and the
+    mixed-precision coarse loop buys nothing at these sizes.  g/h are
+    replaced by the exact linear-solve evaluation of the final greedy
+    policy wherever that solve is finite, exactly like the accelerated
+    scalar paths.
+    """
+    t0 = time.perf_counter()
+    pm = mbatch.pmfs_banded
+    band = trimmed_band_modulated(pm)
+    args = (
+        jnp.asarray(mbatch.c_tilde, jnp.float64),
+        jnp.asarray(pm[..., :band], jnp.float64),
+        jnp.asarray(mbatch.tails, jnp.float64),
+        jnp.asarray(mbatch.wait_m, jnp.float64),
+        jnp.asarray(mbatch.scale, jnp.float64),
+    )
+    s_max = mbatch.s_max
+    if accel == "auto":
+        rho_z = max(
+            phase_rho(sp, ph) for sp, ph in zip(mbatch.specs, mbatch.phases)
+        )
+        accel = "mpi" if rho_z >= ACCEL_RHO_THRESHOLD else "none"
+    h0j = None if h0 is None else jnp.asarray(h0, jnp.float64)
+    acc = rej = None
+    if accel == "mpi":
+        out = _rvi_loop_modulated_mpi(
+            *args, eps, eps_rel, max_iter, s_max, period=accel_period, h0=h0j
+        )
+        policies, g, h, _, span, it_conv, acc, rej = out
+        acc, rej = np.asarray(acc), np.asarray(rej)
+    elif accel == "none":
+        policies, g, h, _, span, it_conv = _rvi_loop_modulated(
+            *args, eps, eps_rel, max_iter, s_max, h0=h0j
+        )
+    else:
+        raise ValueError(f"unknown accel {accel!r} for modulated RVI")
+    g_exact, h_exact = _exact_gain_modulated(*args, s_max, policies)
+    ok = np.isfinite(np.asarray(g_exact)) & np.isfinite(
+        np.asarray(h_exact).reshape(mbatch.n_specs, -1)
+    ).all(axis=-1)
+    g = np.where(ok, np.asarray(g_exact), np.asarray(g))
+    h = np.where(ok[:, None, None], np.asarray(h_exact), np.asarray(h))
+    span = np.asarray(span)
+    return BatchedRVIResult(
+        policies=np.asarray(policies),
+        g=g,
+        h=h,
+        iterations=np.asarray(it_conv),
+        span=span,
+        converged=span < np.maximum(eps, eps_rel * np.abs(g)),
+        wall_time_s=time.perf_counter() - t0,
+        accel=accel,
+        accel_accepts=acc,
+        accel_rejects=rej,
     )
 
 

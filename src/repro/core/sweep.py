@@ -23,6 +23,12 @@ anchor-interpolated warm starts chain along the rho axis: the ends of
 the sorted batch are the extreme-rho specs, exactly where interpolation
 buys the most.  Results always come back in the caller's original spec
 order.
+
+sweep_solve_modulated / sweep_bank(phases=...) are the exact MMPP-aware
+mirrors: the same ordering, c_o-probe reuse, warm-start chaining and
+adaptive-truncation machinery runs on the (phase, queue) product chain
+(smdp.build_smdp_modulated_batched), producing (K, S) phase-indexed
+policies the serving layer consumes as table stacks.
 """
 from __future__ import annotations
 
@@ -35,12 +41,25 @@ from .evaluate import (
     _finish_from_batch,
     evaluate_policy_banded,
     evaluate_policy_batched,
+    evaluate_policy_modulated,
+    evaluate_policy_modulated_batched,
     stationary_distribution_batched,
 )
 from .policies import greedy_policy
-from .rvi import relative_value_iteration_batched
-from .smdp import SMDPSpec, build_smdp_batched
-from .solve import SolveResult
+from .rvi import (
+    ACCEL_RHO_THRESHOLD as _ACCEL_RHO_THRESHOLD,
+    relative_value_iteration_batched,
+    relative_value_iteration_modulated,
+)
+from .smdp import (
+    PhaseConfig,
+    SMDPSpec,
+    build_smdp_batched,
+    build_smdp_modulated_batched,
+    modulated_spec,
+    phase_rho,
+)
+from .solve import ModulatedSolveResult, SolveResult
 
 
 def sweep_bank(
@@ -48,6 +67,7 @@ def sweep_bank(
     lams: Sequence[float],
     w2s: Optional[Sequence[float]] = None,
     profiles: Optional[dict] = None,
+    phases: Optional[PhaseConfig] = None,
     **solve_kw,
 ):
     """Solve a lambda x w2 (x service-profile) grid as an SMDPSchedulerBank.
@@ -65,6 +85,15 @@ def sweep_bank(
     the coordinate: ``bank.scheduler(lam=..., w2=..., profile=pid)`` or
     ``AdaptiveController(bank, w2=..., profile=pid)``.  All profiles must
     share b_max (the action axis cannot be padded).
+
+    ``phases`` switches the bank to *exact MMPP-aware* solves: each lam is
+    treated as the target mean rate, the PhaseConfig's per-phase rates are
+    scaled to hit it (same burst ratio and switching dynamics), and every
+    table in the bank becomes a (K, S) phase-indexed stack solved on the
+    (phase, queue) product chain (sweep_solve_modulated).  Serving-side
+    consumers pick the phase row via SMDPScheduler.phase, the oracle /
+    belief schedulers, or the compiled phase lane.  Mutually exclusive
+    with ``profiles``.
     """
     from repro.serving.scheduler import SMDPScheduler
 
@@ -72,6 +101,25 @@ def sweep_bank(
     w2s = [base.w2] if w2s is None else list(w2s)
     if len(lams) == 0 or len(w2s) == 0:
         raise ValueError("sweep_bank needs at least one lam and one w2")
+    if phases is not None:
+        if profiles is not None:
+            raise ValueError("phases= and profiles= are mutually exclusive")
+        specs, phase_list, keys = [], [], []
+        for lam in lams:
+            ph = phases.scaled(float(lam) / phases.mean_rate)
+            for w2 in w2s:
+                specs.append(
+                    modulated_spec(
+                        dataclasses.replace(base, w2=float(w2)), ph
+                    )
+                )
+                phase_list.append(ph)
+                keys.append((float(lam), float(w2)))
+        return SMDPScheduler.bank(
+            sweep_solve_modulated(specs, phase_list, **solve_kw),
+            keys=keys,
+            key_names=("lam", "w2"),
+        )
     variants = [(None, {})] if profiles is None else [
         (float(pid), dict(over)) for pid, over in profiles.items()
     ]
@@ -165,11 +213,37 @@ def resolve_abstract_cost_batched(
 #: below this batch width the anchor pre-solve costs more than it saves
 _WARM_START_MIN = 6
 
-#: accel="auto": rho at which the MPI polish starts paying for itself —
-#: below it plain lockstep converges in ~100 backups and the polish
-#: machinery (anchor accel solve, linear solves, extra jit phases) is
-#: pure overhead; above it mixing slows exponentially and MPI wins big
-_ACCEL_RHO_THRESHOLD = 0.5
+
+def _warm_start_t(specs: Sequence[SMDPSpec], c_feat: np.ndarray) -> np.ndarray:
+    """Per-spec interpolation coordinate t in [0, 1] along the anchor pair.
+
+    The interpolation coordinate:
+
+      * rho varies across the batch — project the normalized (rho, w2)
+        parameter point onto the anchor segment (c_tilde is NOT affine in
+        lambda: the arrival pmfs move with it, so cost-space projection
+        would misplace lambda-swept specs);
+      * rho constant (w2 / energy-profile sweeps) — project the cost
+        features ``c_feat`` (finite c_tilde entries, flattened per spec)
+        onto the anchor segment, which is exact for any parameter c_tilde
+        is affine in, without knowing which one the caller swept.
+    """
+    rhos = np.array([sp.rho for sp in specs])
+    w2s = np.array([sp.w2 for sp in specs])
+    if abs(rhos[-1] - rhos[0]) > 1e-12:
+
+        def norm(v):
+            span = v[-1] - v[0]
+            return (v - v[0]) / span if abs(span) > 1e-12 else np.zeros_like(v)
+
+        theta = np.stack([norm(rhos), norm(w2s)], axis=1)  # (N, 2)
+        d = theta[-1] - theta[0]
+        return np.clip(theta @ d / float(d @ d), 0.0, 1.0)
+    d = c_feat[-1] - c_feat[0]
+    denom = float(d @ d)
+    if denom <= 0.0:
+        return np.zeros(len(specs))
+    return np.clip((c_feat - c_feat[0]) @ d / denom, 0.0, 1.0)
 
 
 def _anchor_warm_start(batch, eps: float, max_iter: int, **rvi_kw):
@@ -179,43 +253,42 @@ def _anchor_warm_start(batch, eps: float, max_iter: int, **rvi_kw):
     batched RVI converge in far fewer lockstep iterations.  The batch is
     pre-sorted along (rho, w2) by sweep_solve, so the anchors are the
     extreme-rho specs and interpolation chains along the rho axis where
-    mixing (and hence iteration count) is worst.  The interpolation
-    coordinate per spec:
-
-      * rho varies across the batch — project the normalized (rho, w2)
-        parameter point onto the anchor segment (c_tilde is NOT affine in
-        lambda: the arrival pmfs move with it, so cost-space projection
-        would misplace lambda-swept specs);
-      * rho constant (w2 / energy-profile sweeps) — project the cost
-        tensors onto the anchor segment, which is exact for any parameter
-        c_tilde is affine in, without knowing which one the caller swept.
+    mixing (and hence iteration count) is worst (coordinate: see
+    _warm_start_t).
     """
     if batch.n_specs < _WARM_START_MIN:
         return None
     anchors = relative_value_iteration_batched(
         batch.take([0, batch.n_specs - 1]), eps=eps, max_iter=max_iter, **rvi_kw
     )
-    rhos = np.array([sp.rho for sp in batch.specs])
-    w2s = np.array([sp.w2 for sp in batch.specs])
-    if abs(rhos[-1] - rhos[0]) > 1e-12:
-
-        def norm(v):
-            span = v[-1] - v[0]
-            return (v - v[0]) / span if abs(span) > 1e-12 else np.zeros_like(v)
-
-        theta = np.stack([norm(rhos), norm(w2s)], axis=1)  # (N, 2)
-        d = theta[-1] - theta[0]
-        t = np.clip(theta @ d / float(d @ d), 0.0, 1.0)
-    else:
-        mask = batch.feasible.all(axis=0)  # finite c_tilde in every spec
-        c = batch.c_tilde[:, mask]
-        d = c[-1] - c[0]
-        denom = float(d @ d)
-        if denom <= 0.0:
-            t = np.zeros(batch.n_specs)
-        else:
-            t = np.clip((c - c[0]) @ d / denom, 0.0, 1.0)
+    mask = batch.feasible.all(axis=0)  # finite c_tilde in every spec
+    t = _warm_start_t(batch.specs, batch.c_tilde[:, mask])
     return (1.0 - t)[:, None] * anchors.h[0] + t[:, None] * anchors.h[1]
+
+
+def _anchor_warm_start_modulated(mbatch, eps: float, max_iter: int, **rvi_kw):
+    """Modulated anchor warm start: h0 chains along rho per phase block.
+
+    Identical discipline to _anchor_warm_start — the anchors are the
+    extreme-(rho, w2) specs of the pre-sorted batch — with the (K, S)
+    phase-blocked h interpolated jointly (every phase block shares the
+    spec's interpolation coordinate, since the whole product chain moves
+    with (rho, w2))."""
+    if mbatch.n_specs < _WARM_START_MIN:
+        return None
+    anchors = relative_value_iteration_modulated(
+        mbatch.take([0, mbatch.n_specs - 1]),
+        eps=eps,
+        max_iter=max_iter,
+        **rvi_kw,
+    )
+    mask = mbatch.feasible.all(axis=0)  # (S, A) feasible in every spec
+    c_feat = mbatch.c_tilde[:, :, mask].reshape(mbatch.n_specs, -1)
+    t = _warm_start_t(mbatch.specs, c_feat)
+    return (
+        (1.0 - t)[:, None, None] * anchors.h[0]
+        + t[:, None, None] * anchors.h[1]
+    )
 
 
 def sweep_solve(
@@ -316,3 +389,158 @@ def sweep_solve(
         prebuilt = None
         pending = still_pending
     return results
+
+
+# ---------------------------------------------------------------------------
+# Phase-modulated sweeps (exact MMPP-aware solves)
+# ---------------------------------------------------------------------------
+
+
+def _greedy_c_o_modulated(mbatch) -> np.ndarray:
+    """Per-spec abstract cost c_o = max(100, 2 * g_greedy), modulated chain.
+
+    The greedy policy is phase-independent (largest feasible batch now), so
+    its (K, S) lift is the scalar table tiled across phases; gains come
+    from the batched product-chain stationary solve."""
+    K = mbatch.n_phases
+    pols = np.stack(
+        [
+            np.tile(
+                greedy_policy(sp.s_max, sp.b_min, sp.b_max)[None, :], (K, 1)
+            )
+            for sp in mbatch.specs
+        ]
+    )
+    out = np.empty(mbatch.n_specs)
+    try:
+        evs = evaluate_policy_modulated_batched(mbatch, pols)
+        for i, ev in enumerate(evs):
+            out[i] = max(100.0, 2.0 * ev.g)
+    except RuntimeError:
+        for i in range(mbatch.n_specs):
+            try:
+                g = evaluate_policy_modulated(mbatch, i, pols[i]).g
+            except RuntimeError:
+                g = 100.0
+            out[i] = max(100.0, 2.0 * g)
+    return out
+
+
+def sweep_solve_modulated(
+    specs: Sequence[SMDPSpec],
+    phases: Sequence[PhaseConfig],
+    eps: float = 1e-2,
+    max_iter: int = 10_000,
+    delta: float = 1e-3,
+    grow_factor: float = 1.5,
+    max_s_max: int = 1024,
+    auto_c_o: bool = True,
+    accel: str = "auto",
+) -> List[ModulatedSolveResult]:
+    """Batched exact MMPP-aware solves over aligned (spec, phases) pairs.
+
+    The modulated mirror of sweep_solve: specs are padded to a shared
+    s_max, sorted along (rho, w2) so anchor warm starts chain along the
+    rho axis per phase block, the c_o = 0 probe batch calibrates every
+    abstract cost with one batched product-chain stationary solve (then
+    row-patched via with_c_o, never rebuilt), and the paper's adaptive
+    truncation rule regrows only the specs whose Delta (summed over every
+    phase's overflow state) still exceeds ``delta``.  Results return in
+    input order; each carries the (K, S) phase-indexed policy.
+
+    ``phases`` may be one shared PhaseConfig or a sequence aligned with
+    ``specs``.  ``max_s_max`` defaults lower than the scalar sweep: the
+    product chain is K x larger per state and the exact solves are meant
+    for policy tables, not tail asymptotics.
+    """
+    specs = list(specs)
+    if not specs:
+        return []
+    if isinstance(phases, PhaseConfig):
+        phases = [phases] * len(specs)
+    phases = list(phases)
+    if len(phases) != len(specs):
+        raise ValueError(f"{len(phases)} phase configs for {len(specs)} specs")
+    specs = pad_specs(specs)
+    if accel == "auto":
+        # the burst phase sets the mixing wall: key on max within-phase rho
+        rho_z = max(phase_rho(sp, ph) for sp, ph in zip(specs, phases))
+        accel = "mpi" if rho_z >= _ACCEL_RHO_THRESHOLD else "none"
+    order = sorted(
+        range(len(specs)), key=lambda i: (specs[i].rho, specs[i].w2)
+    )
+    prebuilt = None
+    if auto_c_o:
+        probe = build_smdp_modulated_batched(
+            [dataclasses.replace(specs[i], c_o=0.0) for i in order],
+            [phases[i] for i in order],
+        )
+        prebuilt = probe.with_c_o(_greedy_c_o_modulated(probe))
+        pending = [
+            (i, sp, phases[i]) for i, sp in zip(order, prebuilt.specs)
+        ]
+    else:
+        pending = [(i, specs[i], phases[i]) for i in order]
+    rvi_kw = dict(accel=accel)
+    results: List[ModulatedSolveResult] = [None] * len(specs)  # type: ignore[list-item]
+    while pending:
+        levels = sorted({sp.s_max for _, sp, _ in pending})
+        still_pending = []
+        for s_max in levels:
+            group = [(i, sp, ph) for i, sp, ph in pending if sp.s_max == s_max]
+            group.sort(key=lambda t: (t[1].rho, t[1].w2))
+            if (
+                prebuilt is not None
+                and len(group) == prebuilt.n_specs
+                and all(a is b for (_, a, _), b in zip(group, prebuilt.specs))
+            ):
+                mbatch = prebuilt
+            else:
+                mbatch = build_smdp_modulated_batched(
+                    [sp for _, sp, _ in group], [ph for _, _, ph in group]
+                )
+            rvi = relative_value_iteration_modulated(
+                mbatch,
+                eps=eps,
+                max_iter=max_iter,
+                h0=_anchor_warm_start_modulated(
+                    mbatch, eps, max_iter, **rvi_kw
+                ),
+                **rvi_kw,
+            )
+            evs = evaluate_policy_modulated_batched(mbatch, rvi.policies)
+            for row, (idx, sp, ph) in enumerate(group):
+                ev = evs[row]
+                if delta is None or ev.delta < delta or sp.s_max >= max_s_max:
+                    results[idx] = ModulatedSolveResult(
+                        spec=sp, phases=ph, rvi=rvi.unstack(row), eval=ev
+                    )
+                else:
+                    still_pending.append(
+                        (
+                            idx,
+                            dataclasses.replace(
+                                sp,
+                                s_max=min(
+                                    int(np.ceil(sp.s_max * grow_factor)),
+                                    max_s_max,
+                                ),
+                            ),
+                            ph,
+                        )
+                    )
+        prebuilt = None
+        pending = still_pending
+    return results
+
+
+def solve_modulated(
+    spec: SMDPSpec, phases: PhaseConfig, **kw
+) -> ModulatedSolveResult:
+    """Exact MMPP-aware solve of one spec (the N == 1 modulated sweep).
+
+    ``spec.lam`` must equal ``phases.mean_rate`` (use smdp.modulated_spec).
+    The K = 1 degenerate config reproduces the scalar solve() policy
+    bit-for-bit — the refactor's safety rail, pinned by the test suite.
+    """
+    return sweep_solve_modulated([spec], phases, **kw)[0]

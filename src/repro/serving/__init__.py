@@ -14,20 +14,26 @@ power, and the arrival-rate estimate.
 from .arrivals import (  # noqa: F401
     ArrivalEvent,
     ArrivalProcess,
+    DiurnalProcess,
     MMPP2,
     MMPP2Process,
+    PhaseBeliefFilter,
     PoissonProcess,
     TraceProcess,
     as_process,
 )
 from .scheduler import (  # noqa: F401
     AdaptiveController,
+    BeliefPhaseScheduler,
     GreedyScheduler,
+    OraclePhaseScheduler,
+    PhaseAwareScheduler,
     SMDPScheduler,
     SMDPSchedulerBank,
     StaticScheduler,
     QPolicyScheduler,
     as_action_table,
+    solve_phase_policies,
 )
 from .metrics import (  # noqa: F401
     P2Quantile,

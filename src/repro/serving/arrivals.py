@@ -11,11 +11,18 @@ Implemented processes:
   * PoissonProcess — the paper's M/G^[b]/1 arrival side (rate lambda);
   * MMPP2Process   — two-phase Markov-modulated Poisson (paper Sec. VIII's
     "temporal composition of Poisson periods"); MMPP2 holds the parameters;
+  * DiurnalProcess — time-varying rate (sinusoidal or piecewise-linear
+    ramp), sampled exactly by thinning against the peak rate;
   * TraceProcess   — replay of recorded arrival times or Request objects
     (executor mode and like-for-like scheduler comparisons).
 
 `as_process` coerces a rate, an MMPP2, an array of times, or a Request list
 into the right process, so engine call-sites stay terse.
+
+PhaseBeliefFilter is the MMPP forward filter (posterior over the hidden
+phase from observed inter-arrival gaps) behind the serving layer's
+non-oracle phase-indexed schedulers (scheduler.BeliefPhaseScheduler and
+AdaptiveController(phase_filter=...)).
 
 The compiled backend (serving.compiled) replays every mode as a padded
 sorted arrival array.  Two routes produce one:
@@ -176,6 +183,85 @@ class MMPP2Process(ArrivalProcess):
         self.switch_log = [tuple(x) for x in state["switch_log"]]
 
 
+class DiurnalProcess(ArrivalProcess):
+    """Time-varying Poisson arrivals: sinusoidal or piecewise-linear rate.
+
+    rate(t) = base + amp * sin(2 pi (t + phase0) / period), or — when
+    ``ramp`` is given — the cyclic piecewise-linear interpolation of
+    [(tau_i, rate_i)] breakpoints over one period.  Sampling is exact via
+    thinning against the peak rate (candidate gaps at rate_max, accepted
+    with probability rate(t)/rate_max), so snapshot state is just the
+    clock.  Closes the ROADMAP "richer arrival processes (diurnal ramps)"
+    note; the scan-compatible jax mirror is diurnal_times_jax.
+    """
+
+    name = "diurnal"
+
+    def __init__(
+        self,
+        base: float = 1.0,
+        amp: float = 0.0,
+        period: float = 86400.0,
+        phase0: float = 0.0,
+        ramp: Optional[Sequence[Tuple[float, float]]] = None,
+    ):
+        if period <= 0:
+            raise ValueError(f"period must be positive, got {period}")
+        self.period = float(period)
+        self.phase0 = float(phase0)
+        self.base = float(base)
+        self.amp = float(amp)
+        if ramp is not None:
+            pts = sorted((float(t), float(r)) for t, r in ramp)
+            if not pts:
+                raise ValueError("ramp needs at least one breakpoint")
+            if pts[0][0] < 0 or pts[-1][0] >= self.period:
+                raise ValueError("ramp breakpoints must lie in [0, period)")
+            self._taus = np.array([t for t, _ in pts])
+            self._vals = np.array([r for _, r in pts])
+            self.rate_max = float(self._vals.max())
+            rate_min = float(self._vals.min())
+        else:
+            self._taus = self._vals = None
+            self.rate_max = self.base + abs(self.amp)
+            rate_min = self.base - abs(self.amp)
+        if rate_min <= 0:
+            raise ValueError("rate must stay positive over the whole cycle")
+        self._t = 0.0
+
+    def rate(self, t) -> np.ndarray:
+        """Instantaneous arrival rate at (absolute) time t."""
+        tau = np.mod(np.asarray(t, dtype=np.float64) + self.phase0, self.period)
+        if self._taus is None:
+            return self.base + self.amp * np.sin(2.0 * np.pi * tau / self.period)
+        # cyclic linear interpolation: wrap the first breakpoint past the end
+        taus = np.concatenate([self._taus, [self._taus[0] + self.period]])
+        vals = np.concatenate([self._vals, [self._vals[0]]])
+        return np.interp(
+            np.where(tau < taus[0], tau + self.period, tau), taus, vals
+        )
+
+    @property
+    def mean_rate(self) -> float:
+        if self._taus is None:
+            return self.base  # sine integrates to zero over a cycle
+        grid = np.linspace(0.0, self.period, 4097)
+        trapezoid = getattr(np, "trapezoid", None) or np.trapz
+        return float(trapezoid(self.rate(grid - self.phase0), grid) / self.period)
+
+    def next(self, rng: np.random.Generator) -> ArrivalEvent:
+        while True:
+            self._t += rng.exponential(1.0 / self.rate_max)
+            if rng.uniform() * self.rate_max < float(self.rate(self._t)):
+                return ArrivalEvent(self._t)
+
+    def snapshot(self) -> dict:
+        return {"t": self._t}
+
+    def restore(self, state: dict) -> None:
+        self._t = state["t"]
+
+
 class TraceProcess(ArrivalProcess):
     """Replay a recorded arrival trace (times, or Request-like objects).
 
@@ -242,6 +328,83 @@ class TraceProcess(ArrivalProcess):
         self._i = state["i"]
 
 
+class PhaseBeliefFilter:
+    """Forward filter for the hidden MMPP phase from observed arrivals.
+
+    The exact Bayesian posterior over the modulating phase given the
+    arrival times seen so far:  between arrivals the belief evolves by
+    exp((R - Lambda) * gap) (phase diffusion weighted by "no arrival
+    occurred"), and each arrival multiplies in the per-phase rates:
+
+        b'  propto  b @ expm((R - Lambda) gap) @ Lambda.
+
+    The matrix exponential is precomputed as an eigendecomposition of
+    (R - Lambda), so each observation costs O(K^2).  This is the
+    non-oracle counterpart of the true-phase trace: schedulers select the
+    argmax-phase table (scheduler.BeliefPhaseScheduler,
+    AdaptiveController(phase_filter=...)).
+    """
+
+    def __init__(self, rates, gen, t0: float = 0.0, b0=None):
+        self.rates = np.asarray(rates, dtype=np.float64)
+        self.gen = np.asarray(gen, dtype=np.float64)
+        K = len(self.rates)
+        if self.gen.shape != (K, K):
+            raise ValueError(f"gen shape {self.gen.shape} != ({K}, {K})")
+        sub = self.gen - np.diag(self.rates)  # (R - Lambda)
+        d, V = np.linalg.eig(sub)
+        self._d, self._V = d, V
+        self._Vinv = np.linalg.inv(V)
+        if b0 is None:
+            # stationary phase distribution of the modulating chain
+            a = self.gen.T.copy()
+            a[-1, :] = 1.0
+            rhs = np.zeros(K)
+            rhs[-1] = 1.0
+            try:
+                b0 = np.clip(np.linalg.solve(a, rhs), 0.0, None)
+            except np.linalg.LinAlgError:
+                b0 = np.ones(K)
+        self._b0 = np.asarray(b0, dtype=np.float64) / np.sum(b0)
+        self.belief = self._b0.copy()
+        self._last = float(t0)
+        self._t0 = float(t0)
+        self.n_observed = 0
+
+    def _propagate(self, gap: float) -> np.ndarray:
+        e = (self._V * np.exp(self._d * gap)) @ self._Vinv
+        return np.real(self.belief @ e)
+
+    def observe(self, t: float) -> None:
+        """Fold in one arrival at absolute time t (monotone in t)."""
+        gap = max(float(t) - self._last, 0.0)
+        b = self._propagate(gap) * self.rates
+        s = b.sum()
+        if not np.isfinite(s) or s <= 1e-300:
+            b = self._b0 * self.rates  # numerical underflow: soft reset
+            s = b.sum()
+        self.belief = np.clip(b / s, 0.0, None)
+        self._last = float(t)
+        self.n_observed += 1
+
+    @property
+    def phase(self) -> int:
+        """MAP phase under the current belief."""
+        return int(np.argmax(self.belief))
+
+    def snapshot(self) -> dict:
+        return {
+            "belief": self.belief.tolist(),
+            "last": self._last,
+            "n_observed": self.n_observed,
+        }
+
+    def restore(self, state: dict) -> None:
+        self.belief = np.asarray(state["belief"], dtype=np.float64)
+        self._last = state["last"]
+        self.n_observed = state["n_observed"]
+
+
 def take(
     process: ArrivalProcess,
     rng: np.random.Generator,
@@ -292,7 +455,7 @@ def poisson_times_jax(key, lam: float, n: int):
     return jnp.cumsum(gaps)
 
 
-def mmpp2_times_jax(key, mmpp: "MMPP2", n_steps: int):
+def mmpp2_times_jax(key, mmpp: "MMPP2", n_steps: int, with_phases: bool = False):
     """MMPP(2) arrival times via one scan, phase chain in the carry.
 
     Each scan step draws one candidate exponential gap at the current
@@ -302,6 +465,11 @@ def mmpp2_times_jax(key, mmpp: "MMPP2", n_steps: int):
     sorted ascending with non-arrivals pushed to +inf, ``mask`` marking the
     real arrivals (expected count ≈ n_steps * P(no switch per step)).
     vmap over keys for a seeds axis; feed `serving.compiled` directly.
+
+    ``with_phases=True`` additionally returns the sampler-carry phase at
+    each emitted arrival (same sorted order) — exactly what the compiled
+    phase-indexed table lane (serving.compiled phases=) consumes for
+    oracle-phase / exact-modulated policies.
     """
     import jax
     import jax.numpy as jnp
@@ -323,12 +491,62 @@ def mmpp2_times_jax(key, mmpp: "MMPP2", n_steps: int):
             * dwell[new_phase],
             nsw,
         )
-        return (t_new, new_phase, nsw_new), (t_new, ~switch)
+        return (t_new, new_phase, nsw_new), (t_new, ~switch, new_phase)
 
     nsw0 = jax.random.exponential(k0, dtype=jnp.float64) * dwell[0]
     carry0 = (jnp.asarray(0.0, dtype=jnp.float64), jnp.asarray(0), nsw0)
-    _, (times, emitted) = jax.lax.scan(
+    _, (times, emitted, phases) = jax.lax.scan(
         step, carry0, jax.random.split(kscan, n_steps)
+    )
+    order = jnp.argsort(jnp.where(emitted, times, jnp.inf))
+    out = (jnp.where(emitted, times, jnp.inf)[order], emitted[order])
+    if with_phases:
+        return out + (phases[order].astype(jnp.int32),)
+    return out
+
+
+def diurnal_times_jax(key, proc: DiurnalProcess, n_steps: int):
+    """Diurnal arrival times via one thinning scan (jit/vmap-safe).
+
+    The jax mirror of DiurnalProcess.next: each step advances the clock by
+    an Exp(rate_max) candidate gap and accepts it with probability
+    rate(t)/rate_max.  Returns (times, mask) like mmpp2_times_jax
+    (expected count ≈ n_steps * mean_rate / rate_max).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    rmax = proc.rate_max
+    period = proc.period
+    phase0 = proc.phase0
+    if proc._taus is None:
+        base, amp = proc.base, proc.amp
+
+        def rate(t):
+            tau = jnp.mod(t + phase0, period)
+            return base + amp * jnp.sin(2.0 * jnp.pi * tau / period)
+    else:
+        taus = jnp.asarray(
+            np.concatenate([proc._taus, [proc._taus[0] + period]])
+        )
+        vals = jnp.asarray(np.concatenate([proc._vals, [proc._vals[0]]]))
+
+        def rate(t):
+            tau = jnp.mod(t + phase0, period)
+            return jnp.interp(
+                jnp.where(tau < taus[0], tau + period, tau), taus, vals
+            )
+
+    def step(t, ks):
+        kg, ku = jax.random.split(ks)
+        t = t + jax.random.exponential(kg, dtype=jnp.float64) / rmax
+        accept = jax.random.uniform(ku, dtype=jnp.float64) * rmax < rate(t)
+        return t, (t, accept)
+
+    _, (times, emitted) = jax.lax.scan(
+        step,
+        jnp.asarray(0.0, dtype=jnp.float64),
+        jax.random.split(key, n_steps),
     )
     order = jnp.argsort(jnp.where(emitted, times, jnp.inf))
     return jnp.where(emitted, times, jnp.inf)[order], emitted[order]

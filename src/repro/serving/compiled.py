@@ -19,6 +19,14 @@ Key representation choices:
     serving.arrivals (the MMPP2 phase chain lives in that sampler's carry)
     or via eager numpy pre-generation when draw-for-draw parity with the
     Python engine is wanted (ServingEngine.run(backend="compiled")).
+  * Policy tables always carry a phase axis inside the kernel: a (K, L)
+    stack indexed by the phase of the *last admitted arrival* (a
+    ``phases`` array aligned with the arrivals — from the MMPP2 sampler
+    carry, an oracle switch trace, or all-zeros for the plain K = 1
+    lane).  That is exactly the Python engine's oracle-phase discipline
+    (observe_arrival on admission), so phase-indexed SMDP policies —
+    OraclePhaseScheduler stacks and exact modulated (K, S) policies alike
+    — run decision-for-decision inside the jitted scan.
   * One *event* per scan step — an O(1) admission pointer increment or a
     decision epoch — and a scalars-only carry; per-request accounting
     (latencies, the fixed-bin log-spaced histogram sketch, SLO misses) is
@@ -115,21 +123,30 @@ def _initial_steps(key, n_arr: int, max_eps: int, cap: int) -> int:
 _ADMIT_W = 4
 
 
-def pad_arrivals(times, deadlines=None, size: Optional[int] = None):
+def pad_arrivals(
+    times, deadlines=None, size: Optional[int] = None, *, phases=None
+):
     """Sort + pad an arrival-time array with +inf to a bucketed size.
 
     Returns (arrivals, deadlines) float64 arrays of length ``size`` (or the
     next power-of-two above len(times) plus the kernel's sentinel margin).
-    Padded deadlines are +inf (never miss).
+    Padded deadlines are +inf (never miss).  With ``phases`` (per-arrival
+    phase ints for the phase-indexed table lane) a co-sorted, zero-padded
+    int array is returned as a third element.
     """
     t = np.asarray(times, dtype=np.float64)
     finite = np.isfinite(t)  # idempotent: +inf padding is re-derived
-    d = None
+    d = p = None
     if deadlines is not None:
         d = np.asarray(deadlines, dtype=np.float64)
         if len(d) != len(t):
             raise ValueError("deadlines must align with times")
         d = d[finite]
+    if phases is not None:
+        p = np.asarray(phases, dtype=np.int64)
+        if len(p) != len(t):
+            raise ValueError("phases must align with times")
+        p = p[finite]
     t = t[finite]
     order = np.argsort(t, kind="stable")
     t = t[order]
@@ -144,7 +161,11 @@ def pad_arrivals(times, deadlines=None, size: Optional[int] = None):
     dl = np.full(size, np.inf)
     if d is not None:
         dl[:n] = d[order]
-    return arr, dl
+    if p is None:
+        return arr, dl
+    ph = np.zeros(size, dtype=np.int64)
+    ph[:n] = p[order]
+    return arr, dl, ph
 
 
 def pad_arrivals_batch(traces, size: Optional[int] = None):
@@ -190,13 +211,17 @@ class CompiledResult:
 
 
 def _scan_core(
-    table, arrivals, deadlines, draws, means, zeta, edges,
+    table, arrivals, deadlines, phases, draws, means, zeta, edges,
     t0, horizon, max_eps, drain, b_max, *, n_steps: int, record: bool,
 ):
     """The event kernel: one scan step == one admission OR one epoch.
 
     Pure jax function; shapes only (no jit here — callers jit/vmap it).
     `arrivals` must be sorted with at least one trailing +inf sentinel.
+    ``table`` is a (K, L) phase-indexed stack (K = 1 for plain policies)
+    and ``phases`` the per-arrival phase ints aligned with ``arrivals``;
+    the active row is the phase of the last admitted arrival — the Python
+    engine's oracle-phase discipline (phase updates on admission).
 
     Two throughput-critical choices:
 
@@ -216,7 +241,7 @@ def _scan_core(
     budget reports ``incomplete``; callers re-dispatch at a doubled step
     count (the scan is deterministic, so the prefix replays identically).
     """
-    L = table.shape[0]
+    L = table.shape[-1]
     size = arrivals.shape[0]
     n_bins = edges.shape[0] - 1
     arr_adm = jnp.where(arrivals < horizon, arrivals, jnp.inf)
@@ -235,7 +260,11 @@ def _scan_core(
         admit = active & (n_due > 0)
         dec = active & ~admit
         q = n_adm - n_srv
-        a = table[jnp.minimum(q, L - 1)]
+        # phase of the last admitted arrival (before any admission this
+        # reads the first arrival's phase; the queue is empty there, so
+        # the decision is a forced wait whatever the row)
+        ph = phases[jnp.clip(n_adm - 1, 0, size - 1)]
+        a = table[ph, jnp.minimum(q, L - 1)]
         a = jnp.clip(a, 0, jnp.minimum(q, b_max))
         live = jnp.isfinite(nxt)
         wait = dec & (a == 0) & live
@@ -308,10 +337,10 @@ def _scan_core(
 
 
 @partial(jax.jit, static_argnames=("n_steps", "record"))
-def _simulate_jit(table, arrivals, deadlines, draws, means, zeta, edges,
-                  t0, horizon, max_eps, drain, b_max, n_steps, record):
+def _simulate_jit(table, arrivals, deadlines, phases, draws, means, zeta,
+                  edges, t0, horizon, max_eps, drain, b_max, n_steps, record):
     return _scan_core(
-        table, arrivals, deadlines, draws, means, zeta, edges,
+        table, arrivals, deadlines, phases, draws, means, zeta, edges,
         t0, horizon, max_eps, drain, b_max,
         n_steps=n_steps, record=record,
     )
@@ -330,6 +359,7 @@ def simulate_compiled(
     horizon: Optional[float] = None,
     drain: bool = True,
     deadlines=None,
+    phases=None,
     hist_edges=None,
     record: bool = False,
 ) -> CompiledResult:
@@ -340,15 +370,43 @@ def simulate_compiled(
     service draws (ones for deterministic service); service time of a batch
     of size a is ``means[a] * draws[n_batches_so_far]`` — exactly one draw
     consumed per serve epoch, matching the Python engine's rng discipline.
+
+    ``table`` may be a (K, L) phase-indexed stack; then ``phases`` (the
+    per-arrival phase ints, raw or pre-padded alongside ``arrivals``) is
+    required and the kernel selects the row by the phase of the last
+    admitted arrival (the phase-indexed compiled lane).
     """
+    table = np.asarray(table, dtype=np.int64)
+    if table.ndim == 1:
+        table = table[None]
+    elif table.ndim != 2:
+        raise ValueError(f"table must be (L,) or (K, L); got {table.shape}")
+    if table.shape[0] > 1 and phases is None:
+        raise ValueError("phase-indexed table needs phases= per arrival")
     arr = np.asarray(arrivals, dtype=np.float64)
     if len(arr) < _ADMIT_W or not np.isinf(arr[-_ADMIT_W:]).all():
-        arr, dl = pad_arrivals(arr, deadlines)
+        padded = pad_arrivals(arr, deadlines, phases=phases)
+        if phases is None:
+            arr, dl = padded
+            ph = np.zeros(len(arr), dtype=np.int64)
+        else:
+            arr, dl, ph = padded
     else:
         dl = (
             np.asarray(deadlines, dtype=np.float64)
             if deadlines is not None
             else np.full(len(arr), np.inf)
+        )
+        ph = (
+            np.asarray(phases, dtype=np.int64)
+            if phases is not None
+            else np.zeros(len(arr), dtype=np.int64)
+        )
+        if len(ph) != len(arr):
+            raise ValueError("padded phases must align with arrivals")
+    if phases is not None and (ph.min() < 0 or ph.max() >= table.shape[0]):
+        raise ValueError(
+            f"phases outside the table stack [0, {table.shape[0]})"
         )
     n_arr = int(np.sum(np.isfinite(arr)))
     if max_epochs is None:
@@ -370,19 +428,18 @@ def simulate_compiled(
         if hist_edges is None
         else np.asarray(hist_edges, dtype=np.float64)
     )
-    table = np.asarray(table, dtype=np.int64)
     # one scan step per event: admissions + epochs.  Start from the typical
     # count and re-dispatch doubled if the lane ran out of steps (the cap
     # n_arr + max_eps + 1 is a hard upper bound: every step admits one of
     # n_arr arrivals or consumes one of max_eps epochs).
     cap = _bucket(n_arr + max_eps + 1)
-    ck = ("single", len(arr), len(table), cap)
+    ck = ("single", len(arr), table.shape, cap)
     n_steps = _initial_steps(ck, n_arr, max_eps, cap)
     while True:
         out = _simulate_jit(
             jnp.asarray(table), jnp.asarray(arr), jnp.asarray(dl),
-            jnp.asarray(draws), jnp.asarray(means), jnp.asarray(zeta_a),
-            jnp.asarray(edges),
+            jnp.asarray(ph), jnp.asarray(draws), jnp.asarray(means),
+            jnp.asarray(zeta_a), jnp.asarray(edges),
             float(t0), np.inf if horizon is None else float(horizon),
             max_eps, bool(drain), int(b_max), int(n_steps), bool(record),
         )
@@ -415,17 +472,17 @@ def simulate_compiled(
 
 
 @partial(jax.jit, static_argnames=("n_steps",))
-def _grid_jit(tables, arrivals, deadlines, draws, means, zeta, edges,
+def _grid_jit(tables, arrivals, deadlines, phases, draws, means, zeta, edges,
               t0, horizon, max_eps, drain, b_max, n_steps):
-    def one(arr, dl, dr):
+    def one(arr, dl, ph, dr):
         return jax.vmap(
             lambda tab: _scan_core(
-                tab, arr, dl, dr, means, zeta, edges, t0, horizon,
+                tab, arr, dl, ph, dr, means, zeta, edges, t0, horizon,
                 max_eps, drain, b_max, n_steps=n_steps, record=False,
             )
         )(tables)
 
-    return jax.vmap(one)(arrivals, deadlines, draws)
+    return jax.vmap(one)(arrivals, deadlines, phases, draws)
 
 
 def run_grid(
@@ -441,14 +498,18 @@ def run_grid(
     horizon: Optional[float] = None,
     drain: bool = True,
     deadlines=None,
+    phases=None,
     hist_edges=None,
 ):
     """The vmapped sweep: (seeds x scenarios) traces x policy tables.
 
     ``tables``  — (P, L) stacked action tables (SMDPSchedulerBank.stacked()
-    or scheduler.as_action_table per contender); ``arrivals`` — (S, N)
-    padded sorted traces (pad_arrivals per trace, common N); ``draws`` —
-    (S, D) unit service draws per trace lane (ones for det service).
+    or scheduler.as_action_table per contender), or (P, K, L) phase-indexed
+    stacks with ``phases`` = (S, N) per-arrival phase ints (pad_arrivals
+    phases=, or the mmpp2_times_jax(with_phases=True) sampler carry);
+    ``arrivals`` — (S, N) padded sorted traces (pad_arrivals per trace,
+    common N); ``draws`` — (S, D) unit service draws per trace lane (ones
+    for det service).
 
     One jitted dispatch returns dict of (S, P) aggregate arrays plus the
     (S, P, n_bins + 2) histogram sketch: everything a bank comparison needs
@@ -457,8 +518,16 @@ def run_grid(
     """
     tables = np.asarray(tables, dtype=np.int64)
     arr = np.asarray(arrivals, dtype=np.float64)
-    if arr.ndim != 2 or tables.ndim != 2:
-        raise ValueError("run_grid wants (S, N) arrivals and (P, L) tables")
+    if tables.ndim == 2:
+        tables = tables[:, None, :]
+    elif tables.ndim != 3:
+        raise ValueError(
+            f"tables must be (P, L) or (P, K, L); got {tables.shape}"
+        )
+    if tables.shape[1] > 1 and phases is None:
+        raise ValueError("phase-indexed tables need phases= (S, N) ints")
+    if arr.ndim != 2:
+        raise ValueError("run_grid wants (S, N) arrivals")
     if arr.shape[1] < _ADMIT_W or not np.isinf(arr[:, -_ADMIT_W:]).all():
         raise ValueError("pad each trace with pad_arrivals first")
     dl = (
@@ -466,6 +535,16 @@ def run_grid(
         if deadlines is not None
         else np.full_like(arr, np.inf)
     )
+    if phases is not None:
+        ph = np.asarray(phases, dtype=np.int64)
+        if ph.shape != arr.shape:
+            raise ValueError(f"phases shape {ph.shape} != arrivals {arr.shape}")
+        if ph.min() < 0 or ph.max() >= tables.shape[1]:
+            raise ValueError(
+                f"phases outside the table stack [0, {tables.shape[1]})"
+            )
+    else:
+        ph = np.zeros(arr.shape, dtype=np.int64)
     means = np.asarray(means, dtype=np.float64)
     zeta_a = (
         np.zeros(b_max + 1)
@@ -489,8 +568,8 @@ def run_grid(
     while True:
         out = _grid_jit(
             jnp.asarray(tables), jnp.asarray(arr), jnp.asarray(dl),
-            jnp.asarray(draws), jnp.asarray(means), jnp.asarray(zeta_a),
-            jnp.asarray(edges),
+            jnp.asarray(ph), jnp.asarray(draws), jnp.asarray(means),
+            jnp.asarray(zeta_a), jnp.asarray(edges),
             float(t0), np.inf if horizon is None else float(horizon),
             max_eps, bool(drain), int(b_max), int(n_steps),
         )

@@ -17,12 +17,15 @@ run(backend="compiled") executes the same decision-epoch semantics as one
 jitted `lax.scan` (serving.compiled): arrivals are pre-generated from the
 engine's own rng (draw-for-draw the stream the lazy path would consume;
 over-drawn events are buffered and replayed to later runs), the scheduler
-is lowered to its dense action table, and the report is decision-for-
-decision identical to the Python loop on the same trace — `verify_backends`
-is the harness that asserts exactly that.  Use the Python backend for
-wall-clock executors and online-adaptive schedulers; the compiled backend
-for measurement-grade replication (and serving.compiled.run_grid for whole
-seeds x scenarios x policies sweeps in one dispatch).
+is lowered to its dense action table — phase-indexed (K, L) stacks
+(OraclePhaseScheduler, exact modulated policies) lower together with their
+per-arrival phase stream via the scheduler's phase_at — and the report is
+decision-for-decision identical to the Python loop on the same trace —
+`verify_backends` is the harness that asserts exactly that.  Use the
+Python backend for wall-clock executors and online-*estimating* schedulers
+(adaptive / belief tracking); the compiled backend for measurement-grade
+replication (and serving.compiled.run_grid for whole seeds x scenarios x
+policies sweeps in one dispatch).
 
 Every mode streams per-batch observations into ServingMetrics (P² latency
 quantiles, power; the compiled path reports quantiles from its fixed-bin
@@ -396,6 +399,17 @@ class ServingEngine:
                 "per-batch energy_model callbacks need backend='python'"
             )
         table = as_action_table(self.scheduler, self.b_max)
+        # phase-indexed stacks need the per-arrival phase stream: the
+        # scheduler provides it (oracle switch trace via phase_at, or the
+        # pinned phase of a plain 2-D SMDP table)
+        phase_fn = None
+        if table.ndim == 2:
+            phase_fn = getattr(self.scheduler, "phase_at", None)
+            if phase_fn is None:
+                raise TypeError(
+                    f"{type(self.scheduler).__name__} has a phase-indexed "
+                    "table but no phase_at(times); run backend='python'"
+                )
         means = np.asarray(
             [0.0]
             + [float(self.service.mean(b)) for b in range(1, self.b_max + 1)]
@@ -434,18 +448,23 @@ class ServingEngine:
                     for ev in events
                 ]
             )
+            # recomputed every escalation pass: extended streams get their
+            # phases from the same (stateful) trace the python path reads
+            ph = None if phase_fn is None else phase_fn(times)
             res = simulate_compiled(
                 table, times,
                 means=means, zeta=self.energy_table, draws=draws,
                 b_max=self.b_max, max_epochs=budget, t0=t0,
                 horizon=horizon, drain=drain, deadlines=deadlines,
-                record=True,
+                phases=ph, record=True,
             )
             if not (infinite and res.terminated and res.n_epochs < budget):
                 break
             # the pre-drawn stream ran dry before the epoch budget: a lazy
             # engine would keep drawing — extend the stream and re-run (the
-            # scan is deterministic, so the prefix replays identically)
+            # scan is deterministic, so the prefix replays identically;
+            # arrival processes carry their own state — e.g. the MMPP2
+            # phase — so the extension continues the exact same stream)
             events.extend(self._collect_events(
                 max_epochs, None, extend_from=n_arr
             ))
@@ -573,6 +592,7 @@ def verify_backends(
     horizon: Optional[float] = None,
     drain: Optional[bool] = None,
     slo: Optional[float] = None,
+    phases=None,
     seed: int = 0,
     atol: float = 1e-9,
 ) -> Dict[str, object]:
@@ -584,18 +604,49 @@ def verify_backends(
     each other.  Returns the two EngineReports plus the comparison verdict;
     raises AssertionError on any divergence (this is the acceptance gate
     for the compiled backend, run per arrival mode in the test suite).
+
+    A (K, L) phase-indexed ``table`` plus per-arrival ``phases`` verifies
+    the compiled phase lane: the Python side runs the oracle-phase path
+    (OraclePhaseScheduler on the switch log the phase stream implies), the
+    compiled side the phase-indexed table lookup — the acceptance gate for
+    exact-modulated / oracle policies on the compiled backend.
     """
-    from .scheduler import SMDPScheduler
+    from .scheduler import OraclePhaseScheduler, SMDPScheduler
 
     trace = list(np.asarray(trace, dtype=np.float64))
     if drain is None:
         drain = n_epochs is None
     budget = n_epochs if n_epochs is not None else 2 * len(trace) + 2
     draws = service.unit_draws(np.random.default_rng(seed), budget)
+    table = np.asarray(table, dtype=np.int64)
+    if table.ndim == 2:
+        if phases is None:
+            raise ValueError("a (K, L) table stack needs phases= per arrival")
+        phases = np.asarray(phases, dtype=np.int64)
+        if len(phases) != len(trace):
+            raise ValueError("phases must align with the trace")
+        # the switch log the per-arrival phase stream implies: an arrival's
+        # phase is the phase at its own time, so logging changes *at*
+        # arrival times reproduces the stream exactly on both backends
+        log = [(trace[0], int(phases[0]))] if trace else []
+        for t_a, p_a, p_prev in zip(trace[1:], phases[1:], phases[:-1]):
+            if p_a != p_prev:
+                log.append((float(t_a), int(p_a)))
+
+        def mk_sched():
+            return OraclePhaseScheduler(
+                {z: table[z] for z in range(table.shape[0])}, log
+            )
+    else:
+        if phases is not None:
+            raise ValueError("phases= needs a (K, L) phase-indexed table")
+
+        def mk_sched():
+            return SMDPScheduler.from_table(table)
 
     def engine(svc):
         return ServingEngine(
-            SMDPScheduler.from_table(table),
+            mk_sched(),
             arrivals=TraceProcess(trace),
             b_max=b_max, service=svc, energy_table=energy_table,
             slo=slo, seed=seed,

@@ -1,115 +1,39 @@
-"""Bursty traffic: MMPP(2) phase handling on top of the unified engine.
+"""Deprecated module: MMPP pieces moved to their natural homes.
 
-The paper (Sec. VIII) proposes handling Markov-modulated Poisson traffic as
-"temporal compositions of Poisson process periods ... by detecting phases
-and applying the proposed method to each period."  The arrival process
-itself lives in serving.arrivals (MMPP2 / MMPP2Process) and runs through
-the one event-driven kernel in serving.engine; this module keeps the
-phase-aware scheduling side:
-
-  * PhaseAwareScheduler — a thin shim over SMDPSchedulerBank /
-    AdaptiveController: one SMDP table per phase rate, selected online by a
-    rate estimator (detect the phase, apply the per-phase policy);
-  * OraclePhaseScheduler — the upper bound: reads the true phase trace
-    instead of estimating it;
-  * solve_phase_policies — solves the SMDP once per phase rate offline;
-  * run_mmpp — back-compat wrapper: an MMPP2 run of the unified engine.
+MMPP2 has ONE home now — the arrival process (MMPP2 / MMPP2Process) lives
+in serving.arrivals, and the phase-aware scheduling side
+(PhaseAwareScheduler, OraclePhaseScheduler, BeliefPhaseScheduler,
+solve_phase_policies) lives in serving.scheduler.  The exact MMPP-aware
+solve (vs the per-phase heuristic this module pioneered) is
+core.solve_modulated.  This shim re-exports the old names and will be
+removed once no caller imports repro.serving.mmpp.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Sequence, Tuple
+import warnings
 
-import numpy as np
+from .arrivals import MMPP2, MMPP2Process  # noqa: F401
+from .scheduler import (  # noqa: F401
+    OraclePhaseScheduler,
+    PhaseAwareScheduler,
+    Scheduler,
+    solve_phase_policies,
+)
 
-from repro.core.smdp import SMDPSpec
-from repro.core.solve import solve
-
-from .arrivals import MMPP2, MMPP2Process  # noqa: F401  (re-export)
-from .metrics import RateEstimator
-from .scheduler import AdaptiveController, Scheduler, SMDPSchedulerBank
-
-
-def solve_phase_policies(base: SMDPSpec, rates: Dict[int, float]):
-    """Offline: one SMDP solution per phase rate (paper Sec. VIII)."""
-    tables = {}
-    for phase, lam in rates.items():
-        spec = dataclasses.replace(base, lam=lam)
-        tables[phase] = solve(spec).action_table(spec.s_max)
-    return tables
-
-
-class PhaseAwareScheduler(AdaptiveController):
-    """Per-phase SMDP tables selected by an EWMA rate estimator.
-
-    A thin shim: the phase tables become a lambda-keyed SMDPSchedulerBank
-    and AdaptiveController does the estimation + table swapping (margin 0 =
-    always track the nearest phase rate, the original behaviour).
-    """
-
-    name = "smdp_phase"
-
-    def __init__(self, tables: Dict[int, np.ndarray], rates: Dict[int, float],
-                 ewma: float = 0.2):
-        bank = SMDPSchedulerBank(
-            {(float(rates[k]),): np.asarray(tables[k], dtype=np.int64)
-             for k in rates},
-            key_names=("lam",),
-        )
-        self._phase_of = {(float(lam),): phase for phase, lam in rates.items()}
-        init = float(np.mean(list(rates.values())))
-        super().__init__(
-            bank,
-            estimator=RateEstimator(ewma=ewma, init=init),
-            margin=0.0,
-            min_dwell=0.0,
-            init_rate=init,
-        )
-
-    def current_phase(self) -> int:
-        return self._phase_of[self.key]
-
-
-class OraclePhaseScheduler(Scheduler):
-    """Phase-aware with the true phase trace (estimation-free upper bound)."""
-
-    name = "smdp_oracle"
-
-    def __init__(
-        self,
-        tables: Dict[int, np.ndarray],
-        switch_log: Sequence[Tuple[float, int]],
-    ):
-        self.tables = {
-            k: np.asarray(v, dtype=np.int64) for k, v in tables.items()
-        }
-        log = sorted(switch_log)
-        self._switch_times = np.asarray([t for t, _ in log])
-        self._phases = [p for _, p in log]
-        self.phase = self._phases[0] if self._phases else 0
-
-    def observe_arrival(self, t: float) -> None:
-        if not self._phases:
-            return
-        i = int(np.searchsorted(self._switch_times, t, side="right")) - 1
-        self.phase = self._phases[max(i, 0)]
-
-    def decide(self, queue_len: int) -> int:
-        table = self.tables[self.phase]
-        return int(table[min(queue_len, len(table) - 1)])
-
-    def snapshot(self) -> dict:
-        return {"phase": self.phase}
-
-    def restore(self, state: dict) -> None:
-        self.phase = state["phase"]
+warnings.warn(
+    "repro.serving.mmpp is deprecated: import MMPP2/MMPP2Process from "
+    "repro.serving.arrivals and the phase schedulers from "
+    "repro.serving.scheduler (exact modulated solves: core.solve_modulated)",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 
 def run_mmpp(
     scheduler: Scheduler,
     mmpp: MMPP2,
     service,
-    energy_table: np.ndarray,
+    energy_table,
     b_max: int,
     horizon: float,
     seed: int = 0,

@@ -17,6 +17,25 @@ Two exports feed the compiled simulator (serving.compiled): ``stacked()``
 turns a bank into one (P, L) array for the vmapped policy axis, and
 ``as_action_table()`` lowers any stateless scheduler (SMDP / static /
 greedy / Q-policy) to the dense table the scan kernel indexes.
+
+Phase axis (exact MMPP-aware serving)
+-------------------------------------
+
+Tables may carry a leading phase axis: a (K, L) stack — one row per
+modulating phase — from core.solve_modulated / sweep_bank(phases=...), or
+assembled per-phase (OraclePhaseScheduler).  SMDPScheduler holds a
+``phase`` pointer into the stack; ``as_action_table()`` returns the stack
+itself and the compiled lane (serving.compiled phases=) indexes the row by
+the per-arrival phase.  Who sets the phase:
+
+  * OraclePhaseScheduler — the true switch trace (estimation-free bound),
+    with a vectorized ``phase_at`` for the compiled lane;
+  * BeliefPhaseScheduler — the non-oracle counterpart: an MMPP forward
+    filter (arrivals.PhaseBeliefFilter) tracks the phase posterior from
+    inter-arrival gaps and the argmax phase selects the row (Python
+    backend only — the belief is data-dependent state);
+  * AdaptiveController(phase_filter=...) — belief-tracked phase row on top
+    of online lambda-estimate bank retuning.
 """
 from __future__ import annotations
 
@@ -42,21 +61,38 @@ class Scheduler:
 
 
 class SMDPScheduler(Scheduler):
-    """Table-driven scheduler from a solved SMDP (paper eq. 30)."""
+    """Table-driven scheduler from a solved SMDP (paper eq. 30).
+
+    The table may be 1-D (queue-indexed) or a (K, L) phase-indexed stack
+    (core.ModulatedSolveResult.action_table); with a stack, ``phase``
+    selects the active row — set it directly for a pinned regime, or let
+    an oracle/belief wrapper drive it per arrival.
+    """
 
     name = "smdp"
 
     def __init__(self, solution: SolveResult):
-        self.table = solution.action_table()
-        self.s_max = len(self.table) - 1
+        self._set_table(solution.action_table())
         self._bank: Optional["SMDPSchedulerBank"] = None
+        self.phase = 0
+
+    def _set_table(self, table: np.ndarray) -> None:
+        table = np.asarray(table, dtype=np.int64)
+        if table.ndim not in (1, 2):
+            raise ValueError(f"action table must be 1-D or (K, L); got {table.shape}")
+        self.table = table
+        self.s_max = table.shape[-1] - 1
+
+    @property
+    def n_phases(self) -> int:
+        return 1 if self.table.ndim == 1 else self.table.shape[0]
 
     @classmethod
     def from_table(cls, table: np.ndarray) -> "SMDPScheduler":
         obj = cls.__new__(cls)
-        obj.table = np.asarray(table, dtype=np.int64)
-        obj.s_max = len(obj.table) - 1
+        obj._set_table(table)
         obj._bank = None
+        obj.phase = 0
         return obj
 
     @classmethod
@@ -92,12 +128,35 @@ class SMDPScheduler(Scheduler):
 
     def decide(self, queue_len: int) -> int:
         table = self.table  # single read: safe against concurrent swap_table
-        return int(table[min(queue_len, len(table) - 1)])
+        if table.ndim == 1:
+            row = table
+        else:
+            if not 0 <= self.phase < table.shape[0]:
+                # same contract as the compiled lane's phases validation:
+                # fail loudly instead of silently serving a clamped row
+                raise ValueError(
+                    f"phase {self.phase} outside table stack "
+                    f"[0, {table.shape[0]})"
+                )
+            row = table[self.phase]
+        return int(row[min(queue_len, len(row) - 1)])
+
+    def phase_at(self, times) -> np.ndarray:
+        """Per-arrival phases for the compiled lane: the pinned phase.
+
+        Nothing updates ``phase`` during a plain SMDPScheduler run, so the
+        compiled equivalent is a constant phase stream; oracle/belief
+        wrappers override this with their own trace.
+        """
+        return np.full(len(times), int(self.phase), dtype=np.int64)
 
     def swap_table(self, table: np.ndarray) -> None:
-        """Hot-swap the action table (atomic from decide()'s point of view)."""
-        self.table = np.asarray(table, dtype=np.int64)
-        self.s_max = len(self.table) - 1
+        """Hot-swap the action table (atomic from decide()'s point of view).
+
+        The phase pointer survives the swap: retuning the bank entry must
+        not reset which regime row the phase tracker selected.
+        """
+        self._set_table(table)
 
     def retune(self, **coords: float) -> Tuple[float, ...]:
         """Re-point at the bank entry nearest the observed operating point.
@@ -110,6 +169,12 @@ class SMDPScheduler(Scheduler):
         key = self._bank.nearest(**coords)
         self.swap_table(self._bank.tables[key])
         return key
+
+    def snapshot(self) -> dict:
+        return {"phase": self.phase}
+
+    def restore(self, state: dict) -> None:
+        self.phase = int(state.get("phase", 0))
 
 
 class SMDPSchedulerBank:
@@ -133,9 +198,21 @@ class SMDPSchedulerBank:
             tuple(float(v) for v in k): np.asarray(t, dtype=np.int64)
             for k, t in tables.items()
         }
-        for key in self.tables:
+        for key, t in self.tables.items():
             if len(key) != len(self.key_names):
                 raise ValueError(f"key {key} does not match {self.key_names}")
+            if t.ndim not in (1, 2):
+                raise ValueError(f"table for {key} must be 1-D or (K, L)")
+        ndims = {t.ndim for t in self.tables.values()}
+        phase_counts = {
+            t.shape[0] for t in self.tables.values() if t.ndim == 2
+        }
+        if len(ndims) > 1 or len(phase_counts) > 1:
+            raise ValueError(
+                "bank tables must agree on the phase axis (all 1-D, or all "
+                f"(K, L) with one K); got ndims {ndims}, K {phase_counts}"
+            )
+        self.n_phases = phase_counts.pop() if phase_counts else 1
         # the key set is immutable after construction: cache the sorted key
         # list and point matrix once, so nearest()/distance() stay cheap on
         # the per-arrival serving hot path
@@ -195,13 +272,15 @@ class SMDPSchedulerBank:
         return sch
 
     def stacked(self, keys=None):
-        """(keys, (P, L) array): the bank as a dense policy axis.
+        """(keys, stacked array): the bank as a dense policy axis.
 
         Tables shorter than the longest are padded by repeating their last
         entry — exactly the eq.-(30) extension decide() applies, so the
         padded row is decision-for-decision the same scheduler.  Row order
         follows ``keys`` (default: sorted keys()).  This is what the
-        compiled simulator vmaps over for whole-bank comparisons.
+        compiled simulator vmaps over for whole-bank comparisons: a
+        (P, L) array for queue-indexed banks, (P, K, L) for phase-indexed
+        ones (each entry a (K, L) stack — run_grid consumes either).
         """
         ks = [
             tuple(float(v) for v in k)
@@ -212,16 +291,8 @@ class SMDPSchedulerBank:
         missing = [k for k in ks if k not in self.tables]
         if missing:
             raise KeyError(f"keys not in bank: {missing}")
-        L = max(len(self.tables[k]) for k in ks)
-        out = np.stack(
-            [
-                np.concatenate(
-                    [t, np.full(L - len(t), t[-1], dtype=np.int64)]
-                )
-                for t in (self.tables[k] for k in ks)
-            ]
-        )
-        return ks, out
+        L = max(self.tables[k].shape[-1] for k in ks)
+        return ks, np.stack([_extend_last(self.tables[k], L) for k in ks])
 
 
 class AdaptiveController(Scheduler):
@@ -249,6 +320,7 @@ class AdaptiveController(Scheduler):
         margin: float = 0.25,
         min_dwell: float = 0.0,
         init_rate: Optional[float] = None,
+        phase_filter=None,  # arrivals.PhaseBeliefFilter for phase-axis banks
         **fixed: float,  # pinned non-rate coords, e.g. w2=1.0
     ):
         from .metrics import RateEstimator
@@ -265,17 +337,26 @@ class AdaptiveController(Scheduler):
         )
         self.margin = margin
         self.min_dwell = min_dwell
+        self.phase_filter = phase_filter
         rate0 = self.estimator.rate
         if not np.isfinite(rate0):  # custom estimator with no data yet
             rate0 = init_rate
         self.key = bank.nearest(lam=rate0, **self.fixed)
         self.scheduler = SMDPScheduler.from_table(bank.tables[self.key])
         self.scheduler._bank = bank
+        if phase_filter is not None:
+            self.scheduler.phase = phase_filter.phase
         self._last_switch = -float("inf")
         self.n_switches = 0
 
     def observe_arrival(self, t: float) -> None:
         self.estimator.observe(t)
+        if self.phase_filter is not None:
+            # belief row selection and lambda retuning move independently:
+            # the filter reacts within a few gaps, the estimator/hysteresis
+            # pair guards the (slower) bank-entry swap
+            self.phase_filter.observe(t)
+            self.scheduler.phase = self.phase_filter.phase
         self._maybe_retune(t)
 
     def _maybe_retune(self, t: float) -> None:
@@ -301,19 +382,186 @@ class AdaptiveController(Scheduler):
         return self.scheduler.decide(queue_len)
 
     def snapshot(self) -> dict:
-        return {
+        snap = {
             "estimator": self.estimator.snapshot(),
             "key": self.key,
             "last_switch": self._last_switch,
             "n_switches": self.n_switches,
+            "phase": self.scheduler.phase,
         }
+        if self.phase_filter is not None:
+            snap["phase_filter"] = self.phase_filter.snapshot()
+        return snap
 
     def restore(self, state: dict) -> None:
         self.estimator.restore(state["estimator"])
         self.key = tuple(float(v) for v in state["key"])
         self.scheduler.swap_table(self.bank.tables[self.key])
+        self.scheduler.phase = int(state.get("phase", 0))
+        if self.phase_filter is not None and "phase_filter" in state:
+            self.phase_filter.restore(state["phase_filter"])
         self._last_switch = state["last_switch"]
         self.n_switches = state["n_switches"]
+
+
+def _extend_last(t: np.ndarray, length: int) -> np.ndarray:
+    """Extend a table along its last axis by repeating the final entry.
+
+    The eq.-(30) infinite-state extension — the ONE padding rule every
+    table stacking/padding path shares, so padded rows stay
+    decision-for-decision identical to their originals.
+    """
+    width = length - t.shape[-1]
+    if width <= 0:
+        return t
+    return np.concatenate([t, np.repeat(t[..., -1:], width, axis=-1)], axis=-1)
+
+
+def _phase_stack(tables: Dict[int, np.ndarray]) -> np.ndarray:
+    """(K, L) stack from a {phase: table} dict (contiguous 0..K-1 keys)."""
+    keys = sorted(tables)
+    if keys != list(range(len(keys))):
+        raise ValueError(f"phase keys must be 0..K-1, got {keys}")
+    tabs = [np.asarray(tables[k], dtype=np.int64) for k in keys]
+    L = max(len(t) for t in tabs)
+    return np.stack([_extend_last(t, L) for t in tabs])
+
+
+def solve_phase_policies(base, rates: Dict[int, float]):
+    """Offline: one SMDP solution per phase rate (paper Sec. VIII).
+
+    The *heuristic* per-phase decomposition — each phase solved as an
+    independent Poisson queue at its own rate.  The exact alternative is
+    core.solve_modulated, which optimizes the (phase, queue) product chain
+    jointly; benchmarks/mmpp_bursty.py tracks the gap between the two.
+    """
+    from repro.core.solve import solve
+
+    tables = {}
+    for phase, lam in rates.items():
+        spec = dataclasses.replace(base, lam=lam)
+        tables[phase] = solve(spec).action_table(spec.s_max)
+    return tables
+
+
+class PhaseAwareScheduler(AdaptiveController):
+    """Per-phase SMDP tables selected by an EWMA rate estimator.
+
+    A thin shim: the phase tables become a lambda-keyed SMDPSchedulerBank
+    and AdaptiveController does the estimation + table swapping (margin 0 =
+    always track the nearest phase rate, the original behaviour).
+    """
+
+    name = "smdp_phase"
+
+    def __init__(self, tables: Dict[int, np.ndarray], rates: Dict[int, float],
+                 ewma: float = 0.2):
+        from .metrics import RateEstimator
+
+        bank = SMDPSchedulerBank(
+            {(float(rates[k]),): np.asarray(tables[k], dtype=np.int64)
+             for k in rates},
+            key_names=("lam",),
+        )
+        self._phase_of = {(float(lam),): phase for phase, lam in rates.items()}
+        init = float(np.mean(list(rates.values())))
+        super().__init__(
+            bank,
+            estimator=RateEstimator(ewma=ewma, init=init),
+            margin=0.0,
+            min_dwell=0.0,
+            init_rate=init,
+        )
+
+    def current_phase(self) -> int:
+        return self._phase_of[self.key]
+
+
+class OraclePhaseScheduler(Scheduler):
+    """Phase-aware with the true phase trace (estimation-free upper bound).
+
+    Runs on both backends: the Python engine updates ``phase`` per admitted
+    arrival (observe_arrival), and the compiled lane consumes the same
+    information as a per-arrival phase array via ``phase_at`` +
+    ``as_action_table`` (the (K, L) stack).
+    """
+
+    name = "smdp_oracle"
+
+    def __init__(
+        self,
+        tables: Dict[int, np.ndarray],
+        switch_log: Sequence[Tuple[float, int]],
+    ):
+        self.tables = {
+            k: np.asarray(v, dtype=np.int64) for k, v in tables.items()
+        }
+        log = sorted(switch_log)
+        self._switch_times = np.asarray([t for t, _ in log])
+        self._phases = [p for _, p in log]
+        self.phase = self._phases[0] if self._phases else 0
+
+    def observe_arrival(self, t: float) -> None:
+        if not self._phases:
+            return
+        i = int(np.searchsorted(self._switch_times, t, side="right")) - 1
+        self.phase = self._phases[max(i, 0)]
+
+    def phase_at(self, times) -> np.ndarray:
+        """Vectorized phase lookup (the compiled lane's arrival phases)."""
+        if not self._phases:
+            return np.zeros(len(times), dtype=np.int64)
+        i = np.searchsorted(self._switch_times, times, side="right") - 1
+        return np.asarray(self._phases, dtype=np.int64)[np.maximum(i, 0)]
+
+    def decide(self, queue_len: int) -> int:
+        table = self.tables[self.phase]
+        return int(table[min(queue_len, len(table) - 1)])
+
+    def snapshot(self) -> dict:
+        return {"phase": self.phase}
+
+    def restore(self, state: dict) -> None:
+        self.phase = state["phase"]
+
+
+class BeliefPhaseScheduler(Scheduler):
+    """Phase-indexed tables selected by the filtered phase posterior.
+
+    The non-oracle counterpart of OraclePhaseScheduler: an MMPP forward
+    filter (arrivals.PhaseBeliefFilter) turns observed inter-arrival gaps
+    into a posterior over the hidden phase; each decision uses the
+    argmax-phase row of the (K, L) stack.  Python backend only — the
+    belief is data-dependent online state, exactly like the adaptive
+    controller.
+    """
+
+    name = "smdp_belief"
+
+    def __init__(self, tables, phase_filter):
+        if isinstance(tables, dict):
+            tables = _phase_stack(tables)
+        self.tables = np.asarray(tables, dtype=np.int64)
+        if self.tables.ndim != 2:
+            raise ValueError("BeliefPhaseScheduler needs a (K, L) stack")
+        self.filter = phase_filter
+
+    @property
+    def phase(self) -> int:
+        return min(self.filter.phase, self.tables.shape[0] - 1)
+
+    def observe_arrival(self, t: float) -> None:
+        self.filter.observe(t)
+
+    def decide(self, queue_len: int) -> int:
+        row = self.tables[self.phase]
+        return int(row[min(queue_len, len(row) - 1)])
+
+    def snapshot(self) -> dict:
+        return {"filter": self.filter.snapshot()}
+
+    def restore(self, state: dict) -> None:
+        self.filter.restore(state["filter"])
 
 
 class StaticScheduler(Scheduler):
@@ -357,10 +605,15 @@ def as_action_table(scheduler: Scheduler, b_max: int) -> np.ndarray:
 
     The compiled simulator indexes ``table[min(s, len - 1)]`` — identical
     to each scheduler's decide() for every queue length, because all four
-    families are constant beyond their largest interesting state.  Stateful
-    schedulers (AdaptiveController, phase-aware) have no static table and
+    families are constant beyond their largest interesting state.
+    Phase-indexed schedulers lower to their (K, L) stack (the compiled
+    phase lane selects the row via the per-arrival phase array the
+    scheduler's ``phase_at`` provides).  Online-*estimating* schedulers
+    (AdaptiveController, belief/rate tracking) have no static table and
     raise: they stay on the Python backend.
     """
+    if isinstance(scheduler, OraclePhaseScheduler):
+        return _phase_stack(scheduler.tables)
     if isinstance(scheduler, SMDPScheduler):
         return np.asarray(scheduler.table, dtype=np.int64)
     if isinstance(scheduler, StaticScheduler):

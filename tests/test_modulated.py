@@ -1,0 +1,608 @@
+"""Phase-modulated SMDP: exact MMPP-aware solve + phase-indexed serving.
+
+The refactor's safety rail: the K = 1 modulated pipeline must reproduce
+the scalar float64 solve() oracle bit-for-bit at the policy level.  On top:
+K = 2 exactness (the exact product-chain policy beats the per-phase
+heuristic *on the chain it optimizes*), the compiled phase-indexed lane
+(decision-for-decision vs the Python oracle-phase path per arrival mode),
+the belief-tracking non-oracle counterpart, phase-axis banks driven by the
+AdaptiveController, and the DiurnalProcess arrival mode.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GOOGLENET_P4_ENERGY,
+    GOOGLENET_P4_LATENCY,
+    PhaseConfig,
+    ServiceModel,
+    SMDPSpec,
+    build_smdp_batched,
+    build_smdp_modulated,
+    evaluate_policy_modulated,
+    modulated_spec,
+    solve,
+    solve_modulated,
+    sweep_solve_modulated,
+)
+from repro.core.rvi import relative_value_iteration_modulated
+from repro.serving import (
+    AdaptiveController,
+    BeliefPhaseScheduler,
+    DiurnalProcess,
+    OraclePhaseScheduler,
+    PhaseBeliefFilter,
+    ServingEngine,
+    SMDPScheduler,
+    SMDPSchedulerBank,
+    TraceProcess,
+    as_action_table,
+    run_grid,
+    verify_backends,
+)
+from repro.serving.arrivals import MMPP2, diurnal_times_jax, mmpp2_times_jax
+from repro.serving.compiled import pad_arrivals, pad_arrivals_batch
+
+SVC = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+BMAX = 16
+EN = np.array(
+    [0.0] + [float(GOOGLENET_P4_ENERGY(b)) for b in range(1, BMAX + 1)]
+)
+
+
+def spec_at(lam, w2=1.0, s_max=64, family="det"):
+    return SMDPSpec(
+        lam=lam,
+        service=ServiceModel(latency=GOOGLENET_P4_LATENCY, family=family),
+        energy=GOOGLENET_P4_ENERGY,
+        b_min=1, b_max=BMAX, w1=1.0, w2=w2, s_max=s_max,
+    )
+
+
+def rho_lam(rho):
+    return rho * BMAX / float(SVC.mean(BMAX))
+
+
+def mmpp_at(r1=0.15, r2=0.75, d1=600.0, d2=300.0):
+    return PhaseConfig.mmpp2(rho_lam(r1), rho_lam(r2), d1, d2)
+
+
+class TestModulatedBuild:
+    def test_k1_banded_data_matches_scalar(self):
+        """K = 1 degenerates bitwise: D_{n,k} = delta_nk makes the
+        phase-coupled pmfs exactly the Poisson arrival pmfs."""
+        spec = spec_at(rho_lam(0.6), s_max=32)
+        mb = build_smdp_modulated(spec, PhaseConfig.poisson(spec.lam))
+        sb = build_smdp_batched([spec])
+        np.testing.assert_array_equal(
+            mb.pmfs_banded[0, :, 0, 0, :], sb.pmfs_banded[0]
+        )
+        np.testing.assert_array_equal(mb.tails[0, :, 0, 0, :], sb.tails[0])
+        np.testing.assert_array_equal(mb.y[0, 0], sb.y[0])
+        assert mb.eta[0] == sb.eta[0]
+        np.testing.assert_array_equal(mb.scale[0, 0], sb.scale[0])
+        assert mb.wait_m[0, 0, 0] == 1.0
+        mask = np.isfinite(sb.c_tilde[0])
+        np.testing.assert_allclose(
+            mb.c_tilde[0, 0][mask], sb.c_tilde[0][mask], rtol=1e-11
+        )
+
+    @pytest.mark.parametrize("family", ["expo", "erlang", "hyperexpo"])
+    def test_k1_pmfs_exact_per_family(self, family):
+        spec = spec_at(rho_lam(0.5), s_max=32, family=family)
+        mb = build_smdp_modulated(spec, PhaseConfig.poisson(spec.lam))
+        sb = build_smdp_batched([spec])
+        np.testing.assert_array_equal(
+            mb.pmfs_banded[0, :, 0, 0, :], sb.pmfs_banded[0]
+        )
+
+    def test_k2_transition_rows_stochastic(self):
+        ph = mmpp_at()
+        spec = modulated_spec(spec_at(1.0, s_max=32), ph)
+        mb = build_smdp_modulated(spec, ph)
+        # wait-phase matrix is a proper phase law
+        np.testing.assert_allclose(mb.wait_m[0].sum(axis=1), 1.0, atol=1e-12)
+        # serve mass: band + tails == 1 per (action, start phase)
+        a = 5
+        tot = mb.pmfs_banded[0, a].sum(axis=(1, 2)) + mb.tails[
+            0, a, :, :, 0
+        ].sum(axis=1)
+        np.testing.assert_allclose(tot, 1.0, atol=1e-10)
+        # embedded chain rows under a feasible policy
+        from repro.core.policies import greedy_policy
+
+        pol = np.tile(greedy_policy(spec.s_max, 1, BMAX)[None], (2, 1))[None]
+        p = mb.policy_transitions_batched(pol)
+        np.testing.assert_allclose(p.sum(axis=-1), 1.0, atol=1e-12)
+
+    def test_lam_mean_rate_mismatch_raises(self):
+        ph = mmpp_at()
+        with pytest.raises(ValueError, match="mean rate"):
+            build_smdp_modulated(spec_at(1.0, s_max=32), ph)
+
+    def test_with_c_o_is_row_patch(self):
+        ph = mmpp_at()
+        spec = modulated_spec(spec_at(1.0, s_max=32), ph)
+        mb = build_smdp_modulated(spec, ph)
+        patched = mb.with_c_o([250.0])
+        rebuilt = build_smdp_modulated(
+            dataclasses.replace(spec, c_o=250.0), ph
+        )
+        np.testing.assert_allclose(
+            patched.c_tilde[0], rebuilt.c_tilde[0], rtol=1e-12
+        )
+        np.testing.assert_array_equal(patched.pmfs_banded, rebuilt.pmfs_banded)
+
+
+class TestModulatedSolve:
+    @pytest.mark.parametrize("rho", [0.3, 0.7])
+    def test_k1_policy_bit_identical_to_solve_oracle(self, rho):
+        """ISSUE acceptance: the degenerate K = 1 modulated solve (full
+        pipeline: c_o calibration + adaptive truncation + RVI) reproduces
+        the scalar f64 solve() oracle policy bit-for-bit."""
+        spec = spec_at(rho_lam(rho))
+        r_scalar = solve(spec)
+        r_mod = solve_modulated(spec, PhaseConfig.poisson(spec.lam))
+        assert r_mod.spec.s_max == r_scalar.spec.s_max
+        np.testing.assert_array_equal(r_mod.policy[0], r_scalar.policy)
+        np.testing.assert_allclose(r_mod.eval.g, r_scalar.eval.g, rtol=1e-9)
+        np.testing.assert_allclose(
+            r_mod.eval.w_bar, r_scalar.eval.w_bar, rtol=1e-9
+        )
+
+    def test_k1_accel_none_matches_oracle_too(self):
+        spec = spec_at(rho_lam(0.7))
+        r_scalar = solve(spec)
+        r_mod = solve_modulated(
+            spec, PhaseConfig.poisson(spec.lam), accel="none"
+        )
+        np.testing.assert_array_equal(r_mod.policy[0], r_scalar.policy)
+
+    def test_k2_mpi_matches_plain(self):
+        ph = mmpp_at()
+        spec = modulated_spec(spec_at(1.0, w2=0.5), ph)
+        mb = build_smdp_modulated(spec, ph)
+        r_plain = relative_value_iteration_modulated(mb, accel="none")
+        r_mpi = relative_value_iteration_modulated(mb, accel="mpi")
+        np.testing.assert_array_equal(r_plain.policies, r_mpi.policies)
+        np.testing.assert_allclose(r_plain.g, r_mpi.g, rtol=1e-8)
+        # the polish must pay: strictly fewer backups in the slow-mixing case
+        assert r_mpi.iterations[0] < r_plain.iterations[0]
+
+    def test_k2_exact_beats_phase_heuristic_on_chain(self):
+        """ISSUE acceptance (chain half): the exact product-chain policy's
+        average cost is <= the per-phase heuristic's on the same chain."""
+        ph = mmpp_at()
+        spec = modulated_spec(spec_at(1.0, w2=0.5), ph)
+        exact = solve_modulated(spec, ph)
+        s_max = exact.spec.s_max
+        heur_rows = []
+        for lam in ph.rates:
+            t = solve(
+                dataclasses.replace(exact.spec, lam=float(lam))
+            ).action_table(s_max)
+            heur_rows.append(np.append(t, t[-1]))
+        heur_pol = np.stack(heur_rows)
+        mb = build_smdp_modulated(exact.spec, ph)
+        g_heur = evaluate_policy_modulated(mb, 0, heur_pol).g
+        assert exact.eval.g <= g_heur * (1.0 + 1e-9)
+        # and the phase rows genuinely differ (the burst phase batches more)
+        assert not np.array_equal(exact.policy[0], exact.policy[1])
+
+    def test_sweep_matches_serial_and_orders_back(self):
+        ph = mmpp_at()
+        base = spec_at(1.0, w2=0.5, s_max=48)
+        pairs = [(modulated_spec(base, p), p)
+                 for p in (ph.scaled(f) for f in (1.2, 0.6, 1.0))]
+        res = sweep_solve_modulated([s for s, _ in pairs], [p for _, p in pairs])
+        for (sp, p), r in zip(pairs, res):
+            assert r.spec.lam == sp.lam
+            serial = solve_modulated(sp, p)
+            np.testing.assert_array_equal(
+                r.action_table(), serial.action_table()
+            )
+
+
+class TestPhaseAxisBankAndSchedulers:
+    def _stack_bank(self):
+        lo = np.array([[0, 1, 2, 2, 2], [0, 2, 3, 4, 4]])
+        hi = np.array([[0, 1, 4, 6, 8], [0, 4, 6, 8, 8]])
+        return SMDPSchedulerBank(
+            {(1.0,): lo, (10.0,): hi}, key_names=("lam",)
+        )
+
+    def test_bank_accepts_phase_stacks(self):
+        bank = self._stack_bank()
+        assert bank.n_phases == 2
+        ks, stacked = bank.stacked()
+        assert stacked.shape == (2, 2, 5)
+        sch = bank.scheduler(lam=1.0)
+        assert sch.n_phases == 2
+        assert sch.decide(3) == 2  # phase 0 row
+        sch.phase = 1
+        assert sch.decide(3) == 4  # phase 1 row
+
+    def test_out_of_range_phase_fails_loudly(self):
+        """Both backends reject a phase outside the stack — no silent
+        clamping divergence between decide() and the compiled lane."""
+        sch = SMDPScheduler.from_table(np.array([[0, 1], [0, 2]]))
+        sch.phase = 5
+        with pytest.raises(ValueError, match="outside table stack"):
+            sch.decide(1)
+        sch.phase = -1
+        with pytest.raises(ValueError, match="outside table stack"):
+            sch.decide(1)
+
+    def test_bank_rejects_mixed_phase_axes(self):
+        with pytest.raises(ValueError, match="phase axis"):
+            SMDPSchedulerBank(
+                {(1.0,): np.array([0, 1, 2]),
+                 (2.0,): np.array([[0, 1], [0, 2]])},
+                key_names=("lam",),
+            )
+
+    def test_as_action_table_phase_stack(self):
+        sched = SMDPScheduler.from_table(
+            np.array([[0, 1, 2], [0, 2, 3]])
+        )
+        tab = as_action_table(sched, BMAX)
+        assert tab.shape == (2, 3)
+        np.testing.assert_array_equal(
+            sched.phase_at(np.arange(4.0)), np.zeros(4)
+        )
+        oracle = OraclePhaseScheduler(
+            {0: np.array([0, 1]), 1: np.array([0, 2, 3])}, [(0.0, 0), (5.0, 1)]
+        )
+        tab = as_action_table(oracle, BMAX)
+        assert tab.shape == (2, 3)
+        np.testing.assert_array_equal(tab[0], [0, 1, 1])  # padded by last
+        np.testing.assert_array_equal(
+            oracle.phase_at(np.array([1.0, 6.0])), [0, 1]
+        )
+
+    def test_adaptive_controller_drives_phase_axis_bank(self):
+        """ISSUE satellite: retune + hysteresis when BOTH the lambda
+        estimate and the phase belief move."""
+        bank = self._stack_bank()
+        filt = PhaseBeliefFilter(
+            rates=[1.0, 10.0], gen=[[-0.01, 0.01], [0.01, -0.01]]
+        )
+        ctrl = AdaptiveController(
+            bank, ewma=0.3, margin=0.0, phase_filter=filt, init_rate=1.0
+        )
+        t = 0.0
+        for _ in range(60):  # slow arrivals: rate ~1, belief -> phase 0
+            t += 1.0
+            ctrl.observe_arrival(t)
+        assert ctrl.key == (1.0,)
+        assert ctrl.scheduler.phase == 0
+        assert ctrl.decide(3) == 2  # lo stack, phase-0 row
+        for _ in range(120):  # fast arrivals: rate ~10, belief -> phase 1
+            t += 0.1
+            ctrl.observe_arrival(t)
+        assert ctrl.key == (10.0,)
+        assert ctrl.scheduler.phase == 1
+        assert ctrl.decide(3) == 8  # hi stack, phase-1 row
+        assert ctrl.n_switches >= 1
+
+    def test_adaptive_phase_hysteresis_blocks_midpoint(self):
+        """A wide margin must block the bank swap even while the belief
+        keeps tracking the phase — the two adaptation axes are independent."""
+        bank = self._stack_bank()
+        filt = PhaseBeliefFilter(
+            rates=[1.0, 10.0], gen=[[-0.01, 0.01], [0.01, -0.01]]
+        )
+        ctrl = AdaptiveController(
+            bank, ewma=1.0, margin=0.5, phase_filter=filt, init_rate=1.0
+        )
+        t = 0.0
+        for _ in range(40):  # rate 6: just past the key midpoint
+            t += 1.0 / 6.0
+            ctrl.observe_arrival(t)
+        assert ctrl.key == (1.0,)  # hysteresis holds the table
+        assert ctrl.scheduler.phase == 1  # belief still moved
+
+    def test_adaptive_phase_snapshot_restore(self):
+        bank = self._stack_bank()
+        filt = PhaseBeliefFilter(
+            rates=[1.0, 10.0], gen=[[-0.01, 0.01], [0.01, -0.01]]
+        )
+        ctrl = AdaptiveController(bank, ewma=0.5, phase_filter=filt)
+        t = 0.0
+        for _ in range(30):
+            t += 0.1
+            ctrl.observe_arrival(t)
+        snap = ctrl.snapshot()
+        key, phase, belief = ctrl.key, ctrl.scheduler.phase, filt.belief.copy()
+        for _ in range(30):
+            t += 1.0
+            ctrl.observe_arrival(t)
+        ctrl.restore(snap)
+        assert ctrl.key == key
+        assert ctrl.scheduler.phase == phase
+        np.testing.assert_allclose(filt.belief, belief)
+
+    def test_belief_scheduler_tracks_oracle(self):
+        m = MMPP2(lam1=0.3, lam2=4.0, dwell1=400.0, dwell2=200.0)
+        trace, switches = m.sample_arrivals(3000.0, np.random.default_rng(4))
+        filt = PhaseBeliefFilter(
+            rates=[m.lam1, m.lam2],
+            gen=[[-1 / m.dwell1, 1 / m.dwell1],
+                 [1 / m.dwell2, -1 / m.dwell2]],
+        )
+        tabs = np.array([[0, 1, 1], [0, 2, 2]])
+        belief = BeliefPhaseScheduler(tabs, filt)
+        oracle = OraclePhaseScheduler({0: tabs[0], 1: tabs[1]}, switches)
+        agree = 0
+        for t_a in trace:
+            belief.observe_arrival(t_a)
+            oracle.observe_arrival(t_a)
+            agree += belief.phase == oracle.phase
+        assert agree / len(trace) > 0.9
+
+    def test_belief_scheduler_rejected_by_compiled_lane(self):
+        filt = PhaseBeliefFilter(rates=[1.0, 2.0], gen=[[0.0, 0.0], [0.0, 0.0]])
+        sched = BeliefPhaseScheduler(np.array([[0, 1], [0, 2]]), filt)
+        eng = ServingEngine(
+            sched, lam=1.0, b_max=BMAX, service=SVC, energy_table=EN
+        )
+        with pytest.raises(TypeError, match="static action table"):
+            eng.run(50, backend="compiled")
+
+
+class TestCompiledPhaseLane:
+    """ISSUE acceptance: compiled phase lane decision-for-decision equal to
+    the Python engine's oracle-phase path at equal seeds."""
+
+    def _mmpp_trace(self, n=2000, seed=0):
+        lam = rho_lam(0.7)
+        m = MMPP2(lam1=0.3 * lam, lam2=1.3 * lam, dwell1=60.0, dwell2=30.0)
+        trace, switches = m.sample_arrivals(
+            n / m.mean_rate, np.random.default_rng(seed)
+        )
+        st = np.array([t for t, _ in switches])
+        sp = np.array([p for _, p in switches], dtype=np.int64)
+        phases = sp[np.maximum(np.searchsorted(st, trace, "right") - 1, 0)]
+        return trace, phases, switches
+
+    def _stack(self):
+        from repro.core.policies import q_policy
+
+        return np.stack(
+            [q_policy(4, 128, BMAX), q_policy(12, 128, BMAX)]
+        )
+
+    @pytest.mark.parametrize("mode", ["mmpp2", "poisson", "diurnal"])
+    def test_verify_backends_phase_lane_per_arrival_mode(self, mode):
+        if mode == "mmpp2":
+            trace, phases, _ = self._mmpp_trace()
+        elif mode == "poisson":
+            rng = np.random.default_rng(1)
+            trace = np.cumsum(rng.exponential(1.0 / rho_lam(0.7), 1500))
+            # synthetic block phases over a Poisson trace
+            phases = (trace // 25.0).astype(np.int64) % 2
+        else:
+            proc = DiurnalProcess(
+                base=rho_lam(0.5), amp=0.8 * rho_lam(0.5), period=300.0
+            )
+            from repro.serving.arrivals import take
+
+            evs, _ = take(proc, np.random.default_rng(2), n=1500)
+            trace = np.array([e.time for e in evs])
+            phases = (proc.rate(trace) > proc.base).astype(np.int64)
+        out = verify_backends(
+            self._stack(), trace, service=SVC, energy_table=EN, b_max=BMAX,
+            phases=phases,
+        )
+        assert out["n_decisions"] > 0
+        assert out["max_latency_err"] <= 1e-9
+
+    def test_verify_backends_phase_lane_stochastic_service(self):
+        trace, phases, _ = self._mmpp_trace(1200, seed=3)
+        verify_backends(
+            self._stack(), trace,
+            service=ServiceModel(latency=GOOGLENET_P4_LATENCY, family="expo"),
+            energy_table=EN, b_max=BMAX, phases=phases,
+        )
+
+    def test_verify_backends_phase_lane_budget_and_slo(self):
+        trace, phases, _ = self._mmpp_trace(1200, seed=5)
+        verify_backends(
+            self._stack(), trace, service=SVC, energy_table=EN, b_max=BMAX,
+            phases=phases, n_epochs=400, slo=8.0,
+        )
+
+    def test_engine_oracle_phase_backend_parity(self):
+        trace, _, switches = self._mmpp_trace(1500, seed=7)
+        stack = self._stack()
+
+        def eng():
+            sched = OraclePhaseScheduler(
+                {0: stack[0], 1: stack[1]}, switches
+            )
+            return ServingEngine(
+                sched, arrivals=TraceProcess(trace), b_max=BMAX,
+                service=SVC, energy_table=EN, seed=11,
+            )
+
+        r_py = eng().run(n_epochs=None)
+        r_c = eng().run(n_epochs=None, backend="compiled")
+        np.testing.assert_array_equal(r_py.batch_sizes, r_c.batch_sizes)
+        np.testing.assert_allclose(r_py.latencies, r_c.latencies, atol=1e-9)
+        np.testing.assert_allclose(r_py.energy, r_c.energy)
+
+    def test_escalation_preserves_phase_stream(self):
+        """Epoch-budgeted MMPP2 run: the compiled path may extend the
+        pre-drawn stream (doubling escalation); the sampler phase carry and
+        the recomputed per-arrival phases must stay consistent with the
+        lazy path."""
+        lam = rho_lam(0.7)
+        m = MMPP2(lam1=0.3 * lam, lam2=1.3 * lam, dwell1=60.0, dwell2=30.0)
+        trace, switches = m.sample_arrivals(
+            3000 / m.mean_rate, np.random.default_rng(13)
+        )
+        stack = self._stack()
+
+        def eng():
+            sched = OraclePhaseScheduler(
+                {0: stack[0], 1: stack[1]}, switches
+            )
+            return ServingEngine(
+                sched, arrivals=TraceProcess(trace), b_max=BMAX,
+                service=SVC, energy_table=EN, seed=1,
+            )
+
+        r_py = eng().run(900)
+        r_c = eng().run(900, backend="compiled")
+        np.testing.assert_array_equal(r_py.batch_sizes, r_c.batch_sizes)
+        np.testing.assert_allclose(r_py.latencies, r_c.latencies, atol=1e-9)
+
+    def test_phase_table_without_phases_raises(self):
+        from repro.serving.compiled import simulate_compiled
+
+        with pytest.raises(ValueError, match="phases"):
+            simulate_compiled(
+                self._stack(), np.arange(1.0, 10.0),
+                means=np.array([0.0] + [1.0] * BMAX), b_max=BMAX,
+            )
+        with pytest.raises(ValueError, match="phases"):
+            run_grid(
+                self._stack()[None], np.stack([pad_arrivals(np.arange(5.0))[0]]),
+                means=np.array([0.0] + [1.0] * BMAX), b_max=BMAX,
+            )
+
+    def test_run_grid_phase_stacks_match_python(self):
+        traces, phase_streams = [], []
+        for s in (0, 1):
+            tr, ph, _ = self._mmpp_trace(900, seed=20 + s)
+            traces.append(tr)
+            phase_streams.append(ph)
+        arrs = pad_arrivals_batch(traces)
+        phs = np.stack(
+            [
+                pad_arrivals(t, phases=p, size=arrs.shape[1])[2]
+                for t, p in zip(traces, phase_streams)
+            ]
+        )
+        stack = self._stack()
+        tables = np.stack([stack, stack[::-1]])  # two contenders
+        means = np.array(
+            [0.0] + [float(SVC.mean(b)) for b in range(1, BMAX + 1)]
+        )
+        g = run_grid(
+            tables, arrs, phases=phs, means=means, zeta=EN, b_max=BMAX
+        )
+        for s in (0, 1):
+            st = np.array([0.0])
+            for p in (0, 1):
+                log = [(traces[s][0], int(phase_streams[s][0]))] + [
+                    (float(t), int(a))
+                    for t, a, b in zip(
+                        traces[s][1:], phase_streams[s][1:],
+                        phase_streams[s][:-1],
+                    )
+                    if a != b
+                ]
+                sched = OraclePhaseScheduler(
+                    {0: tables[p][0], 1: tables[p][1]}, log
+                )
+                rep = ServingEngine(
+                    sched, arrivals=TraceProcess(traces[s]), b_max=BMAX,
+                    service=SVC, energy_table=EN,
+                ).run(n_epochs=None)
+                np.testing.assert_allclose(
+                    g["w_mean"][s, p], rep.latencies.mean(), atol=1e-9
+                )
+                assert g["n_served"][s, p] == rep.n_served
+
+    def test_jax_mmpp_sampler_phases_feed_grid(self):
+        """The sampler-carry phases drive the compiled lane end to end."""
+        import jax
+
+        lam = rho_lam(0.6)
+        m = MMPP2(lam1=0.4 * lam, lam2=1.4 * lam, dwell1=80.0, dwell2=40.0)
+        times, mask, phases = mmpp2_times_jax(
+            jax.random.PRNGKey(3), m, 2048, with_phases=True
+        )
+        times, mask, phases = (np.asarray(x) for x in (times, mask, phases))
+        n = int(mask.sum())
+        arr, _, ph = pad_arrivals(times[:n], phases=phases[:n])
+        means = np.array(
+            [0.0] + [float(SVC.mean(b)) for b in range(1, BMAX + 1)]
+        )
+        g = run_grid(
+            self._stack()[None], arr[None], phases=ph[None],
+            means=means, zeta=EN, b_max=BMAX,
+        )
+        assert int(g["n_served"][0, 0]) == n
+
+
+class TestDiurnalProcess:
+    def test_mean_rate_sine_and_ramp(self):
+        from repro.serving.arrivals import take
+
+        p = DiurnalProcess(base=2.0, amp=1.5, period=200.0)
+        evs, _ = take(p, np.random.default_rng(1), horizon=4000.0)
+        assert abs(len(evs) / 4000.0 - 2.0) / 2.0 < 0.1
+        r = DiurnalProcess(ramp=[(0.0, 1.0), (100.0, 3.0)], period=200.0)
+        assert r.rate_max == 3.0
+        assert 1.0 < r.mean_rate < 3.0
+
+    def test_rate_must_stay_positive(self):
+        with pytest.raises(ValueError, match="positive"):
+            DiurnalProcess(base=1.0, amp=1.5, period=10.0)
+
+    def test_snapshot_restore_replays(self):
+        p = DiurnalProcess(base=2.0, amp=1.0, period=100.0)
+        rng = np.random.default_rng(7)
+        for _ in range(10):
+            p.next(rng)
+        snap, state = p.snapshot(), rng.bit_generator.state
+        a = [p.next(rng).time for _ in range(5)]
+        p.restore(snap)
+        rng.bit_generator.state = state
+        b = [p.next(rng).time for _ in range(5)]
+        assert a == b
+
+    def test_engine_backend_parity_diurnal(self):
+        def eng():
+            return ServingEngine(
+                SMDPScheduler.from_table(
+                    np.minimum(np.arange(130), 8)
+                ),
+                arrivals=DiurnalProcess(base=1.5, amp=1.0, period=300.0),
+                b_max=8, service=SVC, energy_table=np.zeros(9), seed=5,
+            )
+
+        r_py = eng().run(800)
+        r_c = eng().run(800, backend="compiled")
+        np.testing.assert_array_equal(r_py.batch_sizes, r_c.batch_sizes)
+        np.testing.assert_allclose(r_py.latencies, r_c.latencies, atol=1e-9)
+
+    def test_jax_sampler_sorted_and_rate(self):
+        import jax
+
+        p = DiurnalProcess(base=2.0, amp=1.2, period=150.0)
+        t, m = diurnal_times_jax(jax.random.PRNGKey(0), p, 16384)
+        t, m = np.asarray(t), np.asarray(m)
+        n = int(m.sum())
+        assert np.all(np.isinf(t[n:]))
+        assert np.all(np.diff(t[:n]) >= 0)
+        assert abs(n / t[n - 1] - 2.0) / 2.0 < 0.1
+
+
+class TestDeprecationShim:
+    def test_mmpp_module_warns_and_reexports(self):
+        import importlib
+        import sys
+
+        sys.modules.pop("repro.serving.mmpp", None)
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            mod = importlib.import_module("repro.serving.mmpp")
+        for name in (
+            "MMPP2", "MMPP2Process", "OraclePhaseScheduler",
+            "PhaseAwareScheduler", "solve_phase_policies", "run_mmpp",
+        ):
+            assert hasattr(mod, name)
