@@ -1,0 +1,222 @@
+"""Fleet frontier: M routed small servers vs one fat server, equal silicon.
+
+The paper (and the whole solver stack) prices ONE batch-service queue;
+this benchmark asks the deployment question the fleet lane exists for
+(cf. Kar et al., arXiv 2009.09433): at equal aggregate service capacity,
+is it better to run M small replicas behind a router — each solving its
+own SMDP at lambda/M — or one M-times-faster fat server solving at
+lambda?  At equal joules-per-batch the fat server amortizes energy over
+bigger batches and drains faster; the routed fleet pays a latency and
+power premium whose size the router sets — batch_aware (queue closest to
+its table's next admission threshold) narrows the gap over jsq.
+
+Scenarios: Poisson / MMPP2 / diurnal arrivals at per-replica rho 0.7.
+Per (scenario, router) the compiled fleet grid averages seeds in one
+vmapped dispatch; the fat server runs the single-server compiled kernel
+on the same traces.  A streaming section pushes a >= 10x-chunk horizon
+through FleetStream and checks the O(chunk)-memory aggregates against a
+one-shot run of the same trace.
+
+Usage:  PYTHONPATH=src python -m benchmarks.fleet_frontier [--smoke]
+            [--json BENCH_fleet.json]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import GOOGLENET_P4_LATENCY, solve
+from repro.serving import (
+    FleetStream,
+    histogram_quantiles,
+    pad_arrivals_batch,
+    run_fleet_grid,
+    simulate_compiled,
+    simulate_fleet,
+)
+from repro.serving.arrivals import MMPP2, DiurnalProcess
+
+from .common import BMAX, emit, emit_json, energy_table, paper_spec, timed
+
+M = 4
+RHO = 0.7
+ROUTERS = ("jsq", "batch_aware", "rr", "pow2")
+
+
+def _traces(mode: str, lam: float, n: int, n_seeds: int):
+    out = []
+    for s in range(n_seeds):
+        rng = np.random.default_rng(1000 + s)
+        if mode == "poisson":
+            out.append(np.cumsum(rng.exponential(1.0 / lam, n)))
+        elif mode == "mmpp2":
+            m = MMPP2(
+                lam1=0.3 * lam, lam2=1.3 * lam, dwell1=60.0, dwell2=30.0
+            )
+            times, _ = m.sample_arrivals(n / m.mean_rate, rng)
+            out.append(times)
+        else:
+            proc = DiurnalProcess(base=lam, amp=0.6 * lam, period=300.0)
+            out.append(np.array([proc.next(rng).time for _ in range(n)]))
+    return out
+
+
+def _lane_summary(out, i_router):
+    """Seed-averaged (W_mean, P95, power, mean_batch) of one router lane."""
+    w = np.nanmean(out["w_mean"][:, 0, i_router])
+    power = np.nanmean(out["power"][:, 0, i_router])
+    mb = (
+        out["n_served"][:, 0, i_router].sum()
+        / out["n_batches"][:, 0, i_router].sum()
+    )
+    p95 = np.mean([
+        histogram_quantiles(
+            out["hist"][s, 0, i_router], out["hist_edges"], [0.95]
+        )[0]
+        for s in range(out["hist"].shape[0])
+    ])
+    return w, p95, power, mb
+
+
+def run(smoke: bool = False, json_path: str | None = None) -> None:
+    n = 4000 if smoke else 20000
+    n_seeds = 2 if smoke else 4
+
+    # equal silicon: each replica is a GoogLeNet/P4 card solved at its
+    # lambda/M share; the fat server is an M-times-faster card (latency/M)
+    # solved at the aggregate lambda.  Energy per batch is the card's own.
+    spec_small = paper_spec(rho=RHO)
+    spec_fat = paper_spec(
+        rho=RHO, latency=lambda b: GOOGLENET_P4_LATENCY(b) / M
+    )
+    tab_small = solve(spec_small).policy
+    tab_fat = solve(spec_fat).policy
+    en_small = energy_table(spec_small)
+    en_fat = en_small  # same joules per batch: the fat card is faster,
+    # not thriftier — the frontier isolates batching behavior
+    means_small = np.array(
+        [0.0] + [float(spec_small.service.mean(b)) for b in range(1, BMAX + 1)]
+    )
+    means_fat = means_small / M
+    lam_agg = M * spec_small.lam
+
+    sections: dict = {}
+    for mode in ("poisson", "mmpp2", "diurnal"):
+        traces, us_tr = timed(_traces, mode, lam_agg, n, n_seeds)
+        arr = pad_arrivals_batch(traces)
+        (out, _), us_fleet = timed(
+            lambda: (
+                run_fleet_grid(
+                    tab_small[None], arr, routers=ROUTERS, n_replicas=M,
+                    means=means_small, zeta=en_small, b_max=BMAX,
+                ),
+                None,
+            )
+        )
+        fat_w, fat_p95, fat_power, fat_mb = [], [], [], []
+        for tr in traces:
+            res = simulate_compiled(
+                tab_fat, tr, means=means_fat, zeta=en_fat, b_max=BMAX
+            )
+            fat_w.append(res.lat_sum / res.n_served)
+            fat_p95.append(
+                histogram_quantiles(res.hist, res.hist_edges, [0.95])[0]
+            )
+            fat_power.append(res.energy / res.t_final)
+            fat_mb.append(res.n_served / res.n_batches)
+        sec = {
+            "n_arrivals": n, "n_seeds": n_seeds, "M": M, "rho": RHO,
+            "lam_aggregate": float(lam_agg),
+            "fat_server": {
+                "W_mean": float(np.mean(fat_w)),
+                "P95": float(np.mean(fat_p95)),
+                "power": float(np.mean(fat_power)),
+                "mean_batch": float(np.mean(fat_mb)),
+            },
+            "fleet": {},
+        }
+        for i, router in enumerate(ROUTERS):
+            w, p95, power, mb = _lane_summary(out, i)
+            sec["fleet"][router] = {
+                "W_mean": float(w), "P95": float(p95),
+                "power": float(power), "mean_batch": float(mb),
+                "energy_ratio_vs_fat": float(power / np.mean(fat_power)),
+                "latency_ratio_vs_fat": float(w / np.mean(fat_w)),
+            }
+        best = min(
+            ROUTERS, key=lambda r: sec["fleet"][r]["W_mean"]
+        )
+        sec["best_router"] = best
+        emit(
+            f"fleet_{mode}",
+            us_fleet,
+            f"fat:W={sec['fat_server']['W_mean']:.2f}ms"
+            f",P={sec['fat_server']['power']:.1f}W;"
+            + ";".join(
+                f"{r}:W={sec['fleet'][r]['W_mean']:.2f}ms"
+                f",P={sec['fleet'][r]['power']:.1f}W"
+                for r in ROUTERS[:2]
+            )
+            + f";best_router={best}",
+        )
+        sections[mode] = sec
+        del us_tr
+
+    # --- streaming: O(chunk) memory at a >= 10x-chunk horizon ----------
+    chunk = 1024 if smoke else 8192
+    n_stream = 16 * chunk
+    lam = lam_agg
+    tr = np.cumsum(
+        np.random.default_rng(7).exponential(1.0 / lam, n_stream)
+    )
+    tabs = np.tile(tab_small[None], (M, 1))
+
+    def _stream():
+        fs = FleetStream(
+            tabs, router="jsq", means=means_small, zeta=en_small, b_max=BMAX
+        )
+        for lo in range(0, n_stream, chunk):
+            fs.push(tr[lo:lo + chunk])
+        return fs
+
+    fs, us_stream = timed(_stream)
+    st = fs.finish()
+    one = simulate_fleet(
+        tabs, tr, router="jsq", means=means_small, zeta=en_small, b_max=BMAX
+    )
+    lat_err = abs(st.lat_sum - one.lat_sum) / one.lat_sum
+    assert lat_err < 1e-9, lat_err
+    assert st.n_served == one.n_served == n_stream
+    rep = fs.report()
+    ev_per_s = n_stream / (us_stream / 1e6)
+    emit(
+        "fleet_stream",
+        us_stream,
+        f"horizon/chunk={n_stream // chunk}x;events/s={ev_per_s:.3g};"
+        f"lat_sum_err={lat_err:.1e};P95={rep['P95']:.2f}ms",
+    )
+    sections["streaming"] = {
+        "chunk_size": chunk, "n_stream": n_stream,
+        "horizon_over_chunk": n_stream // chunk,
+        "events_per_sec": float(ev_per_s),
+        "lat_sum_relative_err_vs_one_shot": float(lat_err),
+        "report": {k: float(v) for k, v in rep.items()},
+    }
+
+    if json_path:
+        emit_json(json_path, "fleet_frontier", sections)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced traces/seeds for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge results into this JSON artifact")
+    args = ap.parse_args()
+    run(smoke=args.smoke, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,7 @@ def main() -> None:
         fig8_log_energy,
         fig9_cov,
         fig10_abstract_cost,
+        fleet_frontier,
         kernel_micro,
         mmpp_bursty,
         roofline_report,
@@ -59,6 +60,7 @@ def main() -> None:
         ("appE_structure_breaks", appE_structure_breaks.run),
         ("tpu_profile_scenario", tpu_profile_scenario.run),
         ("mmpp_bursty", mmpp_bursty.run),
+        ("fleet_frontier", fleet_frontier.run),
         ("kernel_micro", kernel_micro.run),
         ("roofline_report", roofline_report.run),
         ("perf_ablation", perf_ablation.run),

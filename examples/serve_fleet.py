@@ -1,0 +1,124 @@
+"""Routed fleet quickstart: 8 SMDP-batching replicas behind one router.
+
+Builds an 8-replica fleet where every replica runs the SMDP table solved
+for its lambda/M share, routes one Poisson stream through it with each of
+the four routers (rr / jsq / pow2 / batch_aware) in a single vmapped
+grid dispatch, streams the same workload chunk-by-chunk in O(chunk)
+memory, and — if a `BENCH_fleet.json` produced by
+`python -m benchmarks.fleet_frontier --json BENCH_fleet.json` is lying
+around — prints the routed-fleet vs fat-server frontier it recorded.
+
+    PYTHONPATH=src python examples/serve_fleet.py [--bench BENCH_fleet.json]
+"""
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core import GOOGLENET_P4_ENERGY, GOOGLENET_P4_LATENCY, ServiceModel, SMDPSpec, solve
+from repro.serving import (
+    FleetStream,
+    histogram_quantiles,
+    pad_arrivals_batch,
+    run_fleet_grid,
+)
+
+M = 8
+BMAX = 32
+RHO = 0.7
+ROUTERS = ("rr", "jsq", "pow2", "batch_aware")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default="BENCH_fleet.json",
+                    help="frontier artifact written by benchmarks.fleet_frontier")
+    ap.add_argument("--n", type=int, default=20000, help="arrivals per seed")
+    args = ap.parse_args()
+
+    # each replica sees lambda/M: solve the per-replica SMDP once and run
+    # it homogeneously (run_fleet_grid also takes (P, M, L) heterogeneous
+    # stacks — e.g. a big.LITTLE fleet with per-replica tables)
+    svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+    lam_replica = RHO * BMAX / float(svc.mean(BMAX))
+    spec = SMDPSpec(
+        lam=lam_replica, service=svc, energy=GOOGLENET_P4_ENERGY,
+        b_min=1, b_max=BMAX, w1=1.0, w2=1.0, s_max=128,
+    )
+    table = solve(spec).policy
+    means = np.array([0.0] + [float(svc.mean(b)) for b in range(1, BMAX + 1)])
+    zeta = np.array(
+        [0.0] + [float(GOOGLENET_P4_ENERGY(b)) for b in range(1, BMAX + 1)]
+    )
+
+    lam = M * lam_replica
+    traces = [
+        np.cumsum(np.random.default_rng(s).exponential(1.0 / lam, args.n))
+        for s in range(3)
+    ]
+
+    # one dispatch: (3 seeds) x (1 policy) x (4 routers), M=8 each
+    out = run_fleet_grid(
+        table[None], pad_arrivals_batch(traces), routers=ROUTERS,
+        n_replicas=M, means=means, zeta=zeta, b_max=BMAX,
+    )
+    print(f"{M}-replica fleet, rho={RHO}/replica, {args.n} arrivals x 3 seeds")
+    print(f"{'router':>12}  {'W_mean':>8}  {'P95':>8}  {'power':>8}  {'batch':>6}")
+    for i, r in enumerate(ROUTERS):
+        w = np.nanmean(out["w_mean"][:, 0, i])
+        p95 = np.mean([
+            histogram_quantiles(
+                out["hist"][s, 0, i], out["hist_edges"], [0.95]
+            )[0]
+            for s in range(3)
+        ])
+        power = np.nanmean(out["power"][:, 0, i])
+        mb = (
+            out["n_served"][:, 0, i].sum() / out["n_batches"][:, 0, i].sum()
+        )
+        print(f"{r:>12}  {w:8.2f}  {p95:8.2f}  {power:8.1f}  {mb:6.2f}")
+
+    # same workload, streamed: constant memory no matter the horizon
+    fs = FleetStream(
+        np.tile(table[None], (M, 1)), router="jsq", means=means, zeta=zeta,
+        b_max=BMAX,
+    )
+    chunk = 2048
+    for lo in range(0, args.n, chunk):
+        fs.push(traces[0][lo:lo + chunk])
+    fs.finish()
+    rep = fs.report()
+    print(
+        f"\nstreamed (chunks of {chunk}): W_mean={rep['W_mean']:.2f}ms "
+        f"P95={rep['P95']:.2f}ms power={rep['power']:.1f}W "
+        f"mean_batch={rep['mean_batch']:.2f}"
+    )
+
+    # read the recorded frontier, if the benchmark has run
+    if os.path.exists(args.bench):
+        with open(args.bench) as f:
+            frontier = json.load(f).get("fleet_frontier", {})
+        for mode, sec in frontier.items():
+            if mode == "streaming":
+                continue
+            fat = sec["fat_server"]
+            best = sec["best_router"]
+            fl = sec["fleet"][best]
+            print(
+                f"\n[{args.bench}] {mode}: fat W={fat['W_mean']:.2f}ms "
+                f"P={fat['power']:.1f}W | best fleet router '{best}' "
+                f"W={fl['W_mean']:.2f}ms P={fl['power']:.1f}W "
+                f"(latency x{fl['latency_ratio_vs_fat']:.2f}, "
+                f"energy x{fl['energy_ratio_vs_fat']:.2f})"
+            )
+    else:
+        print(
+            f"\n(no {args.bench} found — run `python -m "
+            "benchmarks.fleet_frontier --json BENCH_fleet.json` to record "
+            "the fleet-vs-fat-server frontier)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -18,3 +18,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh():
     """1-device mesh with the production axis names (smoke tests)."""
     return make_mesh((1, 1), ("data", "model"))
+
+
+def make_sim_mesh():
+    """1-D ("data",) mesh over every visible device.
+
+    The serving-side sweeps (`serving.fleet.run_fleet_grid`,
+    `serving.compiled.run_grid`) shard their scenario/seed lane axis over
+    a single mesh axis; this builds that mesh without hard-coding a
+    device count, so the same call works on 1 CPU host or a TPU slice.
+    """
+    import jax
+
+    return make_mesh((jax.device_count(),), ("data",))

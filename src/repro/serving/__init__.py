@@ -9,7 +9,11 @@ and scan-compatible jax samplers); serving.scheduler holds the policy
 tables, the solved-sweep banks (lambda x w2 x service-profile axes), and
 the online AdaptiveController; serving.metrics streams latency quantiles
 (P² on the Python path, fixed-bin histogram sketch on the compiled path),
-power, and the arrival-rate estimate.
+power, and the arrival-rate estimate.  serving.fleet routes one arrival
+stream across M replicas (rr / jsq / pow2 / batch-aware routers, each
+replica with its own table) in the same compiled event kernel, streams
+billion-event horizons in O(chunk) memory (FleetStream), and sweeps the
+(seeds x scenarios) x policies x routers grid mesh-sharded.
 """
 from .arrivals import (  # noqa: F401
     ArrivalEvent,
@@ -53,4 +57,15 @@ from .compiled import (  # noqa: F401
     pad_arrivals_batch,
     run_grid,
     simulate_compiled,
+)
+from .fleet import (  # noqa: F401
+    ROUTERS,
+    FleetResult,
+    FleetStream,
+    PythonFleet,
+    run_fleet_grid,
+    simulate_fleet,
+    simulate_fleet_stream,
+    threshold_gaps,
+    verify_fleet,
 )

@@ -122,6 +122,12 @@ def _initial_steps(key, n_arr: int, max_eps: int, cap: int) -> int:
 #: least this many +inf sentinels so the slice never clamps into real data.
 _ADMIT_W = 4
 
+#: record=True materializes several per-step trace arrays of the scan
+#: length; past this many slots simulate_compiled raises instead of
+#: allocating toward OOM (serving.fleet.FleetStream streams the same
+#: aggregates in O(chunk) memory for arbitrarily long horizons)
+MAX_RECORD_SLOTS = 1 << 20
+
 
 def pad_arrivals(
     times, deadlines=None, size: Optional[int] = None, *, phases=None
@@ -362,6 +368,7 @@ def simulate_compiled(
     phases=None,
     hist_edges=None,
     record: bool = False,
+    max_record_slots: Optional[int] = None,
 ) -> CompiledResult:
     """Run one policy table over one padded arrival trace, compiled.
 
@@ -375,6 +382,13 @@ def simulate_compiled(
     per-arrival phase ints, raw or pre-padded alongside ``arrivals``) is
     required and the kernel selects the row by the phase of the last
     admitted arrival (the phase-indexed compiled lane).
+
+    ``record=True`` materializes per-step trace buffers (actions,
+    latencies) sized to the scan length.  That escalation is capped at
+    ``max_record_slots`` (default `MAX_RECORD_SLOTS`): beyond it the call
+    raises instead of silently allocating toward OOM — for longer
+    horizons stream aggregates in O(chunk) memory with
+    `serving.fleet.FleetStream` / `simulate_fleet_stream` instead.
     """
     table = np.asarray(table, dtype=np.int64)
     if table.ndim == 1:
@@ -435,6 +449,19 @@ def simulate_compiled(
     cap = _bucket(n_arr + max_eps + 1)
     ck = ("single", len(arr), table.shape, cap)
     n_steps = _initial_steps(ck, n_arr, max_eps, cap)
+    if record:
+        slots = (
+            MAX_RECORD_SLOTS if max_record_slots is None
+            else int(max_record_slots)
+        )
+        if n_steps > slots:
+            raise ValueError(
+                f"record=True needs at least {n_steps} trace slots for "
+                f"{n_arr} arrivals, above max_record_slots={slots}; raise "
+                "max_record_slots explicitly, or stream aggregates in "
+                "O(chunk) memory with serving.fleet.FleetStream / "
+                "simulate_fleet_stream"
+            )
     while True:
         out = _simulate_jit(
             jnp.asarray(table), jnp.asarray(arr), jnp.asarray(dl),
@@ -446,7 +473,15 @@ def simulate_compiled(
         agg = out[0] if record else out
         if n_steps >= cap or not bool(agg["incomplete"]):
             break
-        n_steps = min(2 * n_steps, cap)
+        nxt = min(2 * n_steps, cap)
+        if record and nxt > slots:
+            raise ValueError(
+                f"record=True escalation wants {nxt} trace slots, above "
+                f"max_record_slots={slots}; raise max_record_slots "
+                "explicitly, or stream aggregates in O(chunk) memory with "
+                "serving.fleet.FleetStream / simulate_fleet_stream"
+            )
+        n_steps = nxt
     _NSTEPS_CACHE[ck] = min(_bucket(int(agg["n_steps_used"]) + 1), cap)
     rec = out[1] if record else None
     agg = {k: np.asarray(v) for k, v in agg.items()}
@@ -583,7 +618,13 @@ def run_grid(
     out["hist_edges"] = edges
     with np.errstate(invalid="ignore", divide="ignore"):
         span = out["t_final"] - t0
-        out["w_mean"] = out["lat_sum"] / np.maximum(out["n_served"], 1)
+        # starved lane (n_served == 0) -> NaN mean latency, not 0.0: a
+        # zero would win every frontier argmin and poison plots silently
+        out["w_mean"] = np.where(
+            out["n_served"] > 0,
+            out["lat_sum"] / np.maximum(out["n_served"], 1),
+            np.nan,
+        )
         # same convention as the engine's have_energy flag: a lane with no
         # energy source or no served batch reports NaN power, not 0
         have_energy = zeta is not None

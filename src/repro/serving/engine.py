@@ -504,13 +504,22 @@ class ServingEngine:
         qs = histogram_quantiles(
             res.hist, res.hist_edges, [0.5, 0.95, 0.99]
         )
+        # count-zero lanes: NaN, matching ServingMetrics.report and the
+        # grid runners' w_mean convention
+        mean_batch = (
+            res.n_served / res.n_batches if res.n_batches > 0 else float("nan")
+        )
         metrics = {
-            "W_mean": res.lat_sum / max(res.n_served, 1),
+            "W_mean": (
+                res.lat_sum / res.n_served
+                if res.n_served > 0
+                else float("nan")
+            ),
             "P50": float(qs[0]),
             "P95": float(qs[1]),
             "P99": float(qs[2]),
             "power": energy / span if span > 0 else float("nan"),
-            "mean_batch": res.n_served / max(res.n_batches, 1),
+            "mean_batch": mean_batch,
             "n_served": float(res.n_served),
         }
         return EngineReport(
@@ -519,7 +528,7 @@ class ServingEngine:
             span=span,
             n_served=res.n_served,
             n_slo_miss=res.slo_miss,
-            mean_batch=res.n_served / max(res.n_batches, 1),
+            mean_batch=mean_batch,
             batch_sizes=res.batch_sizes,
             metrics=metrics,
         )

@@ -105,7 +105,9 @@ def histogram_quantiles(counts, edges, qs) -> np.ndarray:
         )
     qs = np.atleast_1d(np.asarray(qs, dtype=np.float64))
     total = counts.sum()
-    if total <= 0:
+    # empty lane (starved replica, sub-batch smoke horizon) or a poisoned
+    # sketch (NaN/inf counts): well-defined NaN out, never garbage interp
+    if not np.isfinite(total) or total <= 0:
         return np.full(qs.shape, np.nan)
     cum = np.cumsum(counts)
     out = np.empty(qs.shape)
@@ -228,12 +230,22 @@ class ServingMetrics:
         self.n_batches += 1
 
     def report(self) -> Dict[str, float]:
+        # count-zero lanes report NaN, not 0.0 — a starved replica's
+        # "mean latency" is undefined, and 0.0 would win every argmin
         return {
-            "W_mean": self.latency_sum / max(self.n_served, 1),
+            "W_mean": (
+                self.latency_sum / self.n_served
+                if self.n_served > 0
+                else float("nan")
+            ),
             "P50": self.quantiles[0.5].value,
             "P95": self.quantiles[0.95].value,
             "P99": self.quantiles[0.99].value,
             "power": self.energy / self.span if self.span else float("nan"),
-            "mean_batch": self.batch_sum / max(self.n_batches, 1),
+            "mean_batch": (
+                self.batch_sum / self.n_batches
+                if self.n_batches > 0
+                else float("nan")
+            ),
             "n_served": float(self.n_served),
         }

@@ -7,31 +7,61 @@ solve_phase_policies) lives in serving.scheduler.  The exact MMPP-aware
 solve (vs the per-phase heuristic this module pioneered) is
 core.solve_modulated.  This shim re-exports the old names and will be
 removed once no caller imports repro.serving.mmpp.
+
+The DeprecationWarning fires on *attribute access* (module
+``__getattr__``), not at import time — a plain ``import repro.serving``
+(whose star-imports used to trip a module-level warn during collection)
+stays warning-clean.
 """
 from __future__ import annotations
 
 import warnings
 
-from .arrivals import MMPP2, MMPP2Process  # noqa: F401
-from .scheduler import (  # noqa: F401
-    OraclePhaseScheduler,
-    PhaseAwareScheduler,
-    Scheduler,
-    solve_phase_policies,
-)
+_MOVED = {
+    "MMPP2": "arrivals",
+    "MMPP2Process": "arrivals",
+    "OraclePhaseScheduler": "scheduler",
+    "PhaseAwareScheduler": "scheduler",
+    "Scheduler": "scheduler",
+    "solve_phase_policies": "scheduler",
+}
 
-warnings.warn(
-    "repro.serving.mmpp is deprecated: import MMPP2/MMPP2Process from "
-    "repro.serving.arrivals and the phase schedulers from "
-    "repro.serving.scheduler (exact modulated solves: core.solve_modulated)",
-    DeprecationWarning,
-    stacklevel=2,
-)
+_WARNED = False
+
+
+def _warn_once():
+    global _WARNED
+    if not _WARNED:
+        _WARNED = True
+        warnings.warn(
+            "repro.serving.mmpp is deprecated: import MMPP2/MMPP2Process "
+            "from repro.serving.arrivals and the phase schedulers from "
+            "repro.serving.scheduler (exact modulated solves: "
+            "core.solve_modulated)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+
+
+def __getattr__(name: str):
+    if name in _MOVED:
+        _warn_once()
+        from importlib import import_module
+
+        mod = import_module(f".{_MOVED[name]}", __package__)
+        val = getattr(mod, name)
+        globals()[name] = val  # cache: warn once, resolve once
+        return val
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_MOVED) | {"run_mmpp"})
 
 
 def run_mmpp(
-    scheduler: Scheduler,
-    mmpp: MMPP2,
+    scheduler,
+    mmpp,
     service,
     energy_table,
     b_max: int,
@@ -44,6 +74,8 @@ def run_mmpp(
     should build ServingEngine(arrivals=MMPP2Process(mmpp), ...) directly
     and keep the full EngineReport.
     """
+    _warn_once()
+    from .arrivals import MMPP2Process
     from .engine import ServingEngine
 
     eng = ServingEngine(

@@ -1,0 +1,426 @@
+"""Fleet serving lane: M=1 equivalence with the single-server compiled
+kernel per arrival mode, Python-reference router agreement per routing
+policy, conservation/dominance invariants, snapshot()/restore() through
+router state, chunked streaming vs materialized record, the record-slot
+cap, the count-zero metrics convention, and the mesh-sharded grid."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import GOOGLENET_P4_ENERGY, GOOGLENET_P4_LATENCY, ServiceModel
+from repro.core.policies import q_policy
+from repro.serving import (
+    FleetStream,
+    PythonFleet,
+    ServingMetrics,
+    histogram_quantiles,
+    pad_arrivals_batch,
+    run_fleet_grid,
+    simulate_compiled,
+    simulate_fleet,
+    simulate_fleet_stream,
+    threshold_gaps,
+    verify_fleet,
+)
+from repro.serving.arrivals import MMPP2, DiurnalProcess
+
+ROOT = Path(__file__).resolve().parent.parent
+
+SVC = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+BMAX = 16
+#: per-replica load ~0.7 at M=1 (each M-replica test scales lam by M)
+LAM = 0.7 * BMAX / float(SVC.mean(BMAX))
+ENERGY = np.array(
+    [0.0] + [float(GOOGLENET_P4_ENERGY(b)) for b in range(1, BMAX + 1)]
+)
+MEANS = np.array([0.0] + [float(SVC.mean(b)) for b in range(1, BMAX + 1)])
+TABLE = q_policy(6, 96, BMAX)
+#: heterogeneous fleet: each replica its own control limit
+HET_QS = (4, 6, 8, 12)
+HET_TABLES = np.stack([q_policy(q, 96, BMAX) for q in HET_QS])
+ROUTER_NAMES = ["rr", "jsq", "pow2", "batch_aware"]
+
+
+def _trace(mode: str, n: int = 1200, seed: int = 0, lam: float = LAM):
+    rng = np.random.default_rng(seed)
+    if mode == "poisson":
+        return np.cumsum(rng.exponential(1.0 / lam, n))
+    if mode == "mmpp2":
+        m = MMPP2(lam1=0.3 * lam, lam2=1.3 * lam, dwell1=60.0, dwell2=30.0)
+        times, _ = m.sample_arrivals(n / m.mean_rate, rng)
+        return times
+    assert mode == "diurnal"
+    proc = DiurnalProcess(base=lam, amp=0.6 * lam, period=120.0)
+    return np.array([proc.next(rng).time for _ in range(n)])
+
+
+class TestM1Equivalence:
+    """ISSUE acceptance: the M=1 fleet lane is decision-for-decision
+    identical to serving/compiled.py on Poisson, MMPP2, and diurnal."""
+
+    @pytest.mark.parametrize("mode", ["poisson", "mmpp2", "diurnal"])
+    def test_matches_single_server_kernel(self, mode):
+        out = verify_fleet(
+            TABLE, _trace(mode), router="jsq", service=SVC,
+            energy_table=ENERGY, b_max=BMAX,
+        )
+        assert out["n_decisions"] > 0
+
+    @pytest.mark.parametrize("router", ROUTER_NAMES)
+    def test_every_router_degenerates_at_m1(self, router):
+        verify_fleet(
+            TABLE, _trace("poisson"), router=router, service=SVC,
+            energy_table=ENERGY, b_max=BMAX,
+        )
+
+    def test_m1_bitwise_vs_compiled(self):
+        tr = _trace("poisson")
+        res = simulate_fleet(
+            TABLE, tr, router="rr", means=MEANS, zeta=ENERGY, b_max=BMAX,
+            record=True,
+        )
+        ref = simulate_compiled(
+            TABLE, tr, means=MEANS, zeta=ENERGY, b_max=BMAX, record=True,
+        )
+        assert np.array_equal(res.batch_sizes, ref.actions[ref.actions > 0])
+        assert np.array_equal(
+            res.latencies[res.served], np.asarray(ref.latencies)
+        )
+        assert res.t_final == ref.t_final
+        assert res.energy == ref.energy
+        assert res.n_epochs == ref.n_epochs
+
+
+class TestFleetVerify:
+    """Python reference router loop == compiled lane, per routing policy,
+    on a heterogeneous 4-replica fleet."""
+
+    @pytest.mark.parametrize("router", ROUTER_NAMES)
+    def test_router_agreement(self, router):
+        out = verify_fleet(
+            HET_TABLES, _trace("poisson", lam=4 * LAM), router=router,
+            service=SVC, energy_table=ENERGY, b_max=BMAX, slo=3.0,
+        )
+        assert out["n_decisions"] > 0
+
+    @pytest.mark.parametrize("router", ["jsq", "pow2"])
+    def test_budget_and_horizon_cuts(self, router):
+        tr = _trace("poisson", lam=4 * LAM)
+        verify_fleet(
+            HET_TABLES, tr, router=router, service=SVC,
+            energy_table=ENERGY, b_max=BMAX, n_epochs=500, drain=False,
+        )
+        verify_fleet(
+            HET_TABLES, tr, router=router, service=SVC,
+            energy_table=ENERGY, b_max=BMAX,
+            horizon=float(tr[len(tr) // 2]),
+        )
+
+    def test_stochastic_service_shared_draws(self):
+        svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="expo")
+        verify_fleet(
+            HET_TABLES, _trace("poisson", lam=4 * LAM), router="jsq",
+            service=svc, energy_table=ENERGY, b_max=BMAX,
+        )
+
+
+class TestThresholdGaps:
+    def test_control_limit_gaps(self):
+        tab = q_policy(4, 16, 8)
+        g = threshold_gaps(tab[None, None, :])[0, 0]
+        # queue q: arrivals still needed (beyond the next one) to reach
+        # the table's first serving state — 4-long countdown, then 0
+        assert np.array_equal(g[:5], [3, 2, 1, 0, 0])
+        assert (g[5:] == 0).all()
+
+    def test_never_serving_row_gets_max_gap(self):
+        tab = np.zeros((1, 1, 8), dtype=np.int64)
+        g = threshold_gaps(tab)
+        assert (g == 8).all()  # clamped to L: worst-ranked target
+
+
+class TestFleetInvariants:
+    def test_request_conservation_per_router(self):
+        traces = [_trace("poisson", seed=s, lam=4 * LAM) for s in range(2)]
+        arr = pad_arrivals_batch(traces)
+        cut = float(traces[0][800])
+        out = run_fleet_grid(
+            np.stack([TABLE, q_policy(10, 96, BMAX)]), arr,
+            routers=ROUTER_NAMES, n_replicas=4, means=MEANS, zeta=ENERGY,
+            b_max=BMAX, horizon=cut, drain=False,
+        )
+        # admitted = routed = served + still-queued, per (S, P, R) lane
+        assert (out["n_route"].sum(axis=-1) == out["n_admitted"]).all()
+        assert (
+            out["n_served"] + out["qlen"].sum(axis=-1) == out["n_admitted"]
+        ).all()
+        # the horizon cut dropped the unadmitted tail, same for every lane
+        n_in = np.array([(t < cut).sum() for t in traces])
+        assert (out["n_admitted"] == n_in[:, None, None]).all()
+
+    def test_jsq_dominates_pow2_at_high_rho(self):
+        """Stochastic dominance on time-averaged backlog at rho = 0.9,
+        averaged over seeds: JSQ < pow2 (classic supermarket-model
+        ordering; q_time_avg = lat_sum / span by Little's law).  The
+        regime matters: with GoogLeNet-style sublinear batch latency,
+        LESS-informed routing batches better (JSQ herds arrivals onto
+        just-idled replicas, shattering batches), so the classic ordering
+        needs linear per-request latency and stochastic service."""
+        bmax, c, M = 4, 0.05, 8
+        means = np.array([0.0] + [c * b for b in range(1, bmax + 1)])
+        lam = 0.9 * M / c
+        traces, draws = [], []
+        for s in range(6):
+            r = np.random.default_rng(s)
+            traces.append(np.cumsum(r.exponential(1.0 / lam, 4000)))
+            draws.append(r.exponential(1.0, 2 * 4000 + M + 8))
+        out = run_fleet_grid(
+            q_policy(1, 64, bmax)[None], pad_arrivals_batch(traces),
+            routers=("jsq", "pow2", "rr"), n_replicas=M, means=means,
+            b_max=bmax, draws=np.stack(draws),
+        )
+        q = out["q_time_avg"][:, 0, :].mean(axis=0)  # (R,) seed-avg
+        assert q[0] < q[1], q  # jsq beats pow2
+        assert q[0] < q[2], q  # ...and blind round-robin
+
+    @pytest.mark.parametrize("router", ["pow2", "batch_aware"])
+    def test_snapshot_restore_through_router_state(self, router):
+        tr = _trace("poisson", lam=4 * LAM)
+        fl = PythonFleet(
+            HET_TABLES, tr, router=router, means=MEANS, zeta=ENERGY,
+            b_max=BMAX, slo=3.0,
+        )
+        for _ in range(400):
+            if not fl.step():
+                break
+        snap = fl.snapshot()
+        fl.run()
+        ref = (
+            list(fl.decisions), fl.latencies.copy(), fl.energy,
+            fl.arr_server.copy(), fl.slo_miss, fl.t,
+        )
+        fl.restore(snap)
+        fl.run()
+        assert list(fl.decisions) == ref[0]
+        assert np.array_equal(fl.latencies, ref[1], equal_nan=True)
+        assert fl.energy == ref[2]
+        assert np.array_equal(fl.arr_server, ref[3])
+        assert (fl.slo_miss, fl.t) == (ref[4], ref[5])
+
+
+class TestStreaming:
+    """ISSUE acceptance: chunked streaming reproduces the materialized-
+    record aggregates at >= 10x the chunk size."""
+
+    def test_stream_matches_one_shot_exactly(self):
+        tr = _trace("poisson", n=6000, lam=4 * LAM)
+        one = simulate_fleet(
+            HET_TABLES, tr, router="jsq", means=MEANS, zeta=ENERGY,
+            b_max=BMAX, slo=3.0,
+        )
+        st = simulate_fleet_stream(
+            HET_TABLES, tr, chunk_size=512, router="jsq", means=MEANS,
+            zeta=ENERGY, b_max=BMAX, slo=3.0,
+        )
+        assert st.n_served == one.n_served == 6000
+        assert st.n_batches == one.n_batches
+        assert np.isclose(st.lat_sum, one.lat_sum, rtol=1e-12)
+        assert np.isclose(st.energy, one.energy, rtol=1e-12)
+        assert st.slo_miss == one.slo_miss
+        assert st.t_final == one.t_final
+        assert np.array_equal(st.hist, one.hist)
+
+    def test_p2_quantiles_within_sketch_tolerance(self):
+        # homogeneous fleet: a heterogeneous one has multimodal latency,
+        # where the P2 marker sketch is known-biased at the tails
+        tabs = np.tile(TABLE[None], (4, 1))
+        tr = _trace("poisson", n=6000, lam=4 * LAM)
+        one = simulate_fleet(
+            tabs, tr, router="jsq", means=MEANS, b_max=BMAX, record=True
+        )
+        true_q = np.percentile(one.latencies[one.served], [50, 95])
+        fs = FleetStream(tabs, router="jsq", means=MEANS, b_max=BMAX)
+        for lo in range(0, len(tr), 512):
+            fs.push(tr[lo:lo + 512])
+        res = fs.finish()
+        rep = fs.report()
+        hq = histogram_quantiles(res.hist, res.hist_edges, [0.5, 0.95])
+        for sketch in (rep["P50"], hq[0]):
+            assert abs(sketch - true_q[0]) / true_q[0] < 0.05
+        for sketch in (rep["P95"], hq[1]):
+            assert abs(sketch - true_q[1]) / true_q[1] < 0.05
+        assert rep["W_mean"] == pytest.approx(res.lat_sum / res.n_served)
+
+    def test_pow2_stream_shares_router_uniforms(self):
+        tr = _trace("poisson", n=3000, lam=4 * LAM)
+        ru = np.random.default_rng(5).random((len(tr), 2))
+        one = simulate_fleet(
+            HET_TABLES, tr, router="pow2", means=MEANS, b_max=BMAX,
+            router_u=ru,
+        )
+        st = simulate_fleet_stream(
+            HET_TABLES, tr, chunk_size=700, router="pow2", means=MEANS,
+            b_max=BMAX, router_u=ru,
+        )
+        assert st.n_batches == one.n_batches
+        assert np.isclose(st.lat_sum, one.lat_sum, rtol=1e-12)
+        assert np.array_equal(st.n_routed, one.n_routed)
+
+
+class TestRecordSlotCap:
+    def test_cap_raises_with_streaming_pointer(self):
+        arr = np.cumsum(np.full(200, 0.01))
+        with pytest.raises(ValueError, match="FleetStream"):
+            simulate_compiled(
+                TABLE, arr, means=MEANS, b_max=BMAX, record=True,
+                max_record_slots=64,
+            )
+
+    def test_cap_ignores_aggregate_only_runs(self):
+        arr = np.cumsum(np.full(200, 0.01))
+        res = simulate_compiled(
+            TABLE, arr, means=MEANS, b_max=BMAX, record=False,
+            max_record_slots=64,
+        )
+        assert res.n_served == 200
+
+
+class TestCountZeroMetrics:
+    """ISSUE satellite: empty / single-event lanes report NaN with count
+    zero, on both the Python sketches and the compiled aggregate path."""
+
+    def test_serving_metrics_empty(self):
+        rep = ServingMetrics().report()
+        for k in ("W_mean", "P50", "P95", "P99", "mean_batch"):
+            assert np.isnan(rep[k]), k
+        assert rep["n_served"] == 0.0
+
+    def test_serving_metrics_single_event(self):
+        m = ServingMetrics()
+        m.observe_batch([1.5], zeta=2.0, t_now=3.0)
+        rep = m.report()
+        assert rep["W_mean"] == 1.5 and rep["P50"] == 1.5
+        assert rep["mean_batch"] == 1.0
+
+    def test_histogram_quantiles_empty_and_poisoned(self):
+        edges = np.linspace(0.0, 10.0, 9)
+        assert np.isnan(
+            histogram_quantiles(np.zeros(10), edges, [0.5, 0.99])
+        ).all()
+        bad = np.zeros(10)
+        bad[3] = np.nan
+        assert np.isnan(histogram_quantiles(bad, edges, [0.5])).all()
+
+    def test_starved_lane_compiled_path(self):
+        # horizon before the first arrival: nothing admitted or served
+        tr = 10.0 + np.cumsum(np.full(50, 0.1))
+        out = run_fleet_grid(
+            TABLE[None], pad_arrivals_batch([tr]), routers=("jsq",),
+            n_replicas=2, means=MEANS, zeta=ENERGY, b_max=BMAX,
+            horizon=1.0, drain=False,
+        )
+        assert out["n_served"][0, 0, 0] == 0
+        assert np.isnan(out["w_mean"][0, 0, 0])
+        assert np.isnan(out["power"][0, 0, 0])
+        assert np.isnan(
+            histogram_quantiles(
+                out["hist"][0, 0, 0], out["hist_edges"], [0.5]
+            )
+        ).all()
+
+    def test_starved_replicas_in_fleet(self):
+        # 2 arrivals round-robined across 4 replicas: two never serve
+        res = simulate_fleet(
+            np.tile(TABLE[None], (4, 1)), np.array([0.1, 0.2]),
+            router="rr", means=MEANS, zeta=ENERGY, b_max=BMAX,
+        )
+        assert res.n_served == 2
+        assert (res.n_served_m == [1, 1, 0, 0]).all()
+        assert int(res.hist.sum()) == 2
+
+
+class TestFleetGrid:
+    def test_grid_cell_matches_simulate_fleet(self):
+        traces = [_trace("poisson", seed=s, lam=4 * LAM) for s in range(2)]
+        arr = pad_arrivals_batch(traces)
+        policies = np.stack([TABLE, q_policy(10, 96, BMAX)])
+        out = run_fleet_grid(
+            policies, arr, routers=ROUTER_NAMES, n_replicas=4,
+            means=MEANS, zeta=ENERGY, b_max=BMAX, router_seed=7,
+        )
+        ru = np.random.default_rng(7).random(arr.shape + (2,))
+        ref = simulate_fleet(
+            np.tile(policies[1][None], (4, 1)), traces[1], router="pow2",
+            means=MEANS, zeta=ENERGY, b_max=BMAX,
+            router_u=ru[1][: len(traces[1])],
+        )
+        i = ROUTER_NAMES.index("pow2")
+        assert out["n_served"][1, 1, i] == ref.n_served
+        assert out["n_batches"][1, 1, i] == ref.n_batches
+        assert np.isclose(out["lat_sum"][1, 1, i], ref.lat_sum)
+        assert np.isclose(out["energy"][1, 1, i], ref.energy)
+        assert np.isclose(out["t_final"][1, 1, i], ref.t_final)
+
+    def test_one_device_mesh_parity(self):
+        from repro.launch.mesh import make_sim_mesh
+
+        traces = [_trace("poisson", seed=s, lam=4 * LAM) for s in range(2)]
+        arr = pad_arrivals_batch(traces)
+        policies = np.stack([TABLE, q_policy(10, 96, BMAX)])
+        kw = dict(
+            routers=("jsq", "rr"), n_replicas=4, means=MEANS, zeta=ENERGY,
+            b_max=BMAX, router_seed=7,
+        )
+        plain = run_fleet_grid(policies, arr, **kw)
+        mesh = run_fleet_grid(policies, arr, mesh=make_sim_mesh(), **kw)
+        for k, v in plain.items():
+            assert np.allclose(v, mesh[k], equal_nan=True), k
+
+
+_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.core import GOOGLENET_P4_LATENCY, ServiceModel
+from repro.core.policies import q_policy
+from repro.launch.mesh import make_sim_mesh
+from repro.serving import pad_arrivals_batch, run_fleet_grid
+
+assert jax.device_count() == 8
+SVC = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+BMAX = 16
+lam = 0.7 * 4 * BMAX / float(SVC.mean(BMAX))
+means = np.array([0.0] + [float(SVC.mean(b)) for b in range(1, BMAX + 1)])
+# 3 lanes on 8 devices: exercises the pad-to-multiple + trim path
+traces = [np.cumsum(np.random.default_rng(s).exponential(1.0 / lam, 600))
+          for s in range(3)]
+arr = pad_arrivals_batch(traces)
+tabs = np.stack([q_policy(6, 96, BMAX), q_policy(10, 96, BMAX)])
+kw = dict(routers=("jsq", "pow2"), n_replicas=4, means=means, b_max=BMAX)
+plain = run_fleet_grid(tabs, arr, **kw)
+shard = run_fleet_grid(tabs, arr, mesh=make_sim_mesh(), **kw)
+for k, v in plain.items():
+    assert np.allclose(v, shard[k], equal_nan=True), k
+print("OK sharded == plain")
+"""
+
+_JAX_ENV = {k: v for k, v in os.environ.items() if k.startswith("JAX_")}
+
+
+@pytest.mark.slow
+def test_fleet_grid_sharded_8dev():
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARD_SCRIPT],
+        cwd=ROOT,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root", **_JAX_ENV},
+        capture_output=True,
+        text=True,
+        timeout=500,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK sharded == plain" in r.stdout
