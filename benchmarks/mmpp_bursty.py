@@ -21,6 +21,11 @@ Headline claims (tracked in BENCH_serving.json):
     comparison as ONE vmapped scan dispatch vs the Python event loop —
     equal decision sequences (asserted via serving.engine.verify_backends)
     at a >= 25x wall-clock target, with events/sec for both backends;
+  * the "compiled_adaptive" section is the same trajectory for the
+    DEPLOYABLE policy: the AdaptiveController folded into the scan carry
+    (serving.compiled.AdaptiveLane / run_grid_adaptive) vs the stateful
+    Python engine — decision-for-decision certified, per-seed cost parity
+    at rtol 1e-9, gated at a >= 10x wall-clock floor (smoke size too);
   * the "exact_modulated" section quantifies the phase-decomposition
     heuristic's gap (the ROADMAP open item): the exact MMPP-aware solve
     (core.solve_modulated, (phase, queue) product chain) vs the per-phase
@@ -50,7 +55,12 @@ from repro.serving import (
     verify_backends,
 )
 from repro.serving.arrivals import MMPP2, TraceProcess
-from repro.serving.compiled import pad_arrivals, pad_arrivals_batch
+from repro.serving.compiled import (
+    AdaptiveLane,
+    pad_arrivals,
+    pad_arrivals_batch,
+    run_grid_adaptive,
+)
 
 from .common import emit, emit_json, timed
 
@@ -192,6 +202,87 @@ def simulator_throughput(m, bank, w2, *, horizon, n_seeds, verify_all):
         "speedup": t_python / t_compiled,
         "decisions_equal": True,  # verify_backends raised otherwise
         "verified_pairs": len(pairs),
+    }
+
+
+def compiled_adaptive_throughput(m, bank, w2, *, horizon, n_seeds):
+    """The deployable policy at scan throughput: AdaptiveController both ways.
+
+    The headline scheduler of the ``bursty`` scenario — the online
+    EWMA-estimate / hysteresis bank retuner — run over n_seeds fresh MMPP
+    traces twice: the stateful Python engine per seed, and ONE
+    run_grid_adaptive dispatch with the controller folded into the scan
+    carry (serving.compiled.AdaptiveLane).  Decision-for-decision equality
+    is certified on the first trace via verify_backends(scheduler=...),
+    per-seed weighted cost is asserted equal across backends (rtol 1e-9),
+    and the wall-clock ratio is gated at the >= 10x floor — at smoke size
+    too, so CI trips if the adaptive lane ever falls off the compiled path.
+    """
+    ctrl_kw = dict(ewma=0.15, margin=0.2, min_dwell=20.0, w2=w2)
+    traces = [
+        m.sample_arrivals(horizon, np.random.default_rng(300 + s))[0]
+        for s in range(n_seeds)
+    ]
+    means = np.array([0.0] + [float(SVC.mean(b)) for b in range(1, B_MAX + 1)])
+
+    # decision-sequence equality on the first trace (the acceptance gate):
+    # fresh controller per backend, same trace, every action compared
+    verify_backends(
+        None, traces[0], service=SVC, energy_table=EN, b_max=B_MAX,
+        scheduler=lambda: AdaptiveController(bank, **ctrl_kw),
+    )
+
+    # Python loop: one stateful engine per seed trace
+    t0 = time.perf_counter()
+    py_cost = np.empty(n_seeds)
+    py_switches = np.empty(n_seeds, dtype=np.int64)
+    for s, tr in enumerate(traces):
+        ctrl = AdaptiveController(bank, **ctrl_kw)
+        eng = ServingEngine(
+            ctrl, arrivals=TraceProcess(tr), b_max=B_MAX, service=SVC,
+            energy_table=EN,
+        )
+        rep = eng.run(n_epochs=None)
+        py_cost[s] = rep.weighted_cost(w2)
+        py_switches[s] = ctrl.n_switches
+    t_python = time.perf_counter() - t0
+
+    # one seeds-vmapped dispatch, controller in the carry (warm-up
+    # compiles, best-of-3 steady state — same discipline as "simulator")
+    lane = AdaptiveLane.from_controller(AdaptiveController(bank, **ctrl_kw))
+    arrs = pad_arrivals_batch(traces)
+    kw = dict(adaptive=lane, means=means, zeta=EN, b_max=B_MAX)
+    run_grid_adaptive(arrs, **kw)
+    t_compiled = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        g = run_grid_adaptive(arrs, **kw)
+        t_compiled = min(t_compiled, time.perf_counter() - t0)
+    c_cost = g["w_mean"] + w2 * g["power"]
+    np.testing.assert_allclose(c_cost, py_cost, rtol=1e-9)
+    np.testing.assert_array_equal(g["ad_n_switches"], py_switches)
+    events = g["events_total"]
+    speedup = t_python / t_compiled
+    assert speedup >= 10.0, (
+        f"compiled adaptive lane below the 10x floor: {speedup:.1f}x"
+    )
+    return {
+        "n_seeds": n_seeds,
+        "horizon": horizon,
+        "controller": {k: float(v) for k, v in ctrl_kw.items()},
+        "n_bank_tables": int(lane.tables.shape[0]),
+        "n_requests": int(g["n_served"].sum()),
+        "events": events,
+        "n_switches": [int(x) for x in py_switches],
+        "cost_mean": float(py_cost.mean()),
+        "t_python_s": t_python,
+        "t_compiled_s": t_compiled,
+        "events_per_sec_python": events / t_python,
+        "events_per_sec_compiled": events / t_compiled,
+        "speedup": speedup,
+        "cost_parity_rtol": 1e-9,
+        "decisions_equal": True,  # verify_backends raised otherwise
+        "meets_10x_floor": True,  # asserted above
     }
 
 
@@ -352,6 +443,20 @@ def run(smoke: bool = False, json_path: str | None = None) -> None:
         f"decisions_equal={sim['decisions_equal']}",
     )
     sections["simulator"] = sim
+    ca = compiled_adaptive_throughput(
+        m, bank, w2, horizon=horizon, n_seeds=3 if smoke else 6,
+    )
+    emit(
+        "mmpp_compiled_adaptive",
+        ca["t_compiled_s"] * 1e6,
+        f"speedup={ca['speedup']:.1f}x;"
+        f"ev/s_python={ca['events_per_sec_python']:.3g};"
+        f"ev/s_compiled={ca['events_per_sec_compiled']:.3g};"
+        f"switches={ca['n_switches']};"
+        f"cost_parity_rtol={ca['cost_parity_rtol']:g};"
+        f"decisions_equal={ca['decisions_equal']}",
+    )
+    sections["compiled_adaptive"] = ca
     gap, us = timed(
         exact_modulated_gap, m, bank, w2,
         horizon=horizon,

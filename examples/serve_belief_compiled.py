@@ -1,0 +1,159 @@
+"""Deployable-policy quickstart: belief & adaptive serving, compiled.
+
+The oracle phase scheduler needs the true MMPP phase — unobservable in
+deployment.  The two policies you could actually ship are (1) the belief
+tracker: a `PhaseBeliefFilter` posterior over phases rows a per-phase
+table stack, and (2) the adaptive retuner: an EWMA rate estimate with
+hysteresis hot-swaps tables from a solved bank.  Both historically ran
+only in the Python event loop; this example runs each one both ways and
+certifies the compiled lane decision-for-decision:
+
+  * `belief_forward_jax` precomputes the posterior for a trace in one
+    jitted scan, then `simulate_compiled(phase_mode="belief_argmax")`
+    (or ``"belief_mix"``) rows the (K, L) stack by it;
+  * `AdaptiveLane` folds the `AdaptiveController` into the scan carry and
+    `run_grid_adaptive` sweeps seed traces in one vmapped dispatch;
+  * `verify_backends(scheduler=...)` replays the Python engine against
+    the compiled kernel and asserts every batch decision matches.
+
+    PYTHONPATH=src python examples/serve_belief_compiled.py [--horizon 20000]
+"""
+import argparse
+import time
+
+import numpy as np
+
+
+def best_of(fn, n=3):
+    """Best-of-n wall clock: the first call (or two) pays jit compiles —
+    including the re-lower at the cached scan-length bucket — so the min
+    is the steady-state dispatch, same discipline as the benchmarks."""
+    t, out = float("inf"), None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        t = min(t, time.perf_counter() - t0)
+    return out, t
+
+from repro.core import GOOGLENET_P4_ENERGY, GOOGLENET_P4_LATENCY, ServiceModel, SMDPSpec, solve
+from repro.serving import (
+    AdaptiveController,
+    AdaptiveLane,
+    BeliefPhaseScheduler,
+    PhaseBeliefFilter,
+    ServingEngine,
+    SMDPSchedulerBank,
+    belief_forward_jax,
+    pad_arrivals_batch,
+    run_grid_adaptive,
+    simulate_compiled,
+    verify_backends,
+)
+from repro.serving.arrivals import MMPP2, TraceProcess
+
+B_MAX = 32
+
+
+def solve_table(lam, w2=1.0):
+    svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+    spec = SMDPSpec(
+        lam=lam, service=svc, energy=GOOGLENET_P4_ENERGY,
+        b_min=1, b_max=B_MAX, w1=1.0, w2=w2, s_max=128,
+    )
+    return solve(spec).action_table(128), svc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--horizon", type=float, default=20_000.0,
+                    help="trace horizon in ms")
+    ap.add_argument("--seeds", type=int, default=4,
+                    help="trace lanes for the adaptive grid dispatch")
+    args = ap.parse_args()
+
+    svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+    mu_max = B_MAX / float(svc.mean(B_MAX))
+    m = MMPP2(lam1=0.15 * mu_max, lam2=0.85 * mu_max,
+              dwell1=2000.0, dwell2=600.0)
+    print(f"MMPP(2): lam1={m.lam1:.3f} lam2={m.lam2:.3f} /ms, "
+          f"dwells {m.dwell1:.0f}/{m.dwell2:.0f} ms")
+
+    tab1, _ = solve_table(m.lam1)
+    tab2, _ = solve_table(m.lam2)
+    stack = np.stack([tab1, tab2])  # (K, L): one solved row per phase
+    en = np.array([0.0] + [float(GOOGLENET_P4_ENERGY(b))
+                           for b in range(1, B_MAX + 1)])
+    means = np.array([0.0] + [float(svc.mean(b))
+                              for b in range(1, B_MAX + 1)])
+    gen = [[-1 / m.dwell1, 1 / m.dwell1], [1 / m.dwell2, -1 / m.dwell2]]
+    trace, _ = m.sample_arrivals(args.horizon, np.random.default_rng(0))
+    print(f"trace: {len(trace)} arrivals over {args.horizon:.0f} ms\n")
+
+    # --- belief lane: Python filter-engine vs compiled argmax row ------
+    def belief_engine():
+        filt = PhaseBeliefFilter(rates=[m.lam1, m.lam2], gen=gen)
+        return ServingEngine(
+            BeliefPhaseScheduler(stack, filt), arrivals=TraceProcess(trace),
+            b_max=B_MAX, service=svc, energy_table=en,
+        )
+
+    t0 = time.perf_counter()
+    rep = belief_engine().run(n_epochs=None)
+    t_py = time.perf_counter() - t0
+
+    bels, _ = belief_forward_jax(
+        trace, PhaseBeliefFilter(rates=[m.lam1, m.lam2], gen=gen)
+    )
+    kw = dict(means=means, zeta=en, b_max=B_MAX)
+    res, t_c = best_of(
+        lambda: simulate_compiled(stack, trace, phase_mode="belief_argmax",
+                                  beliefs=np.asarray(bels), **kw)
+    )
+    print("belief_argmax  python: "
+          f"W={rep.latencies.mean():.3f} ms  {t_py * 1e3:.0f} ms wall")
+    print("belief_argmax compiled: "
+          f"W={res.lat_sum / res.n_served:.3f} ms  {t_c * 1e3:.1f} ms wall "
+          f"({t_py / t_c:.0f}x)")
+
+    chk = verify_backends(
+        None, trace, service=svc, energy_table=en, b_max=B_MAX,
+        scheduler=lambda: BeliefPhaseScheduler(
+            stack, PhaseBeliefFilter(rates=[m.lam1, m.lam2], gen=gen)
+        ),
+    )
+    print(f"certified: {chk['n_decisions']} decisions equal, "
+          f"max latency err {chk['max_latency_err']:.1e}\n")
+
+    # --- adaptive lane: the bank retuner in the scan carry -------------
+    bank = SMDPSchedulerBank(
+        {(m.lam1,): tab1, (m.mean_rate,): solve_table(m.mean_rate)[0],
+         (m.lam2,): tab2},
+        key_names=("lam",),
+    )
+    ctrl_kw = dict(ewma=0.15, margin=0.2, min_dwell=50.0)
+    traces = [
+        m.sample_arrivals(args.horizon, np.random.default_rng(1 + s))[0]
+        for s in range(args.seeds)
+    ]
+    t0 = time.perf_counter()
+    costs = []
+    for tr in traces:
+        eng = ServingEngine(
+            AdaptiveController(bank, **ctrl_kw), arrivals=TraceProcess(tr),
+            b_max=B_MAX, service=svc, energy_table=en,
+        )
+        costs.append(eng.run(n_epochs=None).weighted_cost(1.0))
+    t_py = time.perf_counter() - t0
+
+    lane = AdaptiveLane.from_controller(AdaptiveController(bank, **ctrl_kw))
+    arrs = pad_arrivals_batch(traces)
+    g, t_c = best_of(lambda: run_grid_adaptive(arrs, adaptive=lane, **kw))
+    np.testing.assert_allclose(g["w_mean"] + g["power"], costs, rtol=1e-9)
+    print(f"adaptive  python: {args.seeds} lanes  {t_py * 1e3:.0f} ms wall")
+    print(f"adaptive compiled: one dispatch  {t_c * 1e3:.1f} ms wall "
+          f"({t_py / t_c:.0f}x), costs equal at rtol 1e-9, "
+          f"switches/lane {[int(x) for x in g['ad_n_switches']]}")
+
+
+if __name__ == "__main__":
+    main()

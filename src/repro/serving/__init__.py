@@ -9,7 +9,16 @@ and scan-compatible jax samplers); serving.scheduler holds the policy
 tables, the solved-sweep banks (lambda x w2 x service-profile axes), and
 the online AdaptiveController; serving.metrics streams latency quantiles
 (P² on the Python path, fixed-bin histogram sketch on the compiled path),
-power, and the arrival-rate estimate.  serving.fleet routes one arrival
+power, and the arrival-rate estimate.  The *online* policies compile too:
+belief_forward_jax precomputes the MMPP posterior per trace (one jitted
+scan, draw-for-draw the Python PhaseBeliefFilter), simulate_compiled /
+run_grid select phase rows by posterior argmax or mixture
+(phase_mode="belief_argmax" / "belief_mix"), and AdaptiveLane folds the
+AdaptiveController's EWMA-estimate/hysteresis retune loop into the scan
+carry (run_grid_adaptive sweeps it over trace lanes) — so deployable,
+non-oracle policies run at jitted-scan throughput, certified
+decision-for-decision by verify_backends(scheduler=...).
+serving.fleet routes one arrival
 stream across M replicas (rr / jsq / pow2 / batch-aware routers, each
 replica with its own table) in the same compiled event kernel, streams
 billion-event horizons in O(chunk) memory (FleetStream), and sweeps the
@@ -25,6 +34,7 @@ from .arrivals import (  # noqa: F401
     PoissonProcess,
     TraceProcess,
     as_process,
+    belief_forward_jax,
 )
 from .scheduler import (  # noqa: F401
     AdaptiveController,
@@ -52,10 +62,13 @@ from .engine import (  # noqa: F401
     verify_backends,
 )
 from .compiled import (  # noqa: F401
+    PHASE_MODES,
+    AdaptiveLane,
     CompiledResult,
     pad_arrivals,
     pad_arrivals_batch,
     run_grid,
+    run_grid_adaptive,
     simulate_compiled,
 )
 from .fleet import (  # noqa: F401

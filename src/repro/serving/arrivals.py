@@ -328,6 +328,11 @@ class TraceProcess(ArrivalProcess):
         self._i = state["i"]
 
 
+# Posterior-mass floor below which a propagated belief counts as degenerate
+# (shared by the numpy filter and its jax mirror, belief_forward_jax).
+_BELIEF_TINY = 1e-300
+
+
 class PhaseBeliefFilter:
     """Forward filter for the hidden MMPP phase from observed arrivals.
 
@@ -376,14 +381,28 @@ class PhaseBeliefFilter:
         return np.real(self.belief @ e)
 
     def observe(self, t: float) -> None:
-        """Fold in one arrival at absolute time t (monotone in t)."""
+        """Fold in one arrival at absolute time t (monotone in t).
+
+        Long inter-arrival gaps drive exp((R - Lambda) gap) toward zero
+        and round-off can leave tiny negative / non-finite entries, so
+        the propagated mass is clipped and renormalized *before* the
+        rate reweighting; if the whole vector degenerates the belief
+        falls back to the stationary phase distribution instead of
+        emitting NaNs.
+        """
         gap = max(float(t) - self._last, 0.0)
-        b = self._propagate(gap) * self.rates
-        s = b.sum()
-        if not np.isfinite(s) or s <= 1e-300:
-            b = self._b0 * self.rates  # numerical underflow: soft reset
-            s = b.sum()
-        self.belief = np.clip(b / s, 0.0, None)
+        p = self._propagate(gap)
+        p = np.where(np.isfinite(p), np.clip(p, 0.0, None), 0.0)
+        s = float(p.sum())
+        if not np.isfinite(s) or s <= _BELIEF_TINY:
+            p = self._b0  # degenerate propagation: stationary fallback
+            s = float(p.sum())
+        b = (p / s) * self.rates
+        s2 = float(b.sum())
+        if not np.isfinite(s2) or s2 <= _BELIEF_TINY:
+            b = self._b0 * self.rates
+            s2 = float(b.sum())
+        self.belief = b / s2
         self._last = float(t)
         self.n_observed += 1
 
@@ -403,6 +422,86 @@ class PhaseBeliefFilter:
         self.belief = np.asarray(state["belief"], dtype=np.float64)
         self._last = state["last"]
         self.n_observed = state["n_observed"]
+
+
+_belief_fwd_jit = None
+_belief_fwd_vjit = None
+
+
+def _get_belief_fwd(batched: bool):
+    """Lazily build (and cache) the jitted belief-forward scan."""
+    global _belief_fwd_jit, _belief_fwd_vjit
+    if (_belief_fwd_vjit if batched else _belief_fwd_jit) is None:
+        import jax
+        import jax.numpy as jnp
+
+        def fwd(times, b_init, t_init, d, V, Vinv, rates, b0):
+            def step(carry, t):
+                b, last = carry
+                valid = jnp.isfinite(t)
+                gap = jnp.where(valid, jnp.maximum(t - last, 0.0), 0.0)
+                e = (V * jnp.exp(d * gap)) @ Vinv
+                p = jnp.real(b.astype(V.dtype) @ e)
+                p = jnp.where(jnp.isfinite(p), jnp.clip(p, 0.0, None), 0.0)
+                s = jnp.sum(p)
+                ok = jnp.isfinite(s) & (s > _BELIEF_TINY)
+                p = jnp.where(ok, p, b0)
+                s = jnp.where(ok, s, jnp.sum(b0))
+                bn = (p / s) * rates
+                s2 = jnp.sum(bn)
+                ok2 = jnp.isfinite(s2) & (s2 > _BELIEF_TINY)
+                bn = jnp.where(ok2, bn, b0 * rates)
+                s2 = jnp.where(ok2, s2, jnp.sum(b0 * rates))
+                bn = bn / s2
+                b_new = jnp.where(valid, bn, b)
+                last_new = jnp.where(valid, t, last)
+                return (b_new, last_new), b_new
+
+            (b_f, t_f), beliefs = jax.lax.scan(step, (b_init, t_init), times)
+            return beliefs, (b_f, t_f)
+
+        _belief_fwd_jit = jax.jit(fwd)
+        _belief_fwd_vjit = jax.jit(
+            jax.vmap(fwd, in_axes=(0,) + (None,) * 7)
+        )
+    return _belief_fwd_vjit if batched else _belief_fwd_jit
+
+
+def belief_forward_jax(times, filt: PhaseBeliefFilter):
+    """Phase-belief posteriors for a (padded) arrival-time vector, one scan.
+
+    The jitted mirror of ``PhaseBeliefFilter.observe`` — same guarded
+    op order (clip / renormalize / stationary fallback), so the rows are
+    draw-for-draw equal to folding the numpy filter over the same times.
+    The scan starts from ``filt``'s *current* (belief, last) state without
+    mutating it, which is exactly what an engine run that resumes
+    mid-stream needs.
+
+    ``times`` may be 1-D ``(N,)`` or 2-D ``(S, N)`` (a seeds axis, e.g.
+    stacked `mmpp2_times_jax` outputs); +inf / NaN padded slots keep the
+    carry unchanged and repeat the previous belief row, so padded tails
+    are harmless.  Returns ``(beliefs, (b_final, t_final))`` where
+    ``beliefs[..., i, :]`` is the posterior just after observing
+    ``times[..., i]``.  Feed ``beliefs`` straight into the compiled
+    serving lane (`serving.compiled` ``phase_mode="belief_argmax"`` /
+    ``"belief_mix"``).
+    """
+    import jax.numpy as jnp
+
+    times = jnp.asarray(times, dtype=jnp.float64)
+    if times.ndim not in (1, 2):
+        raise ValueError(f"times must be 1-D or 2-D, got shape {times.shape}")
+    fwd = _get_belief_fwd(batched=times.ndim == 2)
+    return fwd(
+        times,
+        jnp.asarray(filt.belief, dtype=jnp.float64),
+        jnp.asarray(filt._last, dtype=jnp.float64),
+        jnp.asarray(filt._d, dtype=jnp.complex128),
+        jnp.asarray(filt._V, dtype=jnp.complex128),
+        jnp.asarray(filt._Vinv, dtype=jnp.complex128),
+        jnp.asarray(filt.rates, dtype=jnp.float64),
+        jnp.asarray(filt._b0, dtype=jnp.float64),
+    )
 
 
 def take(

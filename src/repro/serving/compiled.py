@@ -208,6 +208,8 @@ class CompiledResult:
     actions: Optional[np.ndarray] = None  # (n_epochs,) batch size, 0 = wait
     serve: Optional[np.ndarray] = None  # (n_epochs,) bool
     latencies: Optional[np.ndarray] = None  # (n_served,) in service order
+    # adaptive lane only: final controller carry (engine state sync)
+    adaptive_state: Optional[dict] = None
 
     @property
     def batch_sizes(self) -> np.ndarray:
@@ -216,9 +218,113 @@ class CompiledResult:
         return self.actions[self.serve]
 
 
+@dataclasses.dataclass
+class AdaptiveLane:
+    """Host-side lowering of an `AdaptiveController` for the scan kernel.
+
+    Everything the in-carry controller needs, precomputed once: the bank
+    stacked in sorted-key order, the per-key lambda coordinate plus the
+    *pinned*-dimension squared scaled offsets (so the kernel's distance is
+    ``sqrt(((lam_i - est) / lam_scale)^2 + aux_sq_i)`` — the same scaled
+    Euclidean metric as `SMDPSchedulerBank.distances` over the
+    {lam, **fixed} coordinate set), the EWMA constants, and the initial
+    carry state extracted from the live controller (so a mid-stream engine
+    run resumes exactly).  Window-mode estimators have no O(1) carry and
+    stay on the Python backend.
+    """
+
+    tables: np.ndarray  # (P, K, L) bank stack, sorted-key order
+    lam_keys: np.ndarray  # (P,) lambda coordinate per key
+    aux_sq: np.ndarray  # (P,) pinned-dims squared scaled distance
+    inv_scale: float  # 1 / lambda-dimension scale
+    ewma: float
+    margin: float
+    min_dwell: float
+    min_gap: float
+    init_est: float  # estimator rate before any gap (NaN if none)
+    sel0: int  # initial bank entry (index into sorted keys)
+    gap_bar0: float  # NaN when the estimator has no gap average yet
+    have_gap_bar0: bool
+    last0: float  # NaN when no arrival observed yet
+    have_last0: bool
+    last_switch0: float
+    n_switches0: int
+
+    @classmethod
+    def from_controller(cls, ctrl) -> "AdaptiveLane":
+        est = ctrl.estimator
+        if getattr(est, "window", None) is not None:
+            raise TypeError(
+                "compiled adaptive lane needs an EWMA RateEstimator; "
+                "window-mode estimators stay on the Python backend"
+            )
+        bank = ctrl.bank
+        unknown = set(ctrl.fixed) - set(bank.key_names)
+        if unknown:
+            raise ValueError(
+                f"unknown key dims {unknown}; have {bank.key_names}"
+            )
+        _, stacked = bank.stacked()
+        if stacked.ndim == 2:
+            stacked = stacked[:, None, :]
+        i_lam = bank.key_names.index("lam")
+        pts, scales = bank._pts, bank._scales
+        aux = np.zeros(len(pts))
+        for i, name in enumerate(bank.key_names):
+            if i != i_lam and name in ctrl.fixed:
+                aux += ((pts[:, i] - ctrl.fixed[name]) / scales[i]) ** 2
+        gap_bar = est._gap_bar
+        last = est._last
+        return cls(
+            tables=stacked,
+            lam_keys=pts[:, i_lam].copy(),
+            aux_sq=aux,
+            inv_scale=1.0 / float(scales[i_lam]),
+            ewma=float(est.ewma),
+            margin=float(ctrl.margin),
+            min_dwell=float(ctrl.min_dwell),
+            min_gap=float(est.min_gap),
+            init_est=(
+                float(est._init_rate) if est._init_rate else float("nan")
+            ),
+            sel0=int(bank._key_index[ctrl.key]),
+            gap_bar0=float("nan") if gap_bar is None else float(gap_bar),
+            have_gap_bar0=gap_bar is not None,
+            last0=float("nan") if last is None else float(last),
+            have_last0=last is not None,
+            last_switch0=float(ctrl._last_switch),
+            n_switches0=int(ctrl.n_switches),
+        )
+
+    def lowered(self):
+        """The ``adap`` pytree `_scan_core` consumes (constants + carry0)."""
+        i64 = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+        state0 = (
+            jnp.asarray(self.gap_bar0, dtype=jnp.float64),
+            jnp.asarray(self.have_gap_bar0),
+            jnp.asarray(self.last0, dtype=jnp.float64),
+            jnp.asarray(self.have_last0),
+            jnp.asarray(self.sel0, dtype=i64),
+            jnp.asarray(self.last_switch0, dtype=jnp.float64),
+            jnp.asarray(self.n_switches0, dtype=i64),
+        )
+        return (
+            jnp.asarray(self.lam_keys, dtype=jnp.float64),
+            jnp.asarray(self.aux_sq, dtype=jnp.float64),
+            jnp.asarray(self.inv_scale, dtype=jnp.float64),
+            jnp.asarray(self.ewma, dtype=jnp.float64),
+            jnp.asarray(self.margin, dtype=jnp.float64),
+            jnp.asarray(self.min_dwell, dtype=jnp.float64),
+            jnp.asarray(self.min_gap, dtype=jnp.float64),
+            jnp.asarray(self.init_est, dtype=jnp.float64),
+            state0,
+        )
+
+
 def _scan_core(
-    table, arrivals, deadlines, phases, draws, means, zeta, edges,
-    t0, horizon, max_eps, drain, b_max, *, n_steps: int, record: bool,
+    table, arrivals, deadlines, phases, beliefs, draws, means, zeta, edges,
+    t0, horizon, max_eps, drain, b_max, adap=None,
+    *, n_steps: int, record: bool, mix: bool = False, adaptive: bool = False,
 ):
     """The event kernel: one scan step == one admission OR one epoch.
 
@@ -228,6 +334,24 @@ def _scan_core(
     and ``phases`` the per-arrival phase ints aligned with ``arrivals``;
     the active row is the phase of the last admitted arrival — the Python
     engine's oracle-phase discipline (phase updates on admission).
+
+    Two static knobs widen the lane to *online* (non-oracle) policies:
+
+      * ``mix=True`` — belief-mixture action rule: instead of one phase
+        row, the decision is ``round(sum_k beliefs[last_adm, k] *
+        table[k, min(q, L-1)])`` with ``beliefs`` the (size, K) posterior
+        rows aligned with ``arrivals`` (arrivals.belief_forward_jax) —
+        the compiled `BeliefPhaseScheduler(mode="mix")`.  (The argmax
+        rule needs no kernel support: it is just ``phases =
+        argmax(beliefs)`` through the oracle plumbing.)
+      * ``adaptive=True`` — ``table`` grows a leading bank axis
+        (P, K, L) and the carry gains the AdaptiveController state (EWMA
+        gap estimate, selected entry, hysteresis clock).  Each admission
+        folds its arrival into the estimate and may retune ``sel`` —
+        guarded by the relative margin and min-dwell exactly as
+        `scheduler.AdaptiveController._maybe_retune` — so the bank
+        retunes live inside the scan.  ``adap`` packs the lowered
+        constants + initial state (`AdaptiveLane.carry()`).
 
     Two throughput-critical choices:
 
@@ -254,8 +378,12 @@ def _scan_core(
     n_draws = draws.shape[0]
     i64 = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
 
+    if adaptive:
+        (lam_keys, aux_sq, inv_scale, ad_ewma, ad_margin, ad_min_dwell,
+         ad_min_gap, ad_init_est, ad_state0) = adap
+
     def step(carry, _):
-        t, n_srv, n_adm, n_bat, n_eps, n_used, done = carry
+        (t, n_srv, n_adm, n_bat, n_eps, n_used, done), ad = carry
         active = jnp.logical_not(done) & (n_eps < max_eps)
         # arrivals due by `now` are admitted before any decision is taken,
         # up to _ADMIT_W per step (they are a prefix of the sorted window;
@@ -266,11 +394,57 @@ def _scan_core(
         admit = active & (n_due > 0)
         dec = active & ~admit
         q = n_adm - n_srv
+        if adaptive:
+            # fold each admitted arrival of this step into the controller
+            # state, in time order — an unrolled masked pass over the
+            # admission window, one EWMA update + hysteresis-guarded
+            # retune per arrival, mirroring observe_arrival exactly
+            gap_bar, have_gb, last_obs, have_last, sel, last_sw, n_sw = ad
+            for j in range(_ADMIT_W):
+                t_j = window[j]
+                m = admit & (j < n_due)
+                gap = jnp.maximum(t_j - last_obs, ad_min_gap)
+                upd = m & have_last
+                gb_new = jnp.where(
+                    have_gb, (1.0 - ad_ewma) * gap_bar + ad_ewma * gap, gap
+                )
+                gap_bar = jnp.where(upd, gb_new, gap_bar)
+                have_gb = have_gb | upd
+                last_obs = jnp.where(m, t_j, last_obs)
+                have_last = have_last | m
+                est = jnp.where(
+                    have_gb,
+                    1.0 / jnp.maximum(gap_bar, ad_min_gap),
+                    ad_init_est,
+                )
+                dist = jnp.sqrt(((lam_keys - est) * inv_scale) ** 2 + aux_sq)
+                cand = jnp.argmin(dist).astype(i64)
+                switch = (
+                    m
+                    & (t_j - last_sw >= ad_min_dwell)
+                    & jnp.isfinite(est)
+                    & (cand != sel)
+                    & (dist[cand] < (1.0 - ad_margin) * dist[sel])
+                )
+                n_sw = n_sw + switch.astype(i64)
+                last_sw = jnp.where(switch, t_j, last_sw)
+                sel = jnp.where(switch, cand, sel)
+            ad = (gap_bar, have_gb, last_obs, have_last, sel, last_sw, n_sw)
+            tab_kl = table[sel]  # the live bank entry, (K, L)
+        else:
+            tab_kl = table
         # phase of the last admitted arrival (before any admission this
         # reads the first arrival's phase; the queue is empty there, so
         # the decision is a forced wait whatever the row)
-        ph = phases[jnp.clip(n_adm - 1, 0, size - 1)]
-        a = table[ph, jnp.minimum(q, L - 1)]
+        last_i = jnp.clip(n_adm - 1, 0, size - 1)
+        if mix:
+            # belief-mixture action: posterior-weighted blend of the
+            # per-phase actions, rounded — BeliefPhaseScheduler(mode="mix")
+            a = jnp.round(
+                jnp.sum(beliefs[last_i] * tab_kl[:, jnp.minimum(q, L - 1)])
+            ).astype(i64)
+        else:
+            a = tab_kl[phases[last_i], jnp.minimum(q, L - 1)]
         a = jnp.clip(a, 0, jnp.minimum(q, b_max))
         live = jnp.isfinite(nxt)
         wait = dec & (a == 0) & live
@@ -283,7 +457,7 @@ def _scan_core(
         svc = means[a] * draws[jnp.minimum(n_bat, n_draws - 1)]
         t_done = t + svc
         t_next = jnp.where(wait, nxt, jnp.where(serve, t_done, t))
-        carry = (
+        carry = ((
             t_next,
             n_srv + a,
             n_adm + jnp.where(admit, n_due, 0),
@@ -291,7 +465,7 @@ def _scan_core(
             n_eps + dec.astype(i64),
             n_used + active.astype(i64),
             done | term,
-        )
+        ), ad)
         # (a > 0) <=> serve, so the aggregate path only needs (a, t_done) —
         # energy is summed from a_seq after the scan; the decision flag is
         # recorded only for the equivalence harness
@@ -299,14 +473,14 @@ def _scan_core(
         return carry, ((a32, dec, t_done) if record else (a32, t_done))
 
     zero = jnp.asarray(0, dtype=i64)
-    carry0 = (
+    carry0 = ((
         jnp.asarray(t0, dtype=jnp.float64),
         zero, zero, zero, zero, zero,
         jnp.asarray(False),
-    )
+    ), ad_state0 if adaptive else None)
     carry, outs = jax.lax.scan(step, carry0, None, length=n_steps, unroll=4)
     a_seq, tdone_seq = (outs[0], outs[2]) if record else outs
-    t, n_srv, n_adm, n_bat, n_eps, n_used, done = carry
+    (t, n_srv, n_adm, n_bat, n_eps, n_used, done), ad_final = carry
 
     # --- vectorized per-request reconstruction (one pass, no scan) -------
     # request slot j was completed by the serve step whose request interval
@@ -339,16 +513,55 @@ def _scan_core(
         "incomplete": jnp.logical_not(done) & (n_eps < max_eps),
         "energy": energy, "lat_sum": lat_sum, "slo_miss": miss, "hist": hist,
     }
+    if adaptive:
+        # final controller state (for the engine's post-run state sync)
+        gap_bar, have_gb, last_obs, have_last, sel, last_sw, n_sw = ad_final
+        agg.update(
+            ad_gap_bar=gap_bar, ad_have_gap_bar=have_gb, ad_last=last_obs,
+            ad_have_last=have_last, ad_sel=sel, ad_last_switch=last_sw,
+            ad_n_switches=n_sw,
+        )
     return (agg, (a_seq, outs[1], lat, valid)) if record else agg
 
 
-@partial(jax.jit, static_argnames=("n_steps", "record"))
-def _simulate_jit(table, arrivals, deadlines, phases, draws, means, zeta,
-                  edges, t0, horizon, max_eps, drain, b_max, n_steps, record):
+#: the phase_mode knob shared by simulate_compiled / run_grid / fleet:
+#: "oracle" rows tables by the per-arrival true-phase ints, the belief
+#: modes by the filtered posterior (argmax row / mixture action)
+PHASE_MODES = ("oracle", "belief_argmax", "belief_mix")
+
+
+def _check_phase_mode(phase_mode: str, beliefs, n_phases: int):
+    """Validate the phase_mode / beliefs pairing; returns belief ndarray."""
+    if phase_mode not in PHASE_MODES:
+        raise ValueError(f"phase_mode must be one of {PHASE_MODES}")
+    if phase_mode == "oracle":
+        if beliefs is not None:
+            raise ValueError('beliefs= needs phase_mode="belief_*"')
+        return None
+    if beliefs is None:
+        raise ValueError(f'phase_mode="{phase_mode}" needs beliefs=')
+    bel = np.asarray(beliefs, dtype=np.float64)
+    if bel.shape[-1] != n_phases:
+        raise ValueError(
+            f"beliefs K={bel.shape[-1]} != table phase axis K={n_phases}"
+        )
+    return bel
+
+
+def _coerce_adaptive(adaptive) -> Optional[AdaptiveLane]:
+    if adaptive is None or isinstance(adaptive, AdaptiveLane):
+        return adaptive
+    return AdaptiveLane.from_controller(adaptive)
+
+
+@partial(jax.jit, static_argnames=("n_steps", "record", "mix", "adaptive"))
+def _simulate_jit(table, arrivals, deadlines, phases, beliefs, draws, means,
+                  zeta, edges, t0, horizon, max_eps, drain, b_max, adap,
+                  n_steps, record, mix, adaptive):
     return _scan_core(
-        table, arrivals, deadlines, phases, draws, means, zeta, edges,
-        t0, horizon, max_eps, drain, b_max,
-        n_steps=n_steps, record=record,
+        table, arrivals, deadlines, phases, beliefs, draws, means, zeta,
+        edges, t0, horizon, max_eps, drain, b_max, adap,
+        n_steps=n_steps, record=record, mix=mix, adaptive=adaptive,
     )
 
 
@@ -366,6 +579,9 @@ def simulate_compiled(
     drain: bool = True,
     deadlines=None,
     phases=None,
+    phase_mode: str = "oracle",
+    beliefs=None,
+    adaptive=None,
     hist_edges=None,
     record: bool = False,
     max_record_slots: Optional[int] = None,
@@ -378,10 +594,25 @@ def simulate_compiled(
     of size a is ``means[a] * draws[n_batches_so_far]`` — exactly one draw
     consumed per serve epoch, matching the Python engine's rng discipline.
 
-    ``table`` may be a (K, L) phase-indexed stack; then ``phases`` (the
-    per-arrival phase ints, raw or pre-padded alongside ``arrivals``) is
-    required and the kernel selects the row by the phase of the last
-    admitted arrival (the phase-indexed compiled lane).
+    ``table`` may be a (K, L) phase-indexed stack; who selects the row is
+    the ``phase_mode`` knob:
+
+      * ``"oracle"`` (default) — ``phases`` per-arrival true-phase ints
+        (raw or pre-padded alongside ``arrivals``); the row is the phase
+        of the last admitted arrival.
+      * ``"belief_argmax"`` — ``beliefs`` (N, K) posterior rows aligned
+        with ``arrivals`` (arrivals.belief_forward_jax); the argmax phase
+        rows the stack: the compiled `BeliefPhaseScheduler`.
+      * ``"belief_mix"`` — same ``beliefs``, but the action is the
+        posterior-weighted mixture ``round(sum_k b_k table[k, q])``
+        (`BeliefPhaseScheduler(mode="mix")`).
+
+    ``adaptive`` (an `AdaptiveLane` or the `AdaptiveController` to lower)
+    runs the bank-retuning controller *inside* the scan carry: ``table``
+    may then be None (the lane's (P, K, L) bank stack is used) and the
+    result carries ``adaptive_state`` — the final controller carry — for
+    exact engine state sync.  Composes with any phase_mode (the phase axis
+    rows each bank entry).
 
     ``record=True`` materializes per-step trace buffers (actions,
     latencies) sized to the scan length.  That escalation is capped at
@@ -390,21 +621,59 @@ def simulate_compiled(
     horizons stream aggregates in O(chunk) memory with
     `serving.fleet.FleetStream` / `simulate_fleet_stream` instead.
     """
-    table = np.asarray(table, dtype=np.int64)
-    if table.ndim == 1:
-        table = table[None]
-    elif table.ndim != 2:
-        raise ValueError(f"table must be (L,) or (K, L); got {table.shape}")
-    if table.shape[0] > 1 and phases is None:
+    lane = _coerce_adaptive(adaptive)
+    if lane is not None:
+        table = lane.tables if table is None else np.asarray(
+            table, dtype=np.int64
+        )
+        if table.ndim == 2:
+            table = table[:, None, :]
+        elif table.ndim != 3:
+            raise ValueError(
+                f"adaptive tables must be (P, L) or (P, K, L); "
+                f"got {table.shape}"
+            )
+    else:
+        table = np.asarray(table, dtype=np.int64)
+        if table.ndim == 1:
+            table = table[None]
+        elif table.ndim != 2:
+            raise ValueError(
+                f"table must be (L,) or (K, L); got {table.shape}"
+            )
+    n_phases = table.shape[-2]
+    bel = _check_phase_mode(phase_mode, beliefs, n_phases)
+    if bel is not None:
+        if phases is not None:
+            raise ValueError("phases= and beliefs= are mutually exclusive")
+        if bel.ndim != 2:
+            raise ValueError(f"beliefs must be (N, K); got {bel.shape}")
+    elif n_phases > 1 and phases is None and lane is None:
         raise ValueError("phase-indexed table needs phases= per arrival")
     arr = np.asarray(arrivals, dtype=np.float64)
+    if bel is not None and len(bel) != len(arr):
+        raise ValueError("beliefs must align with arrivals")
+    if phase_mode == "belief_argmax":
+        # the argmax rule is just an oracle-phase stream derived from the
+        # posterior: reuse the whole phases plumbing, no kernel change
+        phases = np.argmax(bel, axis=-1)
+        bel = None
+    mix = phase_mode == "belief_mix"
     if len(arr) < _ADMIT_W or not np.isinf(arr[-_ADMIT_W:]).all():
-        padded = pad_arrivals(arr, deadlines, phases=phases)
+        raw = arr
+        padded = pad_arrivals(raw, deadlines, phases=phases)
         if phases is None:
             arr, dl = padded
             ph = np.zeros(len(arr), dtype=np.int64)
         else:
             arr, dl, ph = padded
+        if bel is not None:
+            # co-sort/pad the posterior rows exactly like pad_arrivals
+            finite = np.isfinite(raw)
+            kept = bel[finite]
+            order = np.argsort(raw[finite], kind="stable")
+            bel = np.zeros((len(arr), bel.shape[1]))
+            bel[: len(kept)] = kept[order]
     else:
         dl = (
             np.asarray(deadlines, dtype=np.float64)
@@ -418,9 +687,9 @@ def simulate_compiled(
         )
         if len(ph) != len(arr):
             raise ValueError("padded phases must align with arrivals")
-    if phases is not None and (ph.min() < 0 or ph.max() >= table.shape[0]):
+    if phases is not None and (ph.min() < 0 or ph.max() >= n_phases):
         raise ValueError(
-            f"phases outside the table stack [0, {table.shape[0]})"
+            f"phases outside the table stack [0, {n_phases})"
         )
     n_arr = int(np.sum(np.isfinite(arr)))
     if max_epochs is None:
@@ -447,8 +716,12 @@ def simulate_compiled(
     # n_arr + max_eps + 1 is a hard upper bound: every step admits one of
     # n_arr arrivals or consumes one of max_eps epochs).
     cap = _bucket(n_arr + max_eps + 1)
-    ck = ("single", len(arr), table.shape, cap)
+    ck = ("single", len(arr), table.shape, cap, mix, lane is not None)
     n_steps = _initial_steps(ck, n_arr, max_eps, cap)
+    bel_j = (
+        jnp.zeros((1, 1)) if bel is None else jnp.asarray(bel)
+    )  # unused unless mix
+    adap_j = None if lane is None else lane.lowered()
     if record:
         slots = (
             MAX_RECORD_SLOTS if max_record_slots is None
@@ -465,10 +738,11 @@ def simulate_compiled(
     while True:
         out = _simulate_jit(
             jnp.asarray(table), jnp.asarray(arr), jnp.asarray(dl),
-            jnp.asarray(ph), jnp.asarray(draws), jnp.asarray(means),
+            jnp.asarray(ph), bel_j, jnp.asarray(draws), jnp.asarray(means),
             jnp.asarray(zeta_a), jnp.asarray(edges),
             float(t0), np.inf if horizon is None else float(horizon),
-            max_eps, bool(drain), int(b_max), int(n_steps), bool(record),
+            max_eps, bool(drain), int(b_max), adap_j, int(n_steps),
+            bool(record), mix, lane is not None,
         )
         agg = out[0] if record else out
         if n_steps >= cap or not bool(agg["incomplete"]):
@@ -498,6 +772,16 @@ def simulate_compiled(
         hist=agg["hist"],
         hist_edges=edges,
     )
+    if lane is not None:
+        res.adaptive_state = {
+            "sel": int(agg["ad_sel"]),
+            "gap_bar": float(agg["ad_gap_bar"]),
+            "have_gap_bar": bool(agg["ad_have_gap_bar"]),
+            "last": float(agg["ad_last"]),
+            "have_last": bool(agg["ad_have_last"]),
+            "last_switch": float(agg["ad_last_switch"]),
+            "n_switches": int(agg["ad_n_switches"]),
+        }
     if record:
         acts, dec, lat, valid = (np.asarray(x) for x in rec)
         res.actions = acts[dec].astype(np.int64)  # one entry per epoch
@@ -506,18 +790,35 @@ def simulate_compiled(
     return res
 
 
-@partial(jax.jit, static_argnames=("n_steps",))
-def _grid_jit(tables, arrivals, deadlines, phases, draws, means, zeta, edges,
-              t0, horizon, max_eps, drain, b_max, n_steps):
-    def one(arr, dl, ph, dr):
+@partial(jax.jit, static_argnames=("n_steps", "mix"))
+def _grid_jit(tables, arrivals, deadlines, phases, beliefs, draws, means,
+              zeta, edges, t0, horizon, max_eps, drain, b_max, n_steps, mix):
+    def one(arr, dl, ph, bel, dr):
         return jax.vmap(
             lambda tab: _scan_core(
-                tab, arr, dl, ph, dr, means, zeta, edges, t0, horizon,
+                tab, arr, dl, ph, bel, dr, means, zeta, edges, t0, horizon,
                 max_eps, drain, b_max, n_steps=n_steps, record=False,
+                mix=mix,
             )
         )(tables)
 
-    return jax.vmap(one)(arrivals, deadlines, phases, draws)
+    return jax.vmap(one)(arrivals, deadlines, phases, beliefs, draws)
+
+
+@partial(jax.jit, static_argnames=("n_steps", "mix"))
+def _grid_adaptive_jit(tables, arrivals, deadlines, phases, beliefs, draws,
+                       means, zeta, edges, t0, horizon, max_eps, drain,
+                       b_max, adap, n_steps, mix):
+    # the bank stack is the whole policy axis here (the controller selects
+    # among its P entries live), so the vmap runs over trace lanes only
+    def one(arr, dl, ph, bel, dr):
+        return _scan_core(
+            tables, arr, dl, ph, bel, dr, means, zeta, edges, t0, horizon,
+            max_eps, drain, b_max, adap, n_steps=n_steps, record=False,
+            mix=mix, adaptive=True,
+        )
+
+    return jax.vmap(one)(arrivals, deadlines, phases, beliefs, draws)
 
 
 def run_grid(
@@ -534,6 +835,8 @@ def run_grid(
     drain: bool = True,
     deadlines=None,
     phases=None,
+    phase_mode: str = "oracle",
+    beliefs=None,
     hist_edges=None,
 ):
     """The vmapped sweep: (seeds x scenarios) traces x policy tables.
@@ -545,6 +848,13 @@ def run_grid(
     ``arrivals`` — (S, N) padded sorted traces (pad_arrivals per trace,
     common N); ``draws`` — (S, D) unit service draws per trace lane (ones
     for det service).
+
+    ``phase_mode`` selects who rows the phase axis: ``"oracle"`` (the
+    ``phases`` ints), or the belief lanes with ``beliefs`` = (S, N, K)
+    posterior rows per trace (arrivals.belief_forward_jax over the padded
+    batch) — ``"belief_argmax"`` rows by the MAP phase, ``"belief_mix"``
+    blends the per-phase actions by the posterior.  This is the deployable
+    (non-oracle) policy sweep at the same compiled throughput.
 
     One jitted dispatch returns dict of (S, P) aggregate arrays plus the
     (S, P, n_bins + 2) histogram sketch: everything a bank comparison needs
@@ -559,12 +869,25 @@ def run_grid(
         raise ValueError(
             f"tables must be (P, L) or (P, K, L); got {tables.shape}"
         )
-    if tables.shape[1] > 1 and phases is None:
-        raise ValueError("phase-indexed tables need phases= (S, N) ints")
     if arr.ndim != 2:
         raise ValueError("run_grid wants (S, N) arrivals")
     if arr.shape[1] < _ADMIT_W or not np.isinf(arr[:, -_ADMIT_W:]).all():
         raise ValueError("pad each trace with pad_arrivals first")
+    bel = _check_phase_mode(phase_mode, beliefs, tables.shape[1])
+    if bel is not None:
+        if phases is not None:
+            raise ValueError("phases= and beliefs= are mutually exclusive")
+        if bel.ndim != 3 or bel.shape[:2] != arr.shape:
+            raise ValueError(
+                f"beliefs must be (S, N, K) aligned with arrivals "
+                f"{arr.shape}; got {bel.shape}"
+            )
+        if phase_mode == "belief_argmax":
+            phases = np.argmax(bel, axis=-1)
+            bel = None
+    elif tables.shape[1] > 1 and phases is None:
+        raise ValueError("phase-indexed tables need phases= (S, N) ints")
+    mix = phase_mode == "belief_mix"
     dl = (
         np.asarray(deadlines, dtype=np.float64)
         if deadlines is not None
@@ -598,15 +921,18 @@ def run_grid(
         else np.asarray(hist_edges, dtype=np.float64)
     )
     cap = _bucket(n_arr_max + max_eps + 1)
-    ck = ("grid", arr.shape, tables.shape, cap)
+    ck = ("grid", arr.shape, tables.shape, cap, mix)
     n_steps = _initial_steps(ck, n_arr_max, max_eps, cap)
+    bel_j = (
+        jnp.zeros((arr.shape[0], 1, 1)) if bel is None else jnp.asarray(bel)
+    )  # unused unless mix
     while True:
         out = _grid_jit(
             jnp.asarray(tables), jnp.asarray(arr), jnp.asarray(dl),
-            jnp.asarray(ph), jnp.asarray(draws), jnp.asarray(means),
+            jnp.asarray(ph), bel_j, jnp.asarray(draws), jnp.asarray(means),
             jnp.asarray(zeta_a), jnp.asarray(edges),
             float(t0), np.inf if horizon is None else float(horizon),
-            max_eps, bool(drain), int(b_max), int(n_steps),
+            max_eps, bool(drain), int(b_max), int(n_steps), mix,
         )
         if n_steps >= cap or not bool(np.asarray(out["incomplete"]).any()):
             break
@@ -614,6 +940,11 @@ def run_grid(
     _NSTEPS_CACHE[ck] = min(
         _bucket(int(np.asarray(out["n_steps_used"]).max()) + 1), cap
     )
+    return _grid_post(out, edges, t0, zeta is not None)
+
+
+def _grid_post(out, edges, t0, have_energy):
+    """Host-side aggregate post-processing shared by the grid entries."""
     out = {k: np.asarray(v) for k, v in out.items()}
     out["hist_edges"] = edges
     with np.errstate(invalid="ignore", divide="ignore"):
@@ -627,7 +958,6 @@ def run_grid(
         )
         # same convention as the engine's have_energy flag: a lane with no
         # energy source or no served batch reports NaN power, not 0
-        have_energy = zeta is not None
         out["power"] = np.where(
             have_energy & (out["n_batches"] > 0) & (span > 0),
             out["energy"] / span,
@@ -639,3 +969,111 @@ def run_grid(
             out["n_served"].sum() + out["n_epochs"].sum()
         )
     return out
+
+
+def run_grid_adaptive(
+    arrivals,
+    *,
+    adaptive,
+    means,
+    zeta=None,
+    draws=None,
+    b_max: int,
+    max_epochs: Optional[int] = None,
+    t0: float = 0.0,
+    horizon: Optional[float] = None,
+    drain: bool = True,
+    deadlines=None,
+    phases=None,
+    phase_mode: str = "oracle",
+    beliefs=None,
+    hist_edges=None,
+):
+    """Seeds-vmapped adaptive dispatch: one controller config, S traces.
+
+    The adaptive analogue of `run_grid`: every trace lane runs the
+    in-carry `AdaptiveController` (``adaptive`` — an `AdaptiveLane` or the
+    controller to lower) over the *whole* bank stack, retuning live, so
+    the policy axis collapses into the carry and the vmap covers trace
+    lanes only.  Each lane starts from the controller's current state —
+    fresh controllers per seed, the replication-sweep semantics.  Returns
+    the same dict as `run_grid` with (S,) aggregates plus the final
+    per-lane controller state (``ad_*`` keys).  ``phase_mode`` /
+    ``beliefs`` / ``phases`` row the bank entries' phase axis exactly as
+    in `run_grid` (e.g. a belief-tracked phase row on top of bank
+    retuning = AdaptiveController(phase_filter=...)).
+    """
+    lane = _coerce_adaptive(adaptive)
+    tables = lane.tables
+    arr = np.asarray(arrivals, dtype=np.float64)
+    if arr.ndim != 2:
+        raise ValueError("run_grid_adaptive wants (S, N) arrivals")
+    if arr.shape[1] < _ADMIT_W or not np.isinf(arr[:, -_ADMIT_W:]).all():
+        raise ValueError("pad each trace with pad_arrivals first")
+    bel = _check_phase_mode(phase_mode, beliefs, tables.shape[1])
+    if bel is not None:
+        if phases is not None:
+            raise ValueError("phases= and beliefs= are mutually exclusive")
+        if bel.ndim != 3 or bel.shape[:2] != arr.shape:
+            raise ValueError(
+                f"beliefs must be (S, N, K) aligned with arrivals "
+                f"{arr.shape}; got {bel.shape}"
+            )
+        if phase_mode == "belief_argmax":
+            phases = np.argmax(bel, axis=-1)
+            bel = None
+    mix = phase_mode == "belief_mix"
+    dl = (
+        np.asarray(deadlines, dtype=np.float64)
+        if deadlines is not None
+        else np.full_like(arr, np.inf)
+    )
+    if phases is not None:
+        ph = np.asarray(phases, dtype=np.int64)
+        if ph.shape != arr.shape:
+            raise ValueError(f"phases shape {ph.shape} != arrivals {arr.shape}")
+        if ph.min() < 0 or ph.max() >= tables.shape[1]:
+            raise ValueError(
+                f"phases outside the table stack [0, {tables.shape[1]})"
+            )
+    else:
+        ph = np.zeros(arr.shape, dtype=np.int64)
+    means = np.asarray(means, dtype=np.float64)
+    zeta_a = (
+        np.zeros(b_max + 1)
+        if zeta is None
+        else np.asarray(zeta, dtype=np.float64).copy()
+    )
+    zeta_a[0] = 0.0
+    if draws is None:
+        draws = np.ones((arr.shape[0], 1))
+    draws = np.asarray(draws, dtype=np.float64)
+    n_arr_max = int(np.isfinite(arr).sum(axis=1).max())
+    max_eps = 2 * n_arr_max + 2 if max_epochs is None else int(max_epochs)
+    edges = (
+        default_hist_edges(means)
+        if hist_edges is None
+        else np.asarray(hist_edges, dtype=np.float64)
+    )
+    cap = _bucket(n_arr_max + max_eps + 1)
+    ck = ("grid_adaptive", arr.shape, tables.shape, cap, mix)
+    n_steps = _initial_steps(ck, n_arr_max, max_eps, cap)
+    bel_j = (
+        jnp.zeros((arr.shape[0], 1, 1)) if bel is None else jnp.asarray(bel)
+    )
+    adap_j = lane.lowered()
+    while True:
+        out = _grid_adaptive_jit(
+            jnp.asarray(tables), jnp.asarray(arr), jnp.asarray(dl),
+            jnp.asarray(ph), bel_j, jnp.asarray(draws), jnp.asarray(means),
+            jnp.asarray(zeta_a), jnp.asarray(edges),
+            float(t0), np.inf if horizon is None else float(horizon),
+            max_eps, bool(drain), int(b_max), adap_j, int(n_steps), mix,
+        )
+        if n_steps >= cap or not bool(np.asarray(out["incomplete"]).any()):
+            break
+        n_steps = min(2 * n_steps, cap)
+    _NSTEPS_CACHE[ck] = min(
+        _bucket(int(np.asarray(out["n_steps_used"]).max()) + 1), cap
+    )
+    return _grid_post(out, edges, t0, zeta is not None)

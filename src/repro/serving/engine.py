@@ -390,26 +390,50 @@ class ServingEngine:
         drain: bool,
         unit_draws: Optional[np.ndarray] = None,
     ) -> EngineReport:
-        from .compiled import simulate_compiled
-        from .scheduler import as_action_table
+        from .arrivals import belief_forward_jax
+        from .compiled import AdaptiveLane, simulate_compiled
+        from .scheduler import (
+            AdaptiveController, BeliefPhaseScheduler, as_action_table,
+        )
 
         if self.energy_model is not None and self.energy_table is None:
             raise ValueError(
                 "compiled backend accounts energy via energy_table=; "
                 "per-batch energy_model callbacks need backend='python'"
             )
-        table = as_action_table(self.scheduler, self.b_max)
-        # phase-indexed stacks need the per-arrival phase stream: the
-        # scheduler provides it (oracle switch trace via phase_at, or the
-        # pinned phase of a plain 2-D SMDP table)
+        # online-adaptive schedulers lower to the compiled belief/adaptive
+        # lanes: the bank-retuning controller runs inside the scan carry
+        # (AdaptiveLane), the phase posterior is precomputed per trace
+        # (belief_forward_jax) — both resumed from the live object's
+        # current state and synced back after the run
+        sched = self.scheduler
+        lane = None
+        belief_filter = None
+        belief_mode = "argmax"
         phase_fn = None
-        if table.ndim == 2:
-            phase_fn = getattr(self.scheduler, "phase_at", None)
-            if phase_fn is None:
-                raise TypeError(
-                    f"{type(self.scheduler).__name__} has a phase-indexed "
-                    "table but no phase_at(times); run backend='python'"
-                )
+        if isinstance(sched, AdaptiveController):
+            lane = AdaptiveLane.from_controller(sched)
+            table = None
+            belief_filter = sched.phase_filter
+            if belief_filter is None and lane.tables.shape[1] > 1:
+                # phase-axis bank without a filter: the pinned phase row
+                phase_fn = sched.scheduler.phase_at
+        elif isinstance(sched, BeliefPhaseScheduler):
+            table = sched.tables
+            belief_filter = sched.filter
+            belief_mode = sched.mode
+        else:
+            table = as_action_table(sched, self.b_max)
+            # phase-indexed stacks need the per-arrival phase stream: the
+            # scheduler provides it (oracle switch trace via phase_at, or
+            # the pinned phase of a plain 2-D SMDP table)
+            if table.ndim == 2:
+                phase_fn = getattr(sched, "phase_at", None)
+                if phase_fn is None:
+                    raise TypeError(
+                        f"{type(sched).__name__} has a phase-indexed "
+                        "table but no phase_at(times); run backend='python'"
+                    )
         means = np.asarray(
             [0.0]
             + [float(self.service.mean(b)) for b in range(1, self.b_max + 1)]
@@ -449,20 +473,33 @@ class ServingEngine:
                 ]
             )
             # recomputed every escalation pass: extended streams get their
-            # phases from the same (stateful) trace the python path reads
+            # phases from the same (stateful) trace the python path reads,
+            # and the belief rows from the filter's unchanged start state
             ph = None if phase_fn is None else phase_fn(times)
+            bel = None
+            pm = "oracle"
+            if belief_filter is not None:
+                bel_rows, _ = belief_forward_jax(times, belief_filter)
+                bel = np.asarray(bel_rows)
+                pm = (
+                    "belief_mix" if belief_mode == "mix" else "belief_argmax"
+                )
             res = simulate_compiled(
                 table, times,
                 means=means, zeta=self.energy_table, draws=draws,
                 b_max=self.b_max, max_epochs=budget, t0=t0,
                 horizon=horizon, drain=drain, deadlines=deadlines,
-                phases=ph, record=True,
+                phases=ph, phase_mode=pm, beliefs=bel, adaptive=lane,
+                record=True,
             )
-            if not (infinite and res.terminated and res.n_epochs < budget):
+            if not (infinite and res.n_admitted >= n_arr):
                 break
-            # the pre-drawn stream ran dry before the epoch budget: a lazy
-            # engine would keep drawing — extend the stream and re-run (the
-            # scan is deterministic, so the prefix replays identically;
+            # the pre-drawn stream ran dry: every event was admitted, so
+            # some suffix of the run decided against a truncated future (a
+            # frozen belief/phase row, a drain instead of a wait) that a
+            # lazy engine — which keeps drawing — would never see.  Extend
+            # the stream and re-run until a tail of events stays un-admitted
+            # (the scan is deterministic, so the prefix replays identically;
             # arrival processes carry their own state — e.g. the MMPP2
             # phase — so the extension continues the exact same stream)
             events.extend(self._collect_events(
@@ -491,6 +528,27 @@ class ServingEngine:
             # (the un-admitted tail is always a suffix of what drain() took,
             # since buffered/queued events precede trace events in time)
             self.arrivals.rewind(len(future))
+        # sync the online-adaptive scheduler state the kernel carried: the
+        # scheduler object ends the run exactly where the Python backend
+        # would have left it (belief/estimator state, bank entry,
+        # hysteresis clock), so later runs continue identically
+        if belief_filter is not None and res.n_admitted > 0:
+            belief_filter.belief = bel[res.n_admitted - 1].copy()
+            belief_filter._last = float(times[res.n_admitted - 1])
+            belief_filter.n_observed += res.n_admitted
+            if isinstance(sched, AdaptiveController):
+                sched.scheduler.phase = belief_filter.phase
+        if lane is not None:
+            st = res.adaptive_state
+            bank = sched.bank
+            sched.key = bank._sorted_keys[st["sel"]]
+            sched.scheduler.swap_table(bank.tables[sched.key])
+            est = sched.estimator
+            est._gap_bar = st["gap_bar"] if st["have_gap_bar"] else None
+            est._last = st["last"] if st["have_last"] else None
+            est.n_observed += res.n_admitted
+            sched._last_switch = st["last_switch"]
+            sched.n_switches = st["n_switches"]
 
         lat = res.latencies
         # a run with no served batch accounted no energy (NaN, like the
@@ -602,6 +660,7 @@ def verify_backends(
     drain: Optional[bool] = None,
     slo: Optional[float] = None,
     phases=None,
+    scheduler=None,
     seed: int = 0,
     atol: float = 1e-9,
 ) -> Dict[str, object]:
@@ -619,6 +678,15 @@ def verify_backends(
     (OraclePhaseScheduler on the switch log the phase stream implies), the
     compiled side the phase-indexed table lookup — the acceptance gate for
     exact-modulated / oracle policies on the compiled backend.
+
+    ``scheduler`` — a zero-argument factory returning a fresh scheduler
+    instance per backend — replaces ``table``/``phases`` and certifies
+    *any* scheduler the engine can lower, in particular the online lanes:
+    a `BeliefPhaseScheduler` factory pits the Python filter fold against
+    the jitted belief scan + in-kernel row/mixture selection, an
+    `AdaptiveController` factory pits the Python estimator/hysteresis
+    loop against the in-carry adaptive kernel — the acceptance gate for
+    the deployable (non-oracle) policies on the compiled backend.
     """
     from .scheduler import OraclePhaseScheduler, SMDPScheduler
 
@@ -627,8 +695,15 @@ def verify_backends(
         drain = n_epochs is None
     budget = n_epochs if n_epochs is not None else 2 * len(trace) + 2
     draws = service.unit_draws(np.random.default_rng(seed), budget)
-    table = np.asarray(table, dtype=np.int64)
-    if table.ndim == 2:
+    if scheduler is not None:
+        if table is not None or phases is not None:
+            raise ValueError(
+                "scheduler= (a fresh-instance factory) replaces "
+                "table=/phases="
+            )
+        mk_sched = scheduler
+    elif np.asarray(table).ndim == 2:
+        table = np.asarray(table, dtype=np.int64)
         if phases is None:
             raise ValueError("a (K, L) table stack needs phases= per arrival")
         phases = np.asarray(phases, dtype=np.int64)
@@ -642,11 +717,14 @@ def verify_backends(
             if p_a != p_prev:
                 log.append((float(t_a), int(p_a)))
 
+        table_stack = table
+
         def mk_sched():
             return OraclePhaseScheduler(
-                {z: table[z] for z in range(table.shape[0])}, log
+                {z: table_stack[z] for z in range(table_stack.shape[0])}, log
             )
     else:
+        table = np.asarray(table, dtype=np.int64)
         if phases is not None:
             raise ValueError("phases= needs a (K, L) phase-indexed table")
 

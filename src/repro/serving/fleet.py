@@ -58,7 +58,13 @@ import jax.numpy as jnp
 
 from repro.core.service_models import ServiceModel  # noqa: F401  (x64 on import)
 
-from .compiled import _ADMIT_W, _bucket, default_hist_edges, pad_arrivals
+from .compiled import (
+    _ADMIT_W,
+    _bucket,
+    _check_phase_mode,
+    default_hist_edges,
+    pad_arrivals,
+)
 from .metrics import P2Quantile, histogram_quantiles
 
 #: router name -> kernel id (a traced scalar inside the scan)
@@ -87,6 +93,31 @@ def router_id(router) -> int:
 
 def _jsq_score(qlen: int, busy: bool) -> int:
     return 2 * min(int(qlen), _SCORE_QCAP) + int(busy)
+
+
+def _belief_phases(phase_mode, beliefs, phases, n_phases):
+    """Resolve the fleet's phase stream from a belief posterior.
+
+    The fleet kernel selects one phase row fleet-wide (the last admitted
+    arrival's); the belief-argmax rule is therefore just a derived phase
+    stream — ``argmax(beliefs)`` through the existing phases plumbing,
+    exactly `simulate_compiled`'s lowering.  The belief-*mixture* rule
+    needs per-decision posterior rows inside the kernel, which the fleet
+    scan does not carry yet — it raises NotImplementedError (run each
+    replica through `simulate_compiled`'s mix lane instead).
+    """
+    bel = _check_phase_mode(phase_mode, beliefs, n_phases)
+    if bel is None:
+        return phases
+    if phases is not None:
+        raise ValueError("phases= and beliefs= are mutually exclusive")
+    if phase_mode == "belief_mix":
+        raise NotImplementedError(
+            "the fleet kernel has no belief-mixture lane; use "
+            'phase_mode="belief_argmax" or the single-server '
+            "simulate_compiled mix lane per replica"
+        )
+    return np.argmax(bel, axis=-1)
 
 
 def threshold_gaps(tables: np.ndarray) -> np.ndarray:
@@ -538,6 +569,8 @@ def simulate_fleet(
     drain: bool = True,
     deadlines=None,
     phases=None,
+    phase_mode: str = "oracle",
+    beliefs=None,
     slo: Optional[float] = None,
     hist_edges=None,
     record: bool = False,
@@ -549,7 +582,11 @@ def simulate_fleet(
     ``tables`` is (M, L) — one action table per replica, heterogeneous
     allowed — or (M, K, L) phase-indexed stacks with ``phases`` per arrival
     (the phase of the last admitted arrival selects the row fleet-wide,
-    the single-server kernel's oracle-phase discipline).  ``router`` is one
+    the single-server kernel's oracle-phase discipline).  Non-oracle row
+    selection: ``phase_mode="belief_argmax"`` with ``beliefs`` (n, K)
+    posterior rows (`arrivals.belief_forward_jax`) derives the phase
+    stream from the filter posterior instead of an oracle switch trace
+    (``belief_mix`` is single-server only).  ``router`` is one
     of ``rr | jsq | pow2 | batch_aware``; pow2 consumes ``router_u``
     ((n, 2) uniforms, drawn from ``router_seed`` when absent) so the
     compiled lane and the PythonFleet reference route identically.
@@ -566,6 +603,15 @@ def simulate_fleet(
     which fold chunks into O(1) aggregates instead.
     """
     rid = router_id(router)
+    if phase_mode != "oracle" or beliefs is not None:
+        if beliefs is not None and (
+            np.asarray(beliefs).ndim != 2
+            or len(np.asarray(beliefs)) != len(np.asarray(arrivals))
+        ):
+            raise ValueError("beliefs must be (n, K) aligned with arrivals")
+        phases = _belief_phases(
+            phase_mode, beliefs, phases, _norm_tables(tables).shape[1]
+        )
     (tables, arr, dl, ph, router_u, means, zeta_a, draws, edges) = (
         _prep_inputs(
             tables, arrivals, means=means, zeta=zeta, draws=draws,
@@ -1349,6 +1395,8 @@ def run_fleet_grid(
     drain: bool = True,
     deadlines=None,
     phases=None,
+    phase_mode: str = "oracle",
+    beliefs=None,
     hist_edges=None,
     router_seed: int = 0,
     mesh=None,
@@ -1356,7 +1404,9 @@ def run_fleet_grid(
     """The fleet sweep: (seeds x scenarios) traces x policies x routers.
 
     ``tables`` — (P, M, L) per-policy per-replica action tables (or
-    (P, M, K, L) phase-indexed stacks with ``phases`` = (S, N) ints); a
+    (P, M, K, L) phase-indexed stacks with ``phases`` = (S, N) ints,
+    or ``phase_mode="belief_argmax"`` + ``beliefs`` = (S, N, K)
+    posterior rows, lowered to the same phase stream); a
     (P, L) array plus ``n_replicas=M`` runs each policy homogeneously on
     M replicas.  ``arrivals`` — (S, N) padded sorted traces
     (`pad_arrivals` / `pad_arrivals_batch`); ``draws`` — (S, D) unit
@@ -1396,6 +1446,12 @@ def run_fleet_grid(
     arr = np.asarray(arrivals, dtype=np.float64)
     if arr.ndim != 2:
         raise ValueError("run_fleet_grid wants (S, N) arrivals")
+    if phase_mode != "oracle" or beliefs is not None:
+        if beliefs is not None and np.asarray(beliefs).shape[:2] != arr.shape:
+            raise ValueError(
+                "beliefs must be (S, N, K) aligned with arrivals"
+            )
+        phases = _belief_phases(phase_mode, beliefs, phases, K)
     if arr.shape[1] < _ADMIT_W or not np.isinf(arr[:, -_ADMIT_W:]).all():
         raise ValueError("pad each trace with pad_arrivals first")
     S, N = arr.shape

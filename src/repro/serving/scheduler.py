@@ -530,21 +530,37 @@ class BeliefPhaseScheduler(Scheduler):
 
     The non-oracle counterpart of OraclePhaseScheduler: an MMPP forward
     filter (arrivals.PhaseBeliefFilter) turns observed inter-arrival gaps
-    into a posterior over the hidden phase; each decision uses the
-    argmax-phase row of the (K, L) stack.  Python backend only — the
-    belief is data-dependent online state, exactly like the adaptive
-    controller.
+    into a posterior over the hidden phase.  Two action rules:
+
+      * ``mode="argmax"`` (default) — each decision uses the argmax-phase
+        row of the (K, L) stack;
+      * ``mode="mix"`` — the decision is the posterior-weighted mixture
+        of the per-phase actions, ``round(sum_k b_k table[k, q])`` — a
+        soft blend that hedges near-uniform beliefs instead of snapping
+        to a row.
+
+    Runs on both backends: the Python engine folds the filter per
+    admitted arrival; the compiled lane precomputes the identical
+    posterior rows with one jitted scan (arrivals.belief_forward_jax)
+    and rows/blends the stack inside the kernel (serving.compiled
+    ``phase_mode="belief_argmax"`` / ``"belief_mix"``) — the engine does
+    this lowering automatically for backend="compiled".
     """
 
     name = "smdp_belief"
 
-    def __init__(self, tables, phase_filter):
+    def __init__(self, tables, phase_filter, mode: str = "argmax"):
         if isinstance(tables, dict):
             tables = _phase_stack(tables)
         self.tables = np.asarray(tables, dtype=np.int64)
         if self.tables.ndim != 2:
             raise ValueError("BeliefPhaseScheduler needs a (K, L) stack")
+        if mode not in ("argmax", "mix"):
+            raise ValueError(f'mode must be "argmax" or "mix", got {mode!r}')
         self.filter = phase_filter
+        self.mode = mode
+        if mode == "mix":
+            self.name = "smdp_belief_mix"
 
     @property
     def phase(self) -> int:
@@ -554,8 +570,13 @@ class BeliefPhaseScheduler(Scheduler):
         self.filter.observe(t)
 
     def decide(self, queue_len: int) -> int:
-        row = self.tables[self.phase]
-        return int(row[min(queue_len, len(row) - 1)])
+        col = min(queue_len, self.tables.shape[1] - 1)
+        if self.mode == "mix":
+            # same op order as the compiled kernel's mix rule (round of
+            # the posterior-weighted action), so both backends agree
+            return int(np.round(np.dot(self.filter.belief,
+                                       self.tables[:, col])))
+        return int(self.tables[self.phase, col])
 
     def snapshot(self) -> dict:
         return {"filter": self.filter.snapshot()}
@@ -633,5 +654,7 @@ def as_action_table(scheduler: Scheduler, b_max: int) -> np.ndarray:
         )
     raise TypeError(
         f"{type(scheduler).__name__} has no static action table; "
-        "online-adaptive schedulers run on the Python backend"
+        "online-adaptive schedulers lower through the engine's compiled "
+        "belief/adaptive lanes (ServingEngine.run(backend='compiled'), "
+        "serving.compiled AdaptiveLane / phase_mode) instead"
     )

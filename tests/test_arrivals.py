@@ -160,3 +160,56 @@ class TestRateEstimator:
         est2.observe(9.0)
         est2.restore(snap2)
         assert est2.rate == rate2
+
+
+class TestPhaseBeliefFilterGuard:
+    """ISSUE satellite: the forward filter must survive long observation
+    gaps — exp((R - Lambda) * gap) underflows to the zero matrix, which
+    used to propagate a degenerate (all-zero / NaN) belief.  The guarded
+    observe renormalizes every step and falls back to the stationary
+    prior when the propagated mass vanishes."""
+
+    def _filt(self):
+        from repro.serving.arrivals import PhaseBeliefFilter
+
+        return PhaseBeliefFilter(
+            rates=[5.0, 50.0], gen=[[-0.5, 0.5], [1.0, -1.0]]
+        )
+
+    def test_long_gap_falls_back_to_stationary(self):
+        filt = self._filt()
+        filt.observe(0.1)
+        filt.observe(0.2)
+        filt.observe(1e7)  # e^{(R - Lambda) gap} == 0 in float64
+        assert np.all(np.isfinite(filt.belief))
+        np.testing.assert_allclose(filt.belief.sum(), 1.0)
+        want = filt._b0 * filt.rates
+        np.testing.assert_allclose(filt.belief, want / want.sum())
+        # and the filter keeps tracking after the reset
+        filt.observe(1e7 + 0.01)
+        assert np.all(np.isfinite(filt.belief))
+        np.testing.assert_allclose(filt.belief.sum(), 1.0)
+
+    def test_every_gap_scale_stays_normalized(self):
+        filt = self._filt()
+        t = 0.0
+        for gap in 10.0 ** np.arange(-9, 9, 0.5):
+            t += gap
+            filt.observe(t)
+            assert np.all(np.isfinite(filt.belief)), gap
+            assert np.all(filt.belief >= 0.0), gap
+            np.testing.assert_allclose(filt.belief.sum(), 1.0)
+
+    def test_jax_forward_matches_guarded_filter_on_long_gaps(self):
+        from repro.serving.arrivals import belief_forward_jax
+
+        times = np.cumsum(
+            np.r_[10.0 ** np.arange(-6, 8, 0.5), [0.01] * 20]
+        )
+        ref_filt = self._filt()
+        ref = np.empty((len(times), 2))
+        for i, t in enumerate(times):
+            ref_filt.observe(t)
+            ref[i] = ref_filt.belief
+        bel, _ = belief_forward_jax(times, self._filt())
+        np.testing.assert_allclose(np.asarray(bel), ref, atol=1e-12)

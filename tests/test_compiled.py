@@ -161,18 +161,53 @@ class TestEngineBackendParity:
         assert [r.rid for r in e_cmp.queue] == [r.rid for r in e_ref.queue]
         assert e_cmp.next_rid == e_ref.next_rid
 
-    def test_adaptive_scheduler_rejected(self):
+    def test_adaptive_scheduler_compiled_matches_python(self):
+        """AdaptiveController now lowers to the in-carry adaptive lane:
+        the compiled backend reproduces the Python engine decision-for-
+        decision (it used to be rejected with a TypeError)."""
         from repro.serving import AdaptiveController, SMDPSchedulerBank
 
         bank = SMDPSchedulerBank(
             {(LAM,): TABLE, (2 * LAM,): static_policy(8, 128)},
             key_names=("lam",),
         )
-        eng = ServingEngine(
-            AdaptiveController(bank), lam=LAM, b_max=BMAX, service=SVC,
-            energy_table=ENERGY,
+
+        def mk():
+            return ServingEngine(
+                AdaptiveController(bank, ewma=0.2, margin=0.1, min_dwell=5.0),
+                lam=LAM, b_max=BMAX, service=SVC, energy_table=ENERGY,
+                seed=11,
+            )
+
+        e_py, e_c = mk(), mk()
+        r_py = e_py.run(1200)
+        r_c = e_c.run(1200, backend="compiled")
+        np.testing.assert_array_equal(r_py.batch_sizes, r_c.batch_sizes)
+        np.testing.assert_allclose(r_py.latencies, r_c.latencies, atol=1e-9)
+        np.testing.assert_allclose(r_py.energy, r_c.energy)
+        # post-run controller state is synced from the kernel carry
+        assert e_c.scheduler.key == e_py.scheduler.key
+        assert e_c.scheduler.n_switches == e_py.scheduler.n_switches
+        np.testing.assert_allclose(
+            e_c.scheduler.estimator.rate, e_py.scheduler.estimator.rate,
+            rtol=1e-12,
         )
-        with pytest.raises(TypeError, match="static action table"):
+
+    def test_window_estimator_stays_python_only(self):
+        """Window-mode estimators have no O(1) scan carry: the compiled
+        lowering refuses them loudly."""
+        from repro.serving import AdaptiveController, SMDPSchedulerBank
+        from repro.serving.metrics import RateEstimator
+
+        bank = SMDPSchedulerBank(
+            {(LAM,): TABLE, (2 * LAM,): static_policy(8, 128)},
+            key_names=("lam",),
+        )
+        eng = ServingEngine(
+            AdaptiveController(bank, estimator=RateEstimator(window=16)),
+            lam=LAM, b_max=BMAX, service=SVC, energy_table=ENERGY,
+        )
+        with pytest.raises(TypeError, match="EWMA"):
             eng.run(100, backend="compiled")
 
     def test_sketch_metrics_in_report(self):

@@ -343,6 +343,74 @@ class TestCountZeroMetrics:
         assert int(res.hist.sum()) == 2
 
 
+class TestFleetBeliefLane:
+    """phase_mode="belief_argmax" lowers the posterior to the fleet's
+    phase stream — same plumbing as simulate_compiled's belief lane."""
+
+    def _stack_and_beliefs(self, n=900, seed=31):
+        from repro.serving.arrivals import PhaseBeliefFilter, belief_forward_jax
+
+        trace = _trace("mmpp2", n=n, seed=seed, lam=2 * LAM)
+        filt = PhaseBeliefFilter(
+            rates=[0.3 * 2 * LAM, 1.3 * 2 * LAM],
+            gen=[[-1 / 60.0, 1 / 60.0], [1 / 30.0, -1 / 30.0]],
+        )
+        bel = np.asarray(belief_forward_jax(trace, filt)[0])
+        stacks = np.stack([
+            np.stack([q_policy(4, 96, BMAX), q_policy(10, 96, BMAX)])
+            for _ in range(2)
+        ])  # (M=2, K=2, L)
+        return trace, bel, stacks
+
+    def test_belief_argmax_equals_explicit_phases(self):
+        trace, bel, stacks = self._stack_and_beliefs()
+        kw = dict(
+            router="jsq", means=MEANS, zeta=ENERGY, b_max=BMAX, record=True
+        )
+        r_bel = simulate_fleet(
+            stacks, trace, phase_mode="belief_argmax", beliefs=bel, **kw
+        )
+        r_ph = simulate_fleet(
+            stacks, trace, phases=np.argmax(bel, axis=-1), **kw
+        )
+        np.testing.assert_array_equal(r_bel.actions, r_ph.actions)
+        np.testing.assert_array_equal(r_bel.servers, r_ph.servers)
+        np.testing.assert_allclose(r_bel.lat_sum, r_ph.lat_sum)
+        assert r_bel.n_served == r_ph.n_served
+
+    def test_belief_mix_not_implemented(self):
+        trace, bel, stacks = self._stack_and_beliefs(n=50)
+        with pytest.raises(NotImplementedError, match="mix"):
+            simulate_fleet(
+                stacks, trace, phase_mode="belief_mix", beliefs=bel,
+                means=MEANS, b_max=BMAX,
+            )
+
+    def test_grid_belief_argmax_equals_explicit_phases(self):
+        trace, bel, stacks = self._stack_and_beliefs(n=700)
+        arr = pad_arrivals_batch([trace])
+        bels = np.zeros(arr.shape + (2,))
+        bels[0, : len(trace)] = bel
+        bels[0, len(trace):, 0] = 1.0  # pad rows: any valid posterior
+        g_bel = run_fleet_grid(
+            stacks[None], arr, routers=("jsq",), means=MEANS, zeta=ENERGY,
+            b_max=BMAX, phase_mode="belief_argmax", beliefs=bels,
+        )
+        g_ph = run_fleet_grid(
+            stacks[None], arr, routers=("jsq",), means=MEANS, zeta=ENERGY,
+            b_max=BMAX, phases=np.argmax(bels, axis=-1),
+        )
+        for k in ("n_served", "lat_sum", "energy", "t_final"):
+            np.testing.assert_allclose(g_bel[k], g_ph[k])
+
+    def test_oracle_mode_rejects_beliefs(self):
+        trace, bel, stacks = self._stack_and_beliefs(n=50)
+        with pytest.raises(ValueError, match="belief"):
+            simulate_fleet(
+                stacks, trace, beliefs=bel, means=MEANS, b_max=BMAX
+            )
+
+
 class TestFleetGrid:
     def test_grid_cell_matches_simulate_fleet(self):
         traces = [_trace("poisson", seed=s, lam=4 * LAM) for s in range(2)]

@@ -342,14 +342,27 @@ class TestPhaseAxisBankAndSchedulers:
             agree += belief.phase == oracle.phase
         assert agree / len(trace) > 0.9
 
-    def test_belief_scheduler_rejected_by_compiled_lane(self):
-        filt = PhaseBeliefFilter(rates=[1.0, 2.0], gen=[[0.0, 0.0], [0.0, 0.0]])
-        sched = BeliefPhaseScheduler(np.array([[0, 1], [0, 2]]), filt)
-        eng = ServingEngine(
-            sched, lam=1.0, b_max=BMAX, service=SVC, energy_table=EN
-        )
-        with pytest.raises(TypeError, match="static action table"):
-            eng.run(50, backend="compiled")
+    def test_belief_scheduler_compiled_matches_python(self):
+        """BeliefPhaseScheduler now lowers to the compiled belief lane
+        (posterior precomputed by one jitted scan, argmax row in-kernel):
+        both backends agree decision-for-decision (it used to be rejected
+        with a TypeError)."""
+        m = MMPP2(lam1=0.3, lam2=4.0, dwell1=40.0, dwell2=20.0)
+        gen = [[-1 / m.dwell1, 1 / m.dwell1], [1 / m.dwell2, -1 / m.dwell2]]
+
+        def mk():
+            filt = PhaseBeliefFilter(rates=[m.lam1, m.lam2], gen=gen)
+            sched = BeliefPhaseScheduler(np.array([[0, 1, 1], [0, 2, 2]]), filt)
+            return ServingEngine(
+                sched, arrivals=m, b_max=BMAX, service=SVC, energy_table=EN,
+                seed=5,
+            )
+
+        r_py = mk().run(600)
+        r_c = mk().run(600, backend="compiled")
+        np.testing.assert_array_equal(r_py.batch_sizes, r_c.batch_sizes)
+        np.testing.assert_allclose(r_py.latencies, r_c.latencies, atol=1e-9)
+        np.testing.assert_allclose(r_py.energy, r_c.energy)
 
 
 class TestCompiledPhaseLane:
@@ -537,6 +550,259 @@ class TestCompiledPhaseLane:
             means=means, zeta=EN, b_max=BMAX,
         )
         assert int(g["n_served"][0, 0]) == n
+
+
+class TestCompiledOnlineLanes:
+    """ISSUE acceptance: the deployable (non-oracle) lanes — belief-argmax,
+    belief-mixture, and the in-carry adaptive controller — certify
+    decision-for-decision against the Python engine via
+    ``verify_backends(scheduler=...)`` on every arrival family."""
+
+    MODES = ("poisson", "mmpp2", "diurnal", "trace")
+
+    def _trace(self, mode, n=1200, seed=0):
+        lam = rho_lam(0.7)
+        rng = np.random.default_rng(seed)
+        if mode == "poisson":
+            return np.cumsum(rng.exponential(1.0 / lam, n))
+        if mode == "mmpp2":
+            m = MMPP2(
+                lam1=0.3 * lam, lam2=1.3 * lam, dwell1=60.0, dwell2=30.0
+            )
+            trace, _ = m.sample_arrivals(n / m.mean_rate, rng)
+            return np.asarray(trace)
+        if mode == "diurnal":
+            from repro.serving.arrivals import take
+
+            proc = DiurnalProcess(base=lam, amp=0.8 * lam, period=200.0)
+            evs, _ = take(proc, rng, n=n)
+            return np.array([e.time for e in evs])
+        # "trace": a recorded stream — bursty clumps over long quiet
+        # stretches, a shape no renewal model in the zoo generates
+        gaps = np.where(
+            rng.random(n) < 0.15,
+            rng.exponential(6.0 / lam, n),
+            rng.exponential(0.4 / lam, n),
+        )
+        return np.cumsum(gaps)
+
+    def _stack(self):
+        from repro.core.policies import q_policy
+
+        return np.stack([q_policy(4, 128, BMAX), q_policy(12, 128, BMAX)])
+
+    def _belief_factory(self, mode="argmax"):
+        lam = rho_lam(0.7)
+        stack = self._stack()
+
+        def mk():
+            filt = PhaseBeliefFilter(
+                rates=[0.3 * lam, 1.3 * lam],
+                gen=[[-1 / 60.0, 1 / 60.0], [1 / 30.0, -1 / 30.0]],
+            )
+            return BeliefPhaseScheduler(stack, filt, mode=mode)
+
+        return mk
+
+    def _adaptive_factory(self, with_filter=False):
+        from repro.core.policies import q_policy
+
+        lam = rho_lam(0.7)
+        if with_filter:
+            lo = np.stack([q_policy(4, 128, BMAX), q_policy(8, 128, BMAX)])
+            hi = np.stack([q_policy(10, 128, BMAX), q_policy(14, 128, BMAX)])
+        else:
+            lo = q_policy(4, 128, BMAX)
+            hi = q_policy(12, 128, BMAX)
+        bank = SMDPSchedulerBank(
+            {(0.4 * lam,): lo, (1.2 * lam,): hi}, key_names=("lam",)
+        )
+
+        def mk():
+            filt = (
+                PhaseBeliefFilter(
+                    rates=[0.3 * lam, 1.3 * lam],
+                    gen=[[-1 / 60.0, 1 / 60.0], [1 / 30.0, -1 / 30.0]],
+                )
+                if with_filter
+                else None
+            )
+            return AdaptiveController(
+                bank, ewma=0.2, margin=0.1, min_dwell=5.0, phase_filter=filt
+            )
+
+        return mk
+
+    @pytest.mark.parametrize("mode", MODES)
+    def test_belief_argmax_lane_certified(self, mode):
+        out = verify_backends(
+            None, self._trace(mode), service=SVC, energy_table=EN,
+            b_max=BMAX, scheduler=self._belief_factory("argmax"),
+        )
+        assert out["n_decisions"] > 0
+        assert out["max_latency_err"] <= 1e-9
+
+    @pytest.mark.parametrize("mode", MODES)
+    def test_adaptive_lane_certified(self, mode):
+        out = verify_backends(
+            None, self._trace(mode, seed=3), service=SVC, energy_table=EN,
+            b_max=BMAX, scheduler=self._adaptive_factory(),
+        )
+        assert out["n_decisions"] > 0
+        assert out["max_latency_err"] <= 1e-9
+
+    @pytest.mark.parametrize("mode", ("mmpp2", "trace"))
+    def test_belief_mix_lane_certified(self, mode):
+        out = verify_backends(
+            None, self._trace(mode, seed=5), service=SVC, energy_table=EN,
+            b_max=BMAX, scheduler=self._belief_factory("mix"),
+        )
+        assert out["n_decisions"] > 0
+
+    def test_adaptive_with_belief_filter_certified(self):
+        """Both adaptation axes live at once: the in-carry estimator swaps
+        the bank entry while the precomputed posterior picks the row."""
+        verify_backends(
+            None, self._trace("mmpp2", seed=7), service=SVC,
+            energy_table=EN, b_max=BMAX,
+            scheduler=self._adaptive_factory(with_filter=True),
+        )
+
+    def test_adaptive_lane_stochastic_service(self):
+        verify_backends(
+            None, self._trace("mmpp2", n=900, seed=11),
+            service=ServiceModel(latency=GOOGLENET_P4_LATENCY, family="expo"),
+            energy_table=EN, b_max=BMAX, scheduler=self._adaptive_factory(),
+        )
+
+    @pytest.mark.parametrize("mode", MODES)
+    def test_adaptive_snapshot_restore_mid_dwell_replays(self, mode):
+        """ISSUE satellite: snapshot() taken *inside* the dwell window —
+        right at a switch, when the hysteresis clock is hot — restores to
+        an identical replay (same keys, decisions, switch counts)."""
+        trace = self._trace(mode, n=900, seed=9)
+        ctrl = self._adaptive_factory()()
+        cut = None
+        for i, t in enumerate(trace):
+            ctrl.observe_arrival(float(t))
+            if ctrl.n_switches >= 1:
+                cut = i + 1
+                break
+        assert cut is not None, "stream never tripped a bank switch"
+        assert trace[cut - 1] - ctrl._last_switch < ctrl.min_dwell
+        snap = ctrl.snapshot()
+        tail = trace[cut:]
+
+        def replay():
+            out = []
+            for i, t in enumerate(tail):
+                ctrl.observe_arrival(float(t))
+                out.append(
+                    (ctrl.key, ctrl.decide(1 + i % 7), ctrl.n_switches)
+                )
+            return out, ctrl.estimator.snapshot()
+
+        run1, est1 = replay()
+        ctrl.restore(snap)
+        run2, est2 = replay()
+        assert run1 == run2
+        assert est1 == est2
+
+    def test_belief_forward_jax_matches_filter(self):
+        """The jitted scan reproduces the Python filter fold draw for draw
+        (same guarded renormalization) and leaves the filter untouched."""
+        from repro.serving.arrivals import belief_forward_jax
+
+        lam = rho_lam(0.7)
+        trace = self._trace("mmpp2", n=800, seed=21)
+        mk = lambda: PhaseBeliefFilter(
+            rates=[0.3 * lam, 1.3 * lam],
+            gen=[[-1 / 60.0, 1 / 60.0], [1 / 30.0, -1 / 30.0]],
+        )
+        ref_filt = mk()
+        ref = np.empty((len(trace), 2))
+        for i, t in enumerate(trace):
+            ref_filt.observe(t)
+            ref[i] = ref_filt.belief
+        filt = mk()
+        b0 = filt.belief.copy()
+        bel, (b_fin, t_fin) = belief_forward_jax(trace, filt)
+        np.testing.assert_allclose(np.asarray(bel), ref, atol=1e-12)
+        np.testing.assert_allclose(np.asarray(b_fin), ref[-1], atol=1e-12)
+        assert float(t_fin) == trace[-1]
+        np.testing.assert_array_equal(filt.belief, b0)  # not mutated
+        assert filt.n_observed == 0
+        # batched lane: two stacked traces, same rows per lane
+        two = np.stack([trace, trace + 0.5])
+        bel2, _ = belief_forward_jax(two, mk())
+        np.testing.assert_allclose(np.asarray(bel2)[0], ref, atol=1e-12)
+
+    def test_run_grid_adaptive_matches_python_engines(self):
+        from repro.serving.compiled import AdaptiveLane, run_grid_adaptive
+
+        factory = self._adaptive_factory()
+        traces = [self._trace("mmpp2", n=700, seed=30 + s) for s in (0, 1)]
+        arrs = pad_arrivals_batch(traces)
+        means = np.array(
+            [0.0] + [float(SVC.mean(b)) for b in range(1, BMAX + 1)]
+        )
+        g = run_grid_adaptive(
+            arrs, adaptive=AdaptiveLane.from_controller(factory()),
+            means=means, zeta=EN, b_max=BMAX,
+        )
+        for s, tr in enumerate(traces):
+            ctrl = factory()
+            rep = ServingEngine(
+                ctrl, arrivals=TraceProcess(tr), b_max=BMAX,
+                service=SVC, energy_table=EN,
+            ).run(n_epochs=None)
+            np.testing.assert_allclose(
+                g["w_mean"][s], rep.latencies.mean(), atol=1e-9
+            )
+            assert int(g["n_served"][s]) == rep.n_served
+            np.testing.assert_allclose(g["energy"][s], rep.energy)
+            assert int(g["ad_n_switches"][s]) == ctrl.n_switches
+
+    def test_run_grid_belief_modes_match_python_engines(self):
+        """run_grid's belief_argmax / belief_mix modes vs per-trace Python
+        BeliefPhaseScheduler engines."""
+        from repro.serving.arrivals import belief_forward_jax
+
+        lam = rho_lam(0.7)
+        traces = [self._trace("mmpp2", n=700, seed=40 + s) for s in (0, 1)]
+        arrs = pad_arrivals_batch(traces)
+        stack = self._stack()
+        means = np.array(
+            [0.0] + [float(SVC.mean(b)) for b in range(1, BMAX + 1)]
+        )
+        mk_filt = lambda: PhaseBeliefFilter(
+            rates=[0.3 * lam, 1.3 * lam],
+            gen=[[-1 / 60.0, 1 / 60.0], [1 / 30.0, -1 / 30.0]],
+        )
+        bels = np.stack([
+            np.asarray(
+                belief_forward_jax(
+                    pad_arrivals(t, size=arrs.shape[1])[0], mk_filt()
+                )[0]
+            )
+            for t in traces
+        ])
+        for pm in ("belief_argmax", "belief_mix"):
+            g = run_grid(
+                stack[None], arrs, means=means, zeta=EN, b_max=BMAX,
+                phase_mode=pm, beliefs=bels,
+            )
+            mode = "argmax" if pm == "belief_argmax" else "mix"
+            for s, tr in enumerate(traces):
+                sched = BeliefPhaseScheduler(stack, mk_filt(), mode=mode)
+                rep = ServingEngine(
+                    sched, arrivals=TraceProcess(tr), b_max=BMAX,
+                    service=SVC, energy_table=EN,
+                ).run(n_epochs=None)
+                np.testing.assert_allclose(
+                    g["w_mean"][s, 0], rep.latencies.mean(), atol=1e-9
+                )
+                assert int(g["n_served"][s, 0]) == rep.n_served
 
 
 class TestDiurnalProcess:
