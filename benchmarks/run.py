@@ -28,6 +28,7 @@ def main() -> None:
 
     from . import (
         appE_structure_breaks,
+        degraded_frontier,
         perf_ablation,
         fig3_policies,
         fig4_cost,
@@ -61,6 +62,7 @@ def main() -> None:
         ("tpu_profile_scenario", tpu_profile_scenario.run),
         ("mmpp_bursty", mmpp_bursty.run),
         ("fleet_frontier", fleet_frontier.run),
+        ("degraded_frontier", degraded_frontier.run),
         ("kernel_micro", kernel_micro.run),
         ("roofline_report", roofline_report.run),
         ("perf_ablation", perf_ablation.run),

@@ -63,12 +63,28 @@ class SMDPSpec:
     w2: float = 0.0  # weight on average power
     s_max: int = 128  # truncation level (>= b_max)
     c_o: float = 100.0  # abstract overflow-cost rate (paper Sec. V-A)
+    buffer: Optional[int] = None  # finite waiting room B (None = abstract tail)
+    c_drop: float = 0.0  # per-dropped-request cost (finite buffer only)
 
     def __post_init__(self):
         if self.s_max < self.b_max:
             raise ValueError("s_max must be >= b_max (paper Sec. V-A)")
         if not (0 < self.b_min <= self.b_max):
             raise ValueError("need 0 < b_min <= b_max")
+        if self.c_drop < 0:
+            raise ValueError("c_drop must be >= 0")
+        if self.buffer is not None:
+            if self.buffer != self.s_max:
+                raise ValueError(
+                    "finite-buffer specs fold exactly at the truncation "
+                    f"level: need buffer == s_max, got buffer={self.buffer}, "
+                    f"s_max={self.s_max}"
+                )
+            if self.lam <= 0:
+                raise ValueError("need lam > 0")
+            # overload (rho >= 1) is allowed: a finite-buffer chain is
+            # always stable, and shedding is the regime of interest
+            return
         rho = self.rho
         if not (0.0 < rho < 1.0):
             raise ValueError(f"instability: rho={rho:.3f} not in (0,1)")
@@ -196,6 +212,10 @@ class BatchedSMDP:
         if c_os.shape != (self.n_specs,):
             raise ValueError(f"need {self.n_specs} c_o values")
         old = np.array([sp.c_o for sp in self.specs])
+        # finite-buffer specs have no abstract tail: S_o is an exact alias
+        # of state B and carries no c_o term, so the patch is a no-op there
+        finite = np.array([sp.buffer is not None for sp in self.specs])
+        c_os = np.where(finite, old, c_os)
         s_o = self.s_o
         c_hat = self.c_hat.copy()
         c_hat[:, s_o, :] += (c_os - old)[:, None] * self.y[:, s_o, :]
@@ -374,6 +394,74 @@ def _dense_m_tilde(
     return m
 
 
+def _finite_buffer_patches(
+    s_max: int,
+    lam: np.ndarray,  # (N,)
+    y_a: np.ndarray,  # (N, A) E[G_a] (1/lam in column 0, unused here)
+    e2: np.ndarray,  # (N, A) E[G_a^2]
+    pmfs: np.ndarray,  # (N, A, K+1) arrival pmfs
+    feasible: np.ndarray,  # (N, S, A)
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact capped-holding corrections and drop counts for B = s_max.
+
+    Serving a from state s leaves t = s - a waiting and c = B - t free
+    slots; with N the arrivals during the service (pmf p_k, E[N] =
+    lam E[G_a], E[N^2] = lam E[G_a] + lam^2 E[G_a^2]):
+
+      E[drops]  = E[max(0, N - c)] = E[N] - c + sum_{k<=c} (c - k) p_k
+      E[excess] = E[int_0^G max(0, N(u) - c) du]
+                = (1/lam) sum_{k>c} (k - c) Q_k,      Q_k = P(N > k),
+
+    the excess integral via the Poisson identity E[lam T_k] = Q_k for
+    T_k = time spent at count k (exactly one arrival occurs while the
+    count sits at k iff N ends above k), closed with sum_k Q_k = E[N]
+    and sum_k k Q_k = (E[N^2] - E[N]) / 2:
+
+      sum_{k>c} (k-c) Q_k
+        = (E[N^2] - E[N])/2 - c E[N] + sum_{k<=c} (c - k) Q_k.
+
+    Both prefix sums stop at c <= s_max, inside the exactly-known pmf
+    band, so no truncation enters.  Returns ``(hold_corr, drops)`` as
+    (N, S, A) arrays, zero at wait / infeasible entries; hold_corr is in
+    c_hold units (E[int . du] / lam, hence the extra 1/lam).
+    """
+    N, A = y_a.shape
+    S = s_max + 2
+    T = s_max + 1
+    s_val = _state_values(s_max)
+    acts = np.arange(A)
+    ks = np.arange(T, dtype=np.float64)
+    pm = pmfs[:, :, :T]
+    P0 = np.cumsum(pm, axis=-1)  # (N, A, T): sum_{k<=c} p_k
+    P1 = np.cumsum(pm * ks, axis=-1)  # sum_{k<=c} k p_k
+    Q = np.maximum(0.0, 1.0 - P0)  # Q_c = P(N > c)
+    S0 = np.cumsum(Q, axis=-1)  # sum_{k<=c} Q_k
+    S1 = np.cumsum(Q * ks, axis=-1)  # sum_{k<=c} k Q_k
+    EN = lam[:, None] * y_a  # (N, A) = lam E[G_a]
+    EN2 = EN + lam[:, None] ** 2 * e2
+    base = s_val[:, None] - acts[None, :]  # (S, A): waiting after dispatch
+    c_cap = np.clip(s_max - base, 0, s_max).astype(np.int64)  # free slots
+    cf = c_cap.astype(np.float64)
+    a_idx = np.broadcast_to(acts[None, :], (S, A))
+    P0g = P0[:, a_idx, c_cap]  # (N, S, A)
+    P1g = P1[:, a_idx, c_cap]
+    S0g = S0[:, a_idx, c_cap]
+    S1g = S1[:, a_idx, c_cap]
+    drops = EN[:, None, :] - cf[None] + cf[None] * P0g - P1g
+    excess = (
+        0.5 * (EN2 - EN)[:, None, :]
+        - cf[None] * EN[:, None, :]
+        + cf[None] * S0g
+        - S1g
+    )
+    serve = feasible & (acts[None, None, :] >= 1)
+    drops = np.where(serve, np.maximum(0.0, drops), 0.0)
+    hold_corr = np.where(
+        serve, np.maximum(0.0, excess) / lam[:, None, None] ** 2, 0.0
+    )
+    return hold_corr, drops
+
+
 def build_smdp_batched(specs: Sequence[SMDPSpec]) -> BatchedSMDP:
     """Construct a stacked batch of truncated SMDPs (eq. 18-19, 23-25).
 
@@ -437,9 +525,31 @@ def build_smdp_batched(specs: Sequence[SMDPSpec]) -> BatchedSMDP:
         + 0.5 * e2[:, None, 1:]
     )
     c_energy = np.broadcast_to(zeta[:, None, :], (N, S, A)).copy()  # w2 term
+    # finite-buffer specs: S_o becomes an exact alias of state B = s_max
+    # (the banded backup already serves S_o from base s_max and folds the
+    # overflow tail back onto S_o, so duplicating B's cost rows makes the
+    # tail-fold the *physical* fold-at-B — an exact chain, not a
+    # truncation).  Serve costs get the exact capped-holding correction
+    # and the exact expected drop count; waiting at a full buffer sheds
+    # the next arrival.  Patches are indexed so tail-abstracted specs in
+    # the same batch stay byte-identical to the plain construction.
+    finite = np.array([sp.buffer is not None for sp in specs])
+    fin_idx = np.nonzero(finite)[0]
+    if fin_idx.size:
+        c_drop_arr = np.array([sp.c_drop for sp in specs])
+        hold_corr, drops = _finite_buffer_patches(
+            s_max, lam, y_a, e2, pmfs, feasible
+        )
+        c_hold[fin_idx] -= hold_corr[fin_idx]
     c_hat = w1[:, None, None] * c_hold + w2[:, None, None] * c_energy
-    # abstract cost at the overflow state (eq. 19): + c_o * y(s, a)
-    c_hat[:, s_o, :] += c_o[:, None] * y[:, s_o, :]
+    if fin_idx.size:
+        c_hat[fin_idx] += c_drop_arr[fin_idx, None, None] * drops[fin_idx]
+        c_hat[fin_idx, s_max, 0] += c_drop_arr[fin_idx]  # wait at B: 1 shed
+        c_hat[fin_idx, s_o, 0] += c_drop_arr[fin_idx]  # S_o aliases B
+    # abstract cost at the overflow state (eq. 19): + c_o * y(s, a) —
+    # tail-abstracted specs only (finite buffers have no abstract tail)
+    inf_idx = np.nonzero(~finite)[0]
+    c_hat[inf_idx, s_o, :] += c_o[inf_idx, None] * y[inf_idx, s_o, :]
 
     # --- banded transition data ---
     pm = pmfs[:, :, : s_max + 1].copy()  # k > s_max always lands in S_o
@@ -911,6 +1021,11 @@ def build_smdp_modulated_batched(
     b_max = specs[0].b_max
     K = phases[0].n_phases
     for sp, ph in zip(specs, phases):
+        if sp.buffer is not None:
+            raise NotImplementedError(
+                "finite-buffer builds are Poisson-only; use "
+                "build_smdp_batched (the overload-aware serving tables)"
+            )
         if sp.s_max != s_max or sp.b_max != b_max:
             raise ValueError("modulated batch must share (s_max, b_max)")
         if ph.n_phases != K:

@@ -120,6 +120,11 @@ def solve(
     "anderson" route through the accelerated machinery (rvi docstring).
     """
     cur = spec
+    if cur.buffer is not None:
+        # finite-buffer solve: no abstract tail to calibrate, and Delta is
+        # not a truncation error (B is physical) — never regrow
+        auto_c_o = False
+        delta = None
     if auto_c_o:
         cur = resolve_abstract_cost(cur)
     while True:

@@ -159,8 +159,12 @@ def pad_specs(specs: Sequence[SMDPSpec]) -> List[SMDPSpec]:
     if len(b_maxes) > 1:
         raise ValueError(f"sweep specs must share b_max; got {sorted(b_maxes)}")
     s_max = max(sp.s_max for sp in specs)
+    # finite-buffer specs are never padded: their truncation level IS the
+    # physical buffer (buffer == s_max is an exact-fold invariant)
     return [
-        sp if sp.s_max == s_max else dataclasses.replace(sp, s_max=s_max)
+        sp
+        if sp.s_max == s_max or sp.buffer is not None
+        else dataclasses.replace(sp, s_max=s_max)
         for sp in specs
     ]
 
@@ -318,6 +322,18 @@ def sweep_solve(
     path for fast-mixing sweeps where the polish is pure overhead.  Pass
     accel="none"/"mpi"/"anderson" to force a path.
     """
+    specs = list(specs)
+    flags = {sp.buffer is not None for sp in specs}
+    if len(flags) > 1:
+        raise ValueError(
+            "sweep_solve cannot mix finite-buffer and tail-abstracted "
+            "specs in one batch; solve the two families separately"
+        )
+    if flags and flags.pop():
+        # finite-buffer solves: no abstract tail to calibrate, and Delta
+        # is not a truncation error (B is physical) — never regrow
+        auto_c_o = False
+        delta = None
     specs = pad_specs(specs)
     if not specs:
         return []

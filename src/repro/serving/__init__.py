@@ -23,6 +23,13 @@ stream across M replicas (rr / jsq / pow2 / batch-aware routers, each
 replica with its own table) in the same compiled event kernel, streams
 billion-event horizons in O(chunk) memory (FleetStream), and sweeps the
 (seeds x scenarios) x policies x routers grid mesh-sharded.
+serving.faults injects degraded mode into every fleet lane: frozen
+outage/straggler schedules (FaultModel -> FaultSchedule), DOWN-masked
+failover routing, crash/requeue/bounded-retry-drop, prorated crash
+energy, and finite waiting-room shedding — verify_faults certifies the
+Python reference against the compiled kernel per router and arrival
+family; the single-server engine adds buffer=/shed_expired= admission
+control on its Python backend.
 """
 from .arrivals import (  # noqa: F401
     ArrivalEvent,
@@ -81,4 +88,9 @@ from .fleet import (  # noqa: F401
     simulate_fleet_stream,
     threshold_gaps,
     verify_fleet,
+)
+from .faults import (  # noqa: F401
+    FaultModel,
+    FaultSchedule,
+    verify_faults,
 )

@@ -34,6 +34,13 @@ scheduler and arrival-process state — so a restored engine reproduces an
 uninterrupted run exactly, in every arrival mode.  Energy is accounted
 whenever a source is available: a zeta(a) `energy_table` or a per-batch
 `energy_model(a, service_time)` callback (the executor-mode option).
+
+Degraded-mode admission control (Python backend): ``buffer=B`` bounds the
+waiting room — arrivals beyond B are refused at the door and counted in
+``EngineReport.n_shed``; ``shed_expired=True`` drops queued requests whose
+deadline has already passed at a decision epoch (``n_expired``).  The
+compiled single-server lane rejects both (the fleet lanes own compiled
+finite buffers: `simulate_fleet(buffer=...)`).
 """
 from __future__ import annotations
 
@@ -78,6 +85,8 @@ class EngineReport:
         default_factory=lambda: np.zeros(0, dtype=np.int64)
     )
     metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+    n_shed: int = 0  # arrivals refused by the finite waiting room
+    n_expired: int = 0  # queued requests shed past their deadline
 
     @property
     def power(self) -> float:
@@ -109,6 +118,8 @@ class ServingEngine:
         energy_model: Optional[Callable[[int, float], float]] = None,
         executor: Optional[Callable[[List[Request]], None]] = None,
         slo: Optional[float] = None,  # relative deadline per request
+        buffer: Optional[int] = None,  # finite waiting room B (None = inf)
+        shed_expired: bool = False,  # drop queued requests past deadline
         seed: int = 0,
         timer: Callable[[], float] = time.perf_counter,
         sleeper: Callable[[float], None] = time.sleep,
@@ -130,6 +141,10 @@ class ServingEngine:
         self.energy_model = energy_model
         self.executor = executor
         self.slo = slo
+        if buffer is not None and buffer < 0:
+            raise ValueError("buffer must be >= 0 (B = 0 sheds everything)")
+        self.buffer = buffer
+        self.shed_expired = bool(shed_expired)
         self.rng = np.random.default_rng(seed)
         self.queue: List[Request] = []
         self.t = 0.0
@@ -229,6 +244,8 @@ class ServingEngine:
         energy = 0.0
         have_energy = False
         slo_miss = 0
+        n_shed = 0
+        n_expired = 0
         t0 = self.t
         wall0 = self._timer() if wall else 0.0
         epochs = 0
@@ -243,8 +260,21 @@ class ServingEngine:
                     or (horizon is not None and nxt.arrival >= horizon)
                 ):
                     break
-                self._admit(nxt)
+                if self.buffer is not None and len(self.queue) >= self.buffer:
+                    # finite waiting room: refused at the door, never seen
+                    # by the scheduler (offered load, not admitted load)
+                    n_shed += 1
+                else:
+                    self._admit(nxt)
                 self._pending = None
+            if self.shed_expired:
+                keep = []
+                for r in self.queue:
+                    if r.deadline is not None and r.deadline <= now:
+                        n_expired += 1  # unmeetable even with zero service
+                    else:
+                        keep.append(r)
+                self.queue = keep
             a = self.scheduler.decide(len(self.queue))
             a = max(0, min(a, len(self.queue), self.b_max))
             epochs += 1
@@ -295,6 +325,8 @@ class ServingEngine:
             mean_batch=float(np.mean(batches)) if batches else 0.0,
             batch_sizes=np.asarray(batches, dtype=np.int64),
             metrics=metrics.report(),
+            n_shed=n_shed,
+            n_expired=n_expired,
         )
 
     # --- public modes ----------------------------------------------------
@@ -400,6 +432,12 @@ class ServingEngine:
             raise ValueError(
                 "compiled backend accounts energy via energy_table=; "
                 "per-batch energy_model callbacks need backend='python'"
+            )
+        if self.buffer is not None or self.shed_expired:
+            raise NotImplementedError(
+                "admission shedding (buffer= / shed_expired=) runs on "
+                "backend='python'; the compiled fleet lanes cover finite "
+                "waiting rooms (simulate_fleet(buffer=...))"
             )
         # online-adaptive schedulers lower to the compiled belief/adaptive
         # lanes: the bank-retuning controller runs inside the scan carry

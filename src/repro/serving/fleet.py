@@ -43,7 +43,23 @@ billion-event horizons run in O(chunk) memory.  Completions later than the
 chunk's last arrival are deferred to the next chunk (a later chunk's
 arrival may precede them); latencies are accounted at serve start, when
 the completion time is already known, so in-flight batches across a
-boundary are never double- or under-counted.
+boundary are never double- or under-counted.  Belief row-selection
+streams too: `FleetStream(phase_mode="belief_argmax" | "belief_mix",
+belief_filter=...)` forwards the MMPP posterior chunk by chunk
+(`belief_forward_jax` resumed from the carried filter state), so the
+non-oracle lanes reach the same O(chunk)-memory horizons.
+
+Degraded mode (`serving.faults`): a frozen `FaultSchedule` threads
+replica outage boundaries and per-attempt straggler multipliers through
+the kernel.  Routers mask DOWN replicas (rr scans forward for the first
+UP slot; score routers add a penalty term), a down-start strictly before
+an in-flight batch's completion crashes it — the requests requeue to the
+FRONT with bounded retries, then drop — crashed attempts burn prorated
+energy, and ``buffer=B`` bounds each replica's waiting room (overflow
+arrivals shed at admission).  All of it runs identically in the compiled
+kernel, `PythonFleet`, and `FleetStream` (fault cursors, retry counters
+and in-flight requeues carry across chunks); `verify_faults` certifies
+the contract per router and arrival family.
 """
 from __future__ import annotations
 
@@ -58,6 +74,7 @@ import jax.numpy as jnp
 
 from repro.core.service_models import ServiceModel  # noqa: F401  (x64 on import)
 
+from .arrivals import belief_forward_jax
 from .compiled import (
     _ADMIT_W,
     _bucket,
@@ -74,6 +91,12 @@ ROUTERS: Dict[str, int] = {"rr": 0, "jsq": 1, "pow2": 2, "batch_aware": 3}
 #: batch-aware combined score (gap * _GAP_SHIFT + jsq) inside int32
 _SCORE_QCAP = (1 << 14) - 1
 _GAP_SHIFT = 1 << 15
+#: additive int32 routing penalty for DOWN replicas: combined healthy
+#: scores stay < 2^30, so one penalty pushes every DOWN replica behind
+#: every UP one while preserving the among-down relative order
+_DOWN_PENALTY = 1 << 30
+#: buf_cap sentinel for "no finite waiting room" (queues never reach it)
+_NO_BUFFER = 1 << 30
 
 
 def router_id(router) -> int:
@@ -98,26 +121,25 @@ def _jsq_score(qlen: int, busy: bool) -> int:
 def _belief_phases(phase_mode, beliefs, phases, n_phases):
     """Resolve the fleet's phase stream from a belief posterior.
 
-    The fleet kernel selects one phase row fleet-wide (the last admitted
-    arrival's); the belief-argmax rule is therefore just a derived phase
-    stream — ``argmax(beliefs)`` through the existing phases plumbing,
-    exactly `simulate_compiled`'s lowering.  The belief-*mixture* rule
-    needs per-decision posterior rows inside the kernel, which the fleet
-    scan does not carry yet — it raises NotImplementedError (run each
-    replica through `simulate_compiled`'s mix lane instead).
+    Returns ``(phases, bel)``.  The fleet kernel selects one phase row
+    fleet-wide (the last admitted arrival's); the belief-argmax rule is
+    therefore just a derived phase stream — ``argmax(beliefs)`` through
+    the existing phases plumbing, exactly `simulate_compiled`'s lowering
+    (``bel`` comes back None).  The belief-*mixture* rule keeps the
+    posterior rows (``bel`` is the (N, K) array the kernel's mix lane
+    consumes) AND derives the same argmax phase stream — decisions blend
+    the per-phase actions, while the batch-aware router's threshold gaps
+    (a per-phase integer lookup) follow the MAP phase.
     """
     bel = _check_phase_mode(phase_mode, beliefs, n_phases)
     if bel is None:
-        return phases
+        return phases, None
     if phases is not None:
         raise ValueError("phases= and beliefs= are mutually exclusive")
-    if phase_mode == "belief_mix":
-        raise NotImplementedError(
-            "the fleet kernel has no belief-mixture lane; use "
-            'phase_mode="belief_argmax" or the single-server '
-            "simulate_compiled mix lane per replica"
-        )
-    return np.argmax(bel, axis=-1)
+    if bel.ndim not in (2, 3):  # (N, K) per-lane or (S, N, K) grids
+        raise ValueError(f"beliefs must be (N, K) or (S, N, K); got {bel.shape}")
+    phases = np.argmax(bel, axis=-1)
+    return phases, (bel if phase_mode == "belief_mix" else None)
 
 
 def threshold_gaps(tables: np.ndarray) -> np.ndarray:
@@ -179,6 +201,10 @@ class FleetResult:
     terminated: bool  # stream exhausted and every replica drained/stopped
     hist: np.ndarray  # (n_bins + 2,) counts; [0]=underflow, [-1]=overflow
     hist_edges: np.ndarray
+    # degraded-mode counters (zero on fault-free, unbuffered runs)
+    n_crashes: int = 0  # batch attempts killed by a replica down-start
+    n_dropped: int = 0  # requests dropped after max_retries crashes
+    n_shed: int = 0  # arrivals rejected by the finite waiting room
     # per-replica state (all (M,)): final queue lengths, busy clocks,
     # per-replica routed/served counts — conservation checks + stream carry
     qlen: np.ndarray = dataclasses.field(default_factory=lambda: np.zeros(0))
@@ -191,6 +217,8 @@ class FleetResult:
     latencies: Optional[np.ndarray] = None  # (n,) arrival-indexed (NaN unserved)
     served: Optional[np.ndarray] = None  # (n,) bool, arrival served this run
     arr_server: Optional[np.ndarray] = None  # (n,) replica each arrival joined
+    dropped: Optional[np.ndarray] = None  # (n,) bool, crash-dropped this run
+    shed: Optional[np.ndarray] = None  # (n,) bool, rejected at admission
 
     @property
     def batch_sizes(self) -> np.ndarray:
@@ -209,14 +237,14 @@ class FleetResult:
 
 
 def _fleet_scan_core(
-    tables, thr_gap, arrivals, deadlines, phases, router_u,
-    q0_times, q0_dl, draws, means, zeta, edges,
-    rid, t0, horizon, max_eps, drain, b_max,
-    rr0, ph0, busy0, nbat0, more_coming, t_last,
-    *, n_steps: int, record: bool,
+    tables, thr_gap, arrivals, deadlines, phases, beliefs, bel0, router_u,
+    q0_times, q0_dl, draws, means, zeta, edges, fb, fmult,
+    rid, t0, horizon, max_eps, drain, b_max, buf_cap, max_retries,
+    rr0, ph0, busy0, nbat0, needs0, fcur0, rty0, infl0, more_coming, t_last,
+    *, n_steps: int, record: bool, mix: bool,
 ):
     """The fleet event kernel: one scan step == one admission, one decision
-    epoch on one replica, or one clock advance.
+    epoch on one replica, one fault boundary, or one clock advance.
 
     Pure jax function (callers jit/vmap).  ``tables`` is (M, K, L);
     ``thr_gap`` the matching threshold_gaps array; ``arrivals`` sorted with
@@ -226,26 +254,59 @@ def _fleet_scan_core(
     for a fresh run); ``busy0``/``nbat0``/``rr0``/``ph0`` the carried
     replica clocks / draw cursors / router + phase state.
 
-    Streaming contract: with ``more_coming`` true, completions strictly
-    later than ``t_last`` (the chunk's last arrival) are deferred — the
-    next chunk's arrivals may precede them — and replicas park instead of
-    terminating.  Latency/SLO/energy are accounted at serve start (the
-    completion time is known then), so a batch in flight across the chunk
-    boundary is accounted exactly once, in the chunk that launched it.
+    Degraded-mode extensions (serving.faults semantics contract):
+
+      * ``fb`` (M, >=1) is the +inf-padded per-replica down-boundary array
+        (FaultSchedule.bounds, parity of the carried cursor ``fcur0`` =
+        availability) and ``fmult`` (M, >=1) the per-attempt service
+        multipliers.  Boundaries replay as their own steps, before any
+        admission/decision at the same clock, so routing masks always see
+        fresh parity.  A dispatched batch crashes iff the replica's next
+        down interval starts strictly before its would-be completion; the
+        crashed requests requeue to the FRONT (they keep their substream
+        positions) and after ``max_retries`` consecutive crashes the batch
+        is dropped (counted, never served).  Crashed-attempt energy is
+        prorated, zeta(a) * elapsed / service.
+      * ``buf_cap`` is the finite waiting room B (pass _NO_BUFFER to turn
+        it off): a routed arrival finding B requests already waiting
+        (queued + crashed-in-flight) is shed — it consumes its router
+        slot but never queues.
+      * ``mix=True`` — the belief-mixture action rule of the single-server
+        kernel: ``round(sum_k beliefs[last_adm, k] * table[m, k, q])``
+        with ``beliefs`` (size, K) posterior rows aligned with arrivals
+        and ``bel0`` the carried posterior row standing in before this
+        chunk's first admission.
+
+    With ``fb`` all-+inf, ``fmult`` all-ones, ``buf_cap`` = _NO_BUFFER and
+    ``mix=False`` every expression reduces bitwise to the fault-free
+    kernel (verify_fleet's rail).
+
+    Streaming contract: with ``more_coming`` true, completions (and fault
+    boundaries) strictly later than ``t_last`` (the chunk's last arrival)
+    are deferred — the next chunk's arrivals may precede them — and
+    replicas park instead of terminating.  Latency/SLO/energy are
+    accounted at serve start (the completion time is known then), so a
+    batch in flight across the chunk boundary is accounted exactly once,
+    in the chunk that launched it.
 
     Step priority, chosen so an M=1 fleet replays the single-server kernel
-    decision-for-decision: (1) a due arrival is admitted (routed, one per
-    step) before any decision; (2) else the lowest-index replica with a
-    pending decision flag decides — wait / serve / terminate, exactly
+    decision-for-decision: (0) a due fault boundary replays (lowest index
+    first, one per step); (1) else a due arrival is admitted (routed, one
+    per step) before any decision; (2) else the lowest-index replica with
+    a pending decision flag decides — wait / serve / terminate, exactly
     `compiled._scan_core`'s rules per replica; (3) else the clock advances
-    to the next arrival or completion, arrivals winning time ties (the
-    single-server kernel admits all due arrivals before deciding).
+    to the next arrival, completion, or relevant fault boundary, arrivals
+    winning time ties (the single-server kernel admits all due arrivals
+    before deciding), completions winning over boundaries (a batch whose
+    down interval starts exactly at its completion time finishes first).
     """
     M, K, L = tables.shape
     size = arrivals.shape[0]
     Q0 = q0_times.shape[1]
     n_bins = edges.shape[0] - 1
     n_draws = draws.shape[0]
+    nfb = fb.shape[1]
+    n_mult = fmult.shape[1]
     arr_adm = jnp.where(arrivals < horizon, arrivals, jnp.inf)
     i64 = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
     midx = jnp.arange(M)
@@ -255,60 +316,117 @@ def _fleet_scan_core(
     drain = jnp.asarray(drain, dtype=bool)
     t_last = jnp.asarray(t_last, dtype=jnp.float64)
     c0 = jnp.sum(jnp.isfinite(q0_times), axis=1).astype(i64)  # carried queue
+    fcur0 = jnp.asarray(fcur0, dtype=i64)
+    infl0 = jnp.asarray(infl0, dtype=i64)
 
     def step(carry, _):
         (t, n_adm, rr, ph, neps, nuse, done,
-         busy, qlen, n_route, n_srv, nbat, needs) = carry
+         busy, qlen, n_route, n_srv, nbat, needs,
+         fcur, rty, infl, ndrop, nshed) = carry
         idle = jnp.isinf(busy)
+        down = (fcur % 2) == 1  # odd cursor parity == inside a down interval
         ia = jnp.minimum(n_adm, size - 1)
         nxt = arr_adm[ia]
         stream_dead = jnp.isinf(nxt) & ~more_coming
-        # wake idle parked replicas for the b_max-capped tail drain
+        # wake idle parked replicas for the b_max-capped tail drain (UP
+        # replicas with no crashed batch pending; a DOWN replica wakes at
+        # its repair boundary instead)
         needs = needs | (
             stream_dead & idle & (qlen > 0) & drain & ~done
+            & ~down & (infl == 0)
         )
         active = ~done & (neps < max_eps)
-        due = active & (nxt <= t)
+        # next unreplayed fault boundary per replica (+inf past the end)
+        nb = jnp.where(
+            fcur < nfb, fb[midx, jnp.minimum(fcur, nfb - 1)], jnp.inf
+        )
+        bnd_pend = nb <= t
+        any_bnd = jnp.any(bnd_pend)
+        bstep = active & any_bnd
+        due = active & ~any_bnd & (nxt <= t)
         any_pend = jnp.any(needs)
-        dec_step = active & ~due & any_pend
-        adv = active & ~due & ~any_pend
+        dec_step = active & ~any_bnd & ~due & any_pend
+        adv = active & ~any_bnd & ~due & ~any_pend
+
+        # ---- (0) fault boundary: replay the lowest-index due one -----
+        m_b = jnp.argmax(bnd_pend).astype(i64)
+        one_b = midx == m_b
+        is_start = (fcur[m_b] % 2) == 0  # even cursor -> a down-start
+        crash_b = bstep & is_start & (infl[m_b] > 0)
+        give_up = crash_b & (rty[m_b] + 1 > max_retries)
+        requeue = crash_b & ~give_up
+        # the crashed batch's positions start where it was dispatched
+        # (nothing on this replica resolved since: no serves while a
+        # crashed batch is pending)
+        dbase = (n_srv[m_b] + ndrop[m_b]).astype(jnp.int32)
+        ndrop = ndrop + jnp.where(give_up & one_b, infl, 0)
+        qlen = qlen + jnp.where(requeue & one_b, infl, 0)
+        rty = jnp.where(
+            crash_b & one_b, jnp.where(give_up, 0, rty + 1), rty
+        )
+        infl = jnp.where(crash_b & one_b, 0, infl)
+        # a down-start silences any pending decision; the matching repair
+        # re-arms the replica if work queued up while it was down
+        needs = needs & ~(bstep & is_start & one_b)
+        needs = needs | (
+            bstep & ~is_start & one_b & (qlen > 0) & idle & (infl == 0)
+        )
+        fcur = fcur + jnp.where(bstep & one_b, 1, 0)
 
         # ---- (1) admission: route one due arrival --------------------
-        busy_flag = (~idle).astype(jnp.int32)
+        qeff = qlen + infl  # crashed in-flight requests still hold the room
+        busy_flag = (~idle | (infl > 0)).astype(jnp.int32)
         base = (
-            2 * jnp.minimum(qlen, _SCORE_QCAP).astype(jnp.int32) + busy_flag
+            2 * jnp.minimum(qeff, _SCORE_QCAP).astype(jnp.int32) + busy_flag
         )
+        # DOWN replicas lose to every UP one: rr scans forward from its
+        # slot for the first UP replica (all down -> its own slot); score
+        # routers add a +2^30 penalty (scores stay < 2^30, so int32 is
+        # safe and the among-down relative order is preserved)
+        pen = down.astype(jnp.int32) * _DOWN_PENALTY
         ph_arr = phases[ia]
-        m_rr = (rr % M).astype(i64)
-        m_jsq = jnp.argmin(base).astype(i64)
+        rr_idx = (rr + midx) % M
+        m_rr = rr_idx[
+            jnp.argmin(down[rr_idx].astype(jnp.int32))
+        ].astype(i64)
+        m_jsq = jnp.argmin(base + pen).astype(i64)
         u = router_u[ia]
         cand1 = jnp.minimum((u[0] * M).astype(i64), M - 1)
         cand2 = jnp.minimum((u[1] * M).astype(i64), M - 1)
-        m_p2 = jnp.where(base[cand1] <= base[cand2], cand1, cand2)
+        m_p2 = jnp.where(
+            base[cand1] + pen[cand1] <= base[cand2] + pen[cand2],
+            cand1, cand2,
+        )
         # batch-aware: distance to the next admission threshold, with a
         # busy replica's gap penalized by its backlog — an over-threshold
         # queue reports gap 0 while its server is mid-batch, and without
         # the penalty it would absorb the whole stream (equal gaps fall
         # back to the JSQ score)
-        gaps = thr_gap[midx, ph_arr, jnp.clip(qlen, 0, L - 1)].astype(
+        gaps = thr_gap[midx, ph_arr, jnp.clip(qeff, 0, L - 1)].astype(
             jnp.int32
         )
         gaps = jnp.minimum(
-            gaps + busy_flag * jnp.minimum(qlen, _SCORE_QCAP).astype(
+            gaps + busy_flag * jnp.minimum(qeff, _SCORE_QCAP).astype(
                 jnp.int32
             ),
             _SCORE_QCAP,
         )
-        m_ba = jnp.argmin(gaps * _GAP_SHIFT + base).astype(i64)
+        m_ba = jnp.argmin(gaps * _GAP_SHIFT + base + pen).astype(i64)
         m_r = jnp.select(
             [rid == 0, rid == 1, rid == 2], [m_rr, m_jsq, m_p2], m_ba
         )
         one_r = midx == m_r
-        pos_out = jnp.where(due, n_route[m_r], 0).astype(jnp.int32)
+        # finite waiting room: a routed arrival finding B requests already
+        # waiting is shed — it consumes its router slot (rr advances, the
+        # phase updates) but never occupies a substream position
+        shed = due & (qeff[m_r] >= buf_cap)
+        admit = due & ~shed
+        pos_out = jnp.where(admit, n_route[m_r], 0).astype(jnp.int32)
         adm_idx = jnp.where(due, n_adm, size).astype(jnp.int32)
-        qlen = qlen + jnp.where(due & one_r, 1, 0)
-        n_route = n_route + jnp.where(due & one_r, 1, 0)
-        needs = needs | (due & one_r & idle)
+        qlen = qlen + jnp.where(admit & one_r, 1, 0)
+        n_route = n_route + jnp.where(admit & one_r, 1, 0)
+        nshed = nshed + jnp.where(shed & one_r, 1, 0)
+        needs = needs | (admit & one_r & idle & ~down & (infl == 0))
         ph = jnp.where(due, ph_arr, ph)
         rr = rr + due.astype(i64)
         n_adm = n_adm + due.astype(i64)
@@ -316,27 +434,56 @@ def _fleet_scan_core(
         # ---- (2) decision epoch on the first pending replica ---------
         m_d = jnp.argmax(needs).astype(i64)  # lowest-index True
         q_d = qlen[m_d]
-        a = tables[m_d, ph, jnp.minimum(q_d, L - 1)]
+        if mix:
+            # belief-mixture action rule (compiled._scan_core's mix lane):
+            # posterior-weighted blend of the per-phase actions, rounded.
+            # Before this chunk's first admission the carried posterior
+            # row bel0 stands in for "the last admitted arrival's belief"
+            bi = jnp.clip(n_adm - 1, 0, size - 1)
+            bel_row = jnp.where(n_adm > 0, beliefs[bi], bel0)
+            a = jnp.round(
+                jnp.sum(bel_row * tables[m_d, :, jnp.minimum(q_d, L - 1)])
+            ).astype(i64)
+        else:
+            a = tables[m_d, ph, jnp.minimum(q_d, L - 1)]
         a = jnp.clip(a, 0, jnp.minimum(q_d, b_max))
         live = ~stream_dead  # arrivals may still come (this chunk or later)
         force = dec_step & (a == 0) & ~live & (q_d > 0) & drain
         a = jnp.where(force, jnp.minimum(q_d, b_max), a)
-        serve = dec_step & (a > 0)
-        a = jnp.where(serve, a, 0)
-        svc = means[a] * draws[jnp.minimum(nbat[m_d], n_draws - 1)]
+        dispatch = dec_step & (a > 0)
+        a = jnp.where(dispatch, a, 0)
+        svc = (
+            means[a]
+            * draws[jnp.minimum(nbat[m_d], n_draws - 1)]
+            * fmult[m_d, jnp.minimum(nbat[m_d], n_mult - 1)]
+        )
         t_done = t + svc
+        # crash pre-resolution: the batch fails iff the replica's next
+        # down interval starts strictly before the would-be completion
+        # (a boundary exactly at t_done completes first).  The deciding
+        # replica is UP, so nb[m_d] is its next down-START and > t
+        ds_d = nb[m_d]
+        will_crash = dispatch & (ds_d < t_done)
+        serve = dispatch & ~will_crash
         one_d = midx == m_d
         sel = serve & one_d
         busy = jnp.where(sel, t_done, busy)
-        qlen = qlen - jnp.where(sel, a, 0)
-        start = n_srv[m_d].astype(jnp.int32)
+        qlen = qlen - jnp.where(dispatch & one_d, a, 0)
+        start = (n_srv[m_d] + ndrop[m_d]).astype(jnp.int32)
         n_srv = n_srv + jnp.where(sel, a, 0)
-        nbat = nbat + jnp.where(sel, 1, 0)
+        infl = infl + jnp.where(will_crash & one_d, a, 0)
+        rty = jnp.where(sel, 0, rty)
+        nbat = nbat + jnp.where(dispatch & one_d, 1, 0)
         neps = neps + dec_step.astype(i64)
         needs = needs & ~(dec_step & one_d)
         m_dec = jnp.where(dec_step, m_d, M).astype(jnp.int32)
+        # energy: full zeta on success; a crashed attempt burns prorated
+        # energy for the time it actually ran before the down-start
+        e_out = jnp.where(serve, zeta[a], 0.0) + jnp.where(
+            will_crash, zeta[a] * (ds_d - t) / svc, 0.0
+        )
 
-        # ---- (3) advance: next arrival or (non-deferred) completion --
+        # ---- (3) advance: arrival, completion, or fault boundary -----
         # streaming deferral: once this chunk's arrivals are exhausted,
         # only completions STRICTLY before the last arrival may process —
         # the next chunk may open with an arrival at that exact time, and
@@ -345,10 +492,21 @@ def _fleet_scan_core(
         busy_eff = jnp.where(comp_ok, busy, jnp.inf)
         m_c = jnp.argmin(busy_eff).astype(i64)
         t_c = busy_eff[m_c]
-        adv_arr = adv & jnp.isfinite(nxt) & (nxt <= t_c)
-        adv_cmp = adv & ~adv_arr & jnp.isfinite(t_c)
-        stuck = adv & ~adv_arr & ~adv_cmp  # drained (term) or deferred (park)
-        t = jnp.where(adv_arr, nxt, jnp.where(adv_cmp, t_c, t))
+        # boundaries only matter to replicas with queued or crashed work
+        # (the repair wakes them); an empty idle replica's boundaries
+        # replay lazily once some other event moves the clock past them.
+        # The same streaming deferral as completions applies
+        bnd_ok = jnp.isfinite(nxt) | stream_dead | (nb < t_last)
+        nb_eff = jnp.where(((qlen > 0) | (infl > 0)) & bnd_ok, nb, jnp.inf)
+        t_b = jnp.min(nb_eff)
+        adv_arr = adv & jnp.isfinite(nxt) & (nxt <= t_c) & (nxt <= t_b)
+        adv_cmp = adv & ~adv_arr & jnp.isfinite(t_c) & (t_c <= t_b)
+        adv_bnd = adv & ~adv_arr & ~adv_cmp & jnp.isfinite(t_b)
+        stuck = adv & ~adv_arr & ~adv_cmp & ~adv_bnd  # drained or deferred
+        t = jnp.where(
+            adv_arr, nxt,
+            jnp.where(adv_cmp, t_c, jnp.where(adv_bnd, t_b, t)),
+        )
         one_c = midx == m_c
         busy = jnp.where(adv_cmp & one_c, jnp.inf, busy)
         needs = needs | (adv_cmp & one_c)
@@ -357,66 +515,95 @@ def _fleet_scan_core(
         carry = (
             t, n_adm, rr, ph, neps, nuse + active.astype(i64), done,
             busy, qlen, n_route, n_srv, nbat, needs,
+            fcur, rty, infl, ndrop, nshed,
         )
-        a32 = jnp.where(serve, a, 0).astype(jnp.int32)
-        m_srv = jnp.where(serve, m_d, M).astype(jnp.int32)
-        out = (a32, m_dec, m_srv, start, t_done, adm_idx,
-               jnp.where(due, m_r, M).astype(jnp.int32), pos_out)
+        a32 = jnp.where(dispatch, a, 0).astype(jnp.int32)
+        # one shared mark stream for the position reconstruction: serves
+        # scatter odd values (2*step + 1), batch drops even (2*step)
+        mark_m = jnp.where(
+            serve, m_d, jnp.where(give_up, m_b, M)
+        ).astype(jnp.int32)
+        mark_pos = jnp.where(
+            serve, start, jnp.where(give_up, dbase, 0)
+        ).astype(jnp.int32)
+        out = (a32, m_dec, mark_m, mark_pos, serve, t_done, adm_idx,
+               jnp.where(due, m_r, M).astype(jnp.int32), pos_out, shed,
+               e_out)
         return carry, out
 
     zero = jnp.asarray(0, dtype=i64)
     zv = jnp.zeros(M, dtype=i64)
+    down_init = (fcur0 % 2) == 1
     carry0 = (
         jnp.asarray(t0, dtype=jnp.float64), zero,
         jnp.asarray(rr0, dtype=i64), jnp.asarray(ph0, dtype=i64),
         zero, zero, jnp.asarray(False),
-        jnp.asarray(busy0, dtype=jnp.float64), c0, c0, zv,
-        jnp.asarray(nbat0, dtype=i64), jnp.isinf(busy0),
+        jnp.asarray(busy0, dtype=jnp.float64),
+        c0 - infl0, c0, zv,
+        jnp.asarray(nbat0, dtype=i64),
+        # chunk carries hand in the exact pending-decision flags; fresh
+        # runs arm every idle healthy replica (the t0 decision round)
+        jnp.asarray(needs0, dtype=bool)
+        & jnp.isinf(busy0) & (infl0 == 0) & ~down_init,
+        fcur0, jnp.asarray(rty0, dtype=i64), infl0, zv, zv,
     )
     carry, outs = jax.lax.scan(step, carry0, None, length=n_steps, unroll=2)
-    (a_seq, mdec_seq, msrv_seq, start_seq, tdone_seq,
-     adm_seq, mr_seq, pos_seq) = outs
+    (a_seq, mdec_seq, markm_seq, markpos_seq, srv_seq, tdone_seq,
+     adm_seq, mr_seq, pos_seq, shed_seq, e_seq) = outs
     (t, n_adm, rr, ph, neps, nuse, done,
-     busy, qlen, n_route, n_srv, nbat, needs) = carry
+     busy, qlen, n_route, n_srv, nbat, needs,
+     fcur, rty, infl, ndrop, nshed) = carry
 
     # --- vectorized per-request reconstruction --------------------------
-    # Substream positions are per replica: request p on replica m completes
-    # at the serve epoch whose interval [start, start + a) contains p.
-    # Scatter each serve's step index at (replica, start) and cummax along
-    # positions — the single-server trick, one row per replica (+1 dump row
-    # for non-serve steps).  Carried q0 requests occupy positions [0, c0),
-    # this chunk's routed arrivals [c0, n_route).
-    energy = jnp.sum(zeta[a_seq])
+    # Substream positions are per replica: request p on replica m resolves
+    # at the serve (or drop) whose interval [base, base + a) contains p.
+    # Scatter each resolver's parity-tagged step (2*step + is_serve) at
+    # (replica, base) and cummax along positions — the single-server trick,
+    # one row per replica (+1 dump row for other steps); the parity of the
+    # governing mark says served vs crash-dropped.  Carried q0 requests
+    # occupy positions [0, c0), this chunk's routed arrivals [c0, n_route).
+    energy = jnp.sum(e_seq)
     P_sub = Q0 + size  # max substream length per replica
     steps32 = jnp.arange(n_steps, dtype=jnp.int32)
+    vals = 2 * steps32 + srv_seq.astype(jnp.int32)
     mark = jnp.full((M + 1, P_sub), -1, dtype=jnp.int32).at[
-        msrv_seq, start_seq
-    ].max(steps32, mode="drop")
-    epoch_of = jax.lax.cummax(mark[:M], axis=1)
-    # a position is served iff it falls inside a serve interval AND below
-    # the replica's served count (cummax carries the last epoch past the
-    # end of what was actually served — e.g. a budget-cut or drain=False
-    # run leaves a queued tail that must stay unserved)
+        markm_seq, markpos_seq
+    ].max(vals, mode="drop")
+    vcum = jax.lax.cummax(mark[:M], axis=1)
+    epoch_of = vcum >> 1  # the resolving step index
+    # a position is resolved iff it falls inside a mark interval AND below
+    # the replica's resolved count (cummax carries the last mark past the
+    # end of what was actually resolved — e.g. a budget-cut or drain=False
+    # run leaves a queued tail that must stay unresolved)
     pos_grid = jnp.arange(P_sub)[None, :]
-    served_grid = (epoch_of >= 0) & (pos_grid < n_srv[:, None])
+    resolved = (vcum >= 0) & (pos_grid < (n_srv + ndrop)[:, None])
+    served_grid = resolved & ((vcum & 1) == 1)
+    dropped_grid = resolved & ((vcum & 1) == 0)
     comp_grid = tdone_seq[jnp.clip(epoch_of, 0)]
 
     # carried-queue part: positions [0, Q0) of each replica's substream
-    q0_served = served_grid[:, :Q0] & jnp.isfinite(q0_times)
+    q0_fin = jnp.isfinite(q0_times)
+    q0_served = served_grid[:, :Q0] & q0_fin
+    q0_dropped = dropped_grid[:, :Q0] & q0_fin
     q0_comp = comp_grid[:, :Q0]
     q0_lat = jnp.where(q0_served, q0_comp - q0_times, 0.0)
     q0_miss = jnp.sum(q0_served & (q0_comp > q0_dl))
 
-    # arrival part: scatter each admitted arrival's (replica, position)
+    # arrival part: scatter each routed arrival's (replica, position);
+    # shed arrivals record their would-be replica but hold no position
     arr_server = jnp.full(size, M, dtype=jnp.int32).at[adm_seq].set(
         mr_seq, mode="drop"
     )
     arr_pos = jnp.zeros(size, dtype=jnp.int32).at[adm_seq].set(
         pos_seq, mode="drop"
     )
-    admitted = arr_server < M
+    arr_shed = jnp.zeros(size, dtype=bool).at[adm_seq].set(
+        shed_seq, mode="drop"
+    )
+    admitted = (arr_server < M) & ~arr_shed
     ms = jnp.clip(arr_server, 0, M - 1)
     arr_served = admitted & served_grid[ms, arr_pos]
+    arr_dropped = admitted & dropped_grid[ms, arr_pos]
     arr_comp = comp_grid[ms, arr_pos]
     arr_lat = jnp.where(arr_served, arr_comp - arrivals, 0.0)
     arr_miss = jnp.sum(arr_served & (arr_comp > deadlines))
@@ -432,9 +619,15 @@ def _fleet_scan_core(
         jnp.where(all_ok, bins, 0)
     ].add(all_ok.astype(i64))
 
+    n_batches = jnp.sum(srv_seq.astype(i64))  # successful serves
+    n_attempts = jnp.sum(nbat) - jnp.sum(jnp.asarray(nbat0))
     agg = {
         "t_final": t, "n_admitted": n_adm, "n_served": n_served,
-        "n_batches": jnp.sum(nbat) - jnp.sum(jnp.asarray(nbat0)),
+        "n_batches": n_batches,
+        # crashes are counted at dispatch (the chunk that launched the
+        # attempt), matching the serve-start accounting discipline
+        "n_crashes": n_attempts - n_batches,
+        "n_dropped": jnp.sum(ndrop), "n_shed": jnp.sum(nshed),
         "n_epochs": neps, "n_steps_used": nuse,
         "terminated": done & ~more_coming,
         "parked": done & more_coming,
@@ -443,27 +636,31 @@ def _fleet_scan_core(
         "slo_miss": q0_miss + arr_miss, "hist": hist,
         # per-replica state (stream carry + conservation checks)
         "qlen": qlen, "busy": busy, "n_route": n_route, "n_srv": n_srv,
-        "nbat": nbat, "rr": rr, "ph": ph,
+        "nbat": nbat, "rr": rr, "ph": ph, "needs": needs,
+        "fcur": fcur, "rty": rty, "infl": infl,
+        "ndrop_m": ndrop, "nshed_m": nshed,
     }
     if not record:
         return agg
-    rec = (a_seq, mdec_seq, arr_lat, arr_served, arr_server, arr_pos,
-           q0_lat, q0_served)
+    rec = (a_seq, mdec_seq, arr_lat, arr_served, arr_dropped, arr_shed,
+           arr_server, arr_pos, q0_lat, q0_served, q0_dropped)
     return agg, rec
 
 
-@partial(jax.jit, static_argnames=("n_steps", "record"))
-def _fleet_jit(tables, thr_gap, arrivals, deadlines, phases, router_u,
-               q0_times, q0_dl, draws, means, zeta, edges,
-               rid, t0, horizon, max_eps, drain, b_max,
-               rr0, ph0, busy0, nbat0, more_coming, t_last,
-               n_steps, record):
+@partial(jax.jit, static_argnames=("n_steps", "record", "mix"))
+def _fleet_jit(tables, thr_gap, arrivals, deadlines, phases, beliefs, bel0,
+               router_u, q0_times, q0_dl, draws, means, zeta, edges,
+               fb, fmult, rid, t0, horizon, max_eps, drain, b_max,
+               buf_cap, max_retries,
+               rr0, ph0, busy0, nbat0, needs0, fcur0, rty0, infl0,
+               more_coming, t_last, n_steps, record, mix):
     return _fleet_scan_core(
-        tables, thr_gap, arrivals, deadlines, phases, router_u,
-        q0_times, q0_dl, draws, means, zeta, edges,
-        rid, t0, horizon, max_eps, drain, b_max,
-        rr0, ph0, busy0, nbat0, more_coming, t_last,
-        n_steps=n_steps, record=record,
+        tables, thr_gap, arrivals, deadlines, phases, beliefs, bel0,
+        router_u, q0_times, q0_dl, draws, means, zeta, edges, fb, fmult,
+        rid, t0, horizon, max_eps, drain, b_max, buf_cap, max_retries,
+        rr0, ph0, busy0, nbat0, needs0, fcur0, rty0, infl0,
+        more_coming, t_last,
+        n_steps=n_steps, record=record, mix=mix,
     )
 
 
@@ -488,9 +685,33 @@ def _norm_tables(tables, *, want_m: Optional[int] = None) -> np.ndarray:
     return t
 
 
+def _prep_faults(faults, M: int):
+    """FaultSchedule | None -> (fb, fmult, max_retries) kernel arrays.
+
+    ``fb`` always ships >= 1 column (all-+inf when fault-free) so the
+    kernel's boundary gather never indexes an empty axis.
+    """
+    if faults is None:
+        return np.full((M, 1), np.inf), np.ones((M, 1)), 0
+    from .faults import FaultSchedule
+
+    if not isinstance(faults, FaultSchedule):
+        raise TypeError(
+            "faults= must be a FaultSchedule (FaultModel.materialize())"
+        )
+    if faults.n_replicas != M:
+        raise ValueError(
+            f"fault schedule covers {faults.n_replicas} replicas, fleet has {M}"
+        )
+    fb = faults.bounds
+    if fb.shape[1] == 0:
+        fb = np.full((M, 1), np.inf)
+    return fb, faults.mult, int(faults.max_retries)
+
+
 def _prep_inputs(
     tables, arrivals, *, means, zeta, draws, b_max, deadlines, phases,
-    slo, hist_edges, router_u, router_seed,
+    slo, hist_edges, router_u, router_seed, bel=None,
 ):
     """Shared normalization for simulate_fleet / FleetStream / the grid."""
     tables = _norm_tables(tables)
@@ -501,6 +722,7 @@ def _prep_inputs(
             raise ValueError("pass slo= or deadlines=, not both")
         deadlines = np.where(np.isfinite(arr), arr + slo, np.inf)
     if len(arr) < _ADMIT_W or not np.isinf(arr[-_ADMIT_W:]).all():
+        raw = arr
         padded = pad_arrivals(
             arr, deadlines,
             phases=phases if phases is not None else None,
@@ -510,6 +732,14 @@ def _prep_inputs(
             ph = np.zeros(len(arr), dtype=np.int64)
         else:
             arr, dl, ph = padded
+        if bel is not None:
+            # co-sort/pad the posterior rows exactly like pad_arrivals
+            finite = np.isfinite(raw)
+            kept = bel[finite]
+            order = np.argsort(raw[finite], kind="stable")
+            bel_p = np.zeros((len(arr), bel.shape[1]))
+            bel_p[: len(kept)] = kept[order]
+            bel = bel_p
     else:
         dl = (
             np.asarray(deadlines, dtype=np.float64)
@@ -523,6 +753,8 @@ def _prep_inputs(
         )
     if len(dl) != len(arr) or len(ph) != len(arr):
         raise ValueError("padded deadlines/phases must align with arrivals")
+    if bel is not None and len(bel) != len(arr):
+        raise ValueError("padded beliefs must align with arrivals")
     if phases is not None and K > 1 and (ph.min() < 0 or ph.max() >= K):
         raise ValueError(f"phases outside the table stack [0, {K})")
     if K > 1 and phases is None:
@@ -551,7 +783,7 @@ def _prep_inputs(
         if hist_edges is None
         else np.asarray(hist_edges, dtype=np.float64)
     )
-    return tables, arr, dl, ph, router_u, means, zeta_a, draws, edges
+    return tables, arr, dl, ph, bel, router_u, means, zeta_a, draws, edges
 
 
 def simulate_fleet(
@@ -576,6 +808,8 @@ def simulate_fleet(
     record: bool = False,
     router_u=None,
     router_seed: int = 0,
+    faults=None,
+    buffer: Optional[int] = None,
 ) -> FleetResult:
     """Run M replica policy tables over one routed arrival trace, compiled.
 
@@ -585,11 +819,21 @@ def simulate_fleet(
     the single-server kernel's oracle-phase discipline).  Non-oracle row
     selection: ``phase_mode="belief_argmax"`` with ``beliefs`` (n, K)
     posterior rows (`arrivals.belief_forward_jax`) derives the phase
-    stream from the filter posterior instead of an oracle switch trace
-    (``belief_mix`` is single-server only).  ``router`` is one
+    stream from the filter posterior instead of an oracle switch trace;
+    ``"belief_mix"`` keeps the posterior rows and blends the per-phase
+    actions per decision (the single-server mix rule; the batch-aware
+    router's threshold gaps follow the MAP phase).  ``router`` is one
     of ``rr | jsq | pow2 | batch_aware``; pow2 consumes ``router_u``
     ((n, 2) uniforms, drawn from ``router_seed`` when absent) so the
     compiled lane and the PythonFleet reference route identically.
+
+    Degraded-mode knobs: ``faults`` is a `serving.faults.FaultSchedule`
+    (routers mask DOWN replicas; a mid-service down-start crashes the
+    in-flight batch, which requeues to the front and — after the
+    schedule's ``max_retries`` consecutive crashes — is dropped);
+    ``buffer`` a finite waiting room B (a routed arrival finding B
+    requests waiting is shed).  Both default off and are then bitwise
+    no-ops on the kernel.
 
     Service/energy conventions are `simulate_compiled`'s: service time of a
     batch of a is ``means[a] * draws[k]`` with one draw consumed per serve
@@ -598,51 +842,73 @@ def simulate_fleet(
     identical to the single-server kernel.
 
     ``record=True`` additionally returns the per-epoch decision log
-    (action + deciding replica) and arrival-indexed latencies — O(n)
-    buffers; for long horizons use `FleetStream` / `simulate_fleet_stream`
-    which fold chunks into O(1) aggregates instead.
+    (action + deciding replica), arrival-indexed latencies, and the
+    per-arrival dropped/shed flags — O(n) buffers; for long horizons use
+    `FleetStream` / `simulate_fleet_stream` which fold chunks into O(1)
+    aggregates instead.
     """
     rid = router_id(router)
+    bel = None
     if phase_mode != "oracle" or beliefs is not None:
         if beliefs is not None and (
             np.asarray(beliefs).ndim != 2
             or len(np.asarray(beliefs)) != len(np.asarray(arrivals))
         ):
             raise ValueError("beliefs must be (n, K) aligned with arrivals")
-        phases = _belief_phases(
+        phases, bel = _belief_phases(
             phase_mode, beliefs, phases, _norm_tables(tables).shape[1]
         )
-    (tables, arr, dl, ph, router_u, means, zeta_a, draws, edges) = (
+    (tables, arr, dl, ph, bel, router_u, means, zeta_a, draws, edges) = (
         _prep_inputs(
             tables, arrivals, means=means, zeta=zeta, draws=draws,
             b_max=b_max, deadlines=deadlines, phases=phases, slo=slo,
             hist_edges=hist_edges, router_u=router_u,
-            router_seed=router_seed,
+            router_seed=router_seed, bel=bel,
         )
     )
     M = tables.shape[0]
     thr = threshold_gaps(tables)
+    fb, fmult, max_retries = _prep_faults(faults, M)
+    n_bnd = int(np.isfinite(fb).sum())
+    if buffer is not None and int(buffer) < 0:
+        raise ValueError("buffer must be >= 0")
+    buf_cap = _NO_BUFFER if buffer is None else int(buffer)
+    mix = bel is not None
+    bel_j = jnp.asarray(bel) if mix else jnp.zeros((1, 1))
+    bel0_j = bel_j[0]
     n_arr = int(np.sum(np.isfinite(arr)))
-    max_eps = (2 * n_arr + M + 4) if max_epochs is None else int(max_epochs)
+    # crashes re-serve their batch and repairs wake queued replicas —
+    # at most two extra epochs per finite fault boundary
+    max_eps = (
+        (2 * n_arr + M + 4 + 2 * n_bnd)
+        if max_epochs is None
+        else int(max_epochs)
+    )
     q0_t = np.full((M, 1), np.inf)
     q0_d = np.full((M, 1), np.inf)
     busy0 = np.full(M, np.inf)
     nbat0 = np.zeros(M, dtype=np.int64)
-    # one step per admission, epoch, or advance; each epoch/admission is
-    # preceded by at most one advance, so 2x is a hard cap
-    cap = _bucket(2 * (n_arr + max_eps) + 2 * M + 8)
+    zm = np.zeros(M, dtype=np.int64)
+    # one step per admission, epoch, boundary, or advance; each of those
+    # is preceded by at most one advance, so 2x is a hard cap
+    cap = _bucket(2 * (n_arr + max_eps + n_bnd) + 2 * M + 8)
     n_steps = min(_bucket(max(256, (3 * n_arr) // 2 + 2 * M + 8)), cap)
     while True:
         out = _fleet_jit(
             jnp.asarray(tables), jnp.asarray(thr), jnp.asarray(arr),
-            jnp.asarray(dl), jnp.asarray(ph), jnp.asarray(router_u),
+            jnp.asarray(dl), jnp.asarray(ph), bel_j, bel0_j,
+            jnp.asarray(router_u),
             jnp.asarray(q0_t), jnp.asarray(q0_d), jnp.asarray(draws),
             jnp.asarray(means), jnp.asarray(zeta_a), jnp.asarray(edges),
+            jnp.asarray(fb), jnp.asarray(fmult),
             int(rid), float(t0),
             np.inf if horizon is None else float(horizon),
             max_eps, bool(drain), int(b_max),
+            int(buf_cap), int(max_retries),
             0, 0, jnp.asarray(busy0), jnp.asarray(nbat0),
-            False, np.inf, int(n_steps), bool(record),
+            jnp.ones(M, dtype=bool),
+            jnp.asarray(zm), jnp.asarray(zm), jnp.asarray(zm),
+            False, np.inf, int(n_steps), bool(record), mix,
         )
         agg = out[0] if record else out
         if n_steps >= cap or not bool(agg["incomplete"]):
@@ -662,15 +928,17 @@ def simulate_fleet(
         terminated=bool(agg["terminated"]),
         hist=agg["hist"],
         hist_edges=edges,
+        n_crashes=int(agg["n_crashes"]),
+        n_dropped=int(agg["n_dropped"]),
+        n_shed=int(agg["n_shed"]),
         qlen=agg["qlen"],
         busy=agg["busy"],
         n_routed=agg["n_route"],
         n_served_m=agg["n_srv"],
     )
     if record:
-        a_seq, mdec_seq, arr_lat, arr_served, arr_server, _ = (
-            np.asarray(x) for x in rec[:6]
-        )
+        (a_seq, mdec_seq, arr_lat, arr_served, arr_dropped, arr_shed,
+         arr_server) = (np.asarray(x) for x in rec[:7])
         dec = mdec_seq < M
         res.actions = a_seq[dec].astype(np.int64)
         res.servers = mdec_seq[dec].astype(np.int64)
@@ -680,6 +948,8 @@ def simulate_fleet(
         res.arr_server = np.where(
             arr_server[:n] < M, arr_server[:n], -1
         ).astype(np.int64)
+        res.dropped = arr_dropped[:n]
+        res.shed = arr_shed[:n]
     return res
 
 
@@ -715,14 +985,21 @@ class PythonFleet:
         drain: bool = True,
         deadlines=None,
         phases=None,
+        phase_mode: str = "oracle",
+        beliefs=None,
         slo: Optional[float] = None,
         router_u=None,
         router_seed: int = 0,
+        faults=None,
+        buffer: Optional[int] = None,
     ):
         self.tables = _norm_tables(tables)
         self.M, self.K, self.L = self.tables.shape
         self.rid = router_id(router)
         self.thr = threshold_gaps(self.tables)
+        bel = None
+        if phase_mode != "oracle" or beliefs is not None:
+            phases, bel = _belief_phases(phase_mode, beliefs, phases, self.K)
         times = np.asarray(arrivals, dtype=np.float64)
         finite = np.isfinite(times)
         times = times[finite]
@@ -741,12 +1018,15 @@ class PythonFleet:
             self.phases = np.asarray(phases, dtype=np.int64)[finite][order]
         else:
             self.phases = np.zeros(len(self.times), dtype=np.int64)
+        self.bel = None if bel is None else bel[finite][order]
         if self.K > 1 and phases is None:
             raise ValueError("phase-indexed (M, K, L) tables need phases=")
         if horizon is not None:
             keep = self.times < horizon
             self.times, self.deadlines = self.times[keep], self.deadlines[keep]
             self.phases = self.phases[keep]
+            if self.bel is not None:
+                self.bel = self.bel[keep]
         self.n = len(self.times)
         if router_u is None:
             router_u = np.random.default_rng(router_seed).random((self.n, 2))
@@ -764,6 +1044,10 @@ class PythonFleet:
         )
         self.b_max = int(b_max)
         self.drain = bool(drain)
+        self.fb, self.fmult, self.max_retries = _prep_faults(faults, self.M)
+        if buffer is not None and int(buffer) < 0:
+            raise ValueError("buffer must be >= 0")
+        self.buf_cap = _NO_BUFFER if buffer is None else int(buffer)
         # --- mutable run state -----------------------------------------
         self.t = float(t0)
         self.i = 0  # arrival cursor
@@ -776,37 +1060,74 @@ class PythonFleet:
         self.n_srv = [0] * self.M
         self.neps = 0
         self.done = False
+        # degraded-mode state: boundary cursor (odd parity = DOWN),
+        # consecutive-crash counter, the crashed in-flight batch
+        self.fcur = [0] * self.M
+        self.rty = [0] * self.M
+        self.infl_req: List[List[int]] = [[] for _ in range(self.M)]
+        self.ndrop = [0] * self.M
+        self.nshed = [0] * self.M
         # --- outputs ---------------------------------------------------
         self.decisions: List[tuple] = []  # (replica, action) incl. waits
         self.latencies = np.full(self.n, np.nan)
         self.served = np.zeros(self.n, dtype=bool)
+        self.dropped = np.zeros(self.n, dtype=bool)
+        self.shed = np.zeros(self.n, dtype=bool)
         self.arr_server = np.full(self.n, -1, dtype=np.int64)
         self.energy = 0.0
         self.slo_miss = 0
+        self.n_crashes = 0
+
+    # --- fault helpers ---------------------------------------------------
+    def _down(self, m: int) -> bool:
+        return self.fcur[m] % 2 == 1
+
+    def _next_bound(self, m: int) -> float:
+        if self.fcur[m] >= self.fb.shape[1]:
+            return float("inf")
+        return float(self.fb[m, self.fcur[m]])
 
     # --- router ---------------------------------------------------------
     def _route(self, i: int) -> int:
-        base = [
-            _jsq_score(len(self.queues[m]), np.isfinite(self.busy[m]))
+        qeff = [
+            len(self.queues[m]) + len(self.infl_req[m])
             for m in range(self.M)
         ]
+        base = [
+            _jsq_score(
+                qeff[m],
+                np.isfinite(self.busy[m]) or bool(self.infl_req[m]),
+            )
+            for m in range(self.M)
+        ]
+        pen = [
+            _DOWN_PENALTY if self._down(m) else 0 for m in range(self.M)
+        ]
         if self.rid == 0:
+            # rr scans forward from its slot for the first UP replica;
+            # with every replica down it falls back to its own slot
+            for k in range(self.M):
+                c = (self.rr + k) % self.M
+                if not self._down(c):
+                    return c
             return self.rr % self.M
         if self.rid == 1:
-            return int(np.argmin(base))
+            return int(np.argmin([base[m] + pen[m] for m in range(self.M)]))
         if self.rid == 2:
             u = self.router_u[i]
             c1 = min(int(u[0] * self.M), self.M - 1)
             c2 = min(int(u[1] * self.M), self.M - 1)
-            return c1 if base[c1] <= base[c2] else c2
+            return c1 if base[c1] + pen[c1] <= base[c2] + pen[c2] else c2
         ph_arr = int(self.phases[i])
         score = []
         for m in range(self.M):
-            q = len(self.queues[m])
+            q = qeff[m]
             gap = int(self.thr[m, ph_arr, min(q, self.L - 1)])
-            if np.isfinite(self.busy[m]):  # mid-batch: penalize by backlog
-                gap += min(q, _SCORE_QCAP)
-            score.append(min(gap, _SCORE_QCAP) * _GAP_SHIFT + base[m])
+            if np.isfinite(self.busy[m]) or self.infl_req[m]:
+                gap += min(q, _SCORE_QCAP)  # mid-batch: backlog penalty
+            score.append(
+                min(gap, _SCORE_QCAP) * _GAP_SHIFT + base[m] + pen[m]
+            )
         return int(np.argmin(score))
 
     # --- snapshot / restore (router state round-trips exactly) ----------
@@ -820,8 +1141,14 @@ class PythonFleet:
             "done": self.done, "decisions": list(self.decisions),
             "latencies": self.latencies.copy(),
             "served": self.served.copy(),
+            "dropped": self.dropped.copy(),
+            "shed": self.shed.copy(),
             "arr_server": self.arr_server.copy(),
             "energy": self.energy, "slo_miss": self.slo_miss,
+            "fcur": list(self.fcur), "rty": list(self.rty),
+            "infl_req": [list(q) for q in self.infl_req],
+            "ndrop": list(self.ndrop), "nshed": list(self.nshed),
+            "n_crashes": self.n_crashes,
         }
 
     def restore(self, snap: dict) -> None:
@@ -836,8 +1163,16 @@ class PythonFleet:
         self.decisions = list(snap["decisions"])
         self.latencies = snap["latencies"].copy()
         self.served = snap["served"].copy()
+        self.dropped = snap["dropped"].copy()
+        self.shed = snap["shed"].copy()
         self.arr_server = snap["arr_server"].copy()
         self.energy, self.slo_miss = snap["energy"], snap["slo_miss"]
+        self.fcur = list(snap["fcur"])
+        self.rty = list(snap["rty"])
+        self.infl_req = [list(q) for q in snap["infl_req"]]
+        self.ndrop = list(snap["ndrop"])
+        self.nshed = list(snap["nshed"])
+        self.n_crashes = snap["n_crashes"]
 
     # --- the loop --------------------------------------------------------
     def step(self, max_epochs: Optional[int] = None) -> bool:
@@ -846,28 +1181,78 @@ class PythonFleet:
             return False
         nxt = self.times[self.i] if self.i < self.n else float("inf")
         live = self.i < self.n
-        # (1) admit one due arrival
+        # (0) replay the lowest-index due fault boundary (before any
+        # admission or decision at the same clock: routing masks and the
+        # crash bookkeeping always see fresh parity)
+        nb = [self._next_bound(m) for m in range(self.M)]
+        for m in range(self.M):
+            if nb[m] <= self.t:
+                is_start = self.fcur[m] % 2 == 0
+                if is_start and self.infl_req[m]:
+                    # the down-start catches a crashed in-flight batch
+                    if self.rty[m] + 1 > self.max_retries:
+                        for j in self.infl_req[m]:
+                            self.dropped[j] = True
+                        self.ndrop[m] += len(self.infl_req[m])
+                        self.rty[m] = 0
+                    else:  # requeue to the FRONT, keeping positions
+                        self.queues[m] = self.infl_req[m] + self.queues[m]
+                        self.rty[m] += 1
+                    self.infl_req[m] = []
+                if is_start:
+                    self.needs[m] = False  # silence any pending decision
+                elif (
+                    self.queues[m]
+                    and np.isinf(self.busy[m])
+                    and not self.infl_req[m]
+                ):
+                    self.needs[m] = True  # repair re-arms queued work
+                self.fcur[m] += 1
+                return True
+        # (1) admit one due arrival (shed if the waiting room is full)
         if nxt <= self.t:
             m = self._route(self.i)
             self.arr_server[self.i] = m
-            self.queues[m].append(self.i)
-            if np.isinf(self.busy[m]):
-                self.needs[m] = True
+            qeff = len(self.queues[m]) + len(self.infl_req[m])
+            if qeff >= self.buf_cap:
+                self.shed[self.i] = True
+                self.nshed[m] += 1
+            else:
+                self.queues[m].append(self.i)
+                if (
+                    np.isinf(self.busy[m])
+                    and not self._down(m)
+                    and not self.infl_req[m]
+                ):
+                    self.needs[m] = True
             self.ph = int(self.phases[self.i])
             self.rr += 1
             self.i += 1
             return True
-        # wake idle parked replicas for the tail drain
+        # wake idle parked UP replicas for the tail drain
         if not live and self.drain:
             for m in range(self.M):
-                if np.isinf(self.busy[m]) and self.queues[m]:
+                if (
+                    np.isinf(self.busy[m])
+                    and self.queues[m]
+                    and not self._down(m)
+                    and not self.infl_req[m]
+                ):
                     self.needs[m] = True
         # (2) decision epoch on the lowest-index pending replica
         if any(self.needs):
             m = self.needs.index(True)
             self.needs[m] = False
             q = len(self.queues[m])
-            a = int(self.tables[m, self.ph, min(q, self.L - 1)])
+            if self.bel is not None:
+                # belief-mixture rule: blend the per-phase actions under
+                # the last admitted arrival's posterior row
+                row = self.bel[min(max(self.i - 1, 0), self.n - 1)]
+                a = int(np.round(np.sum(
+                    row * self.tables[m, :, min(q, self.L - 1)]
+                )))
+            else:
+                a = int(self.tables[m, self.ph, min(q, self.L - 1)])
             a = max(0, min(a, q, self.b_max))
             if a == 0 and not live and q > 0 and self.drain:
                 a = min(q, self.b_max)  # capped tail drain
@@ -875,32 +1260,57 @@ class PythonFleet:
             if a == 0:
                 self.decisions.append((m, 0))
                 return True  # wait (or terminal no-op)
-            svc = self.means[a] * self.draws[
-                min(self.nbat[m], len(self.draws) - 1)
-            ]
+            svc = (
+                self.means[a]
+                * self.draws[min(self.nbat[m], len(self.draws) - 1)]
+                * self.fmult[m, min(self.nbat[m], self.fmult.shape[1] - 1)]
+            )
             done_t = self.t + svc
             batch, self.queues[m] = self.queues[m][:a], self.queues[m][a:]
+            self.nbat[m] += 1
+            self.decisions.append((m, a))
+            # crash pre-resolution: the batch fails iff the replica's next
+            # down interval starts strictly before its completion
+            ds = self._next_bound(m)
+            if ds < done_t:
+                self.infl_req[m] = batch
+                self.energy += float(self.zeta[a] * (ds - self.t) / svc)
+                self.n_crashes += 1
+                return True
             for j in batch:
                 self.latencies[j] = done_t - self.times[j]
                 self.served[j] = True
                 if done_t > self.deadlines[j]:
                     self.slo_miss += 1
             self.busy[m] = done_t
-            self.nbat[m] += 1
             self.n_srv[m] += a
+            self.rty[m] = 0
             self.energy += float(self.zeta[a])
-            self.decisions.append((m, a))
             return True
-        # (3) advance the clock (arrivals win time ties)
+        # (3) advance the clock: arrival > completion > fault boundary.
+        # A boundary only matters to a replica with queued or crashed
+        # work (its repair must wake it / resolve the crash); empty idle
+        # replicas' boundaries replay lazily when the clock passes them
         t_c = min(self.busy)
         m_c = int(np.argmin(self.busy))
-        if live and nxt <= t_c:
+        t_b = min(
+            (
+                nb[m]
+                for m in range(self.M)
+                if self.queues[m] or self.infl_req[m]
+            ),
+            default=float("inf"),
+        )
+        if live and nxt <= t_c and nxt <= t_b:
             self.t = nxt
             return True
-        if np.isfinite(t_c):
+        if np.isfinite(t_c) and t_c <= t_b:
             self.t = t_c
             self.busy[m_c] = float("inf")
             self.needs[m_c] = True
+            return True
+        if np.isfinite(t_b):
+            self.t = t_b  # the boundary itself replays next step
             return True
         self.done = True  # drained: nothing due, pending, or in flight
         return False
@@ -928,6 +1338,10 @@ def verify_fleet(
     drain: bool = True,
     slo: Optional[float] = None,
     phases=None,
+    phase_mode: str = "oracle",
+    beliefs=None,
+    faults=None,
+    buffer: Optional[int] = None,
     seed: int = 0,
     atol: float = 1e-9,
 ) -> Dict[str, object]:
@@ -936,10 +1350,14 @@ def verify_fleet(
     Mirrors `serving.engine.verify_backends`: both backends run the same
     sorted trace, the same shared unit-draw block and the same router
     uniforms, and the full decision log — (replica, action) per epoch,
-    waits included — plus per-arrival latencies / routing / energy / SLO
-    misses must agree.  With M = 1 the fleet lane is additionally checked
-    against `simulate_compiled` (the single-server kernel): identical
-    batch-size sequence, latencies, energy and final clock.
+    waits included — plus per-arrival latencies / routing / drop + shed
+    flags / energy / SLO misses must agree.  ``faults`` (a FaultSchedule)
+    and ``buffer`` exercise the degraded-mode lanes on both sides;
+    ``phase_mode``/``beliefs`` the belief row-selection rules.  With
+    M = 1 (and no degraded-mode knobs, which the single-server kernel
+    lacks) the fleet lane is additionally checked against
+    `simulate_compiled`: identical batch-size sequence, latencies, energy
+    and final clock.
     """
     from .compiled import simulate_compiled
 
@@ -956,7 +1374,8 @@ def verify_fleet(
     kw = dict(
         router=router, means=means, zeta=energy_table, draws=draws,
         b_max=b_max, horizon=horizon, drain=drain, slo=slo, phases=phases,
-        router_u=router_u,
+        phase_mode=phase_mode, beliefs=beliefs, router_u=router_u,
+        faults=faults, buffer=buffer,
     )
     py = PythonFleet(tables, trace, **kw).run(max_epochs=n_epochs)
     comp = simulate_fleet(
@@ -973,6 +1392,11 @@ def verify_fleet(
     assert (comp.arr_server[n_eff:] == -1).all()
     np.testing.assert_array_equal(py.served, comp.served[:n_eff])
     np.testing.assert_array_equal(py.arr_server, comp.arr_server[:n_eff])
+    np.testing.assert_array_equal(py.dropped, comp.dropped[:n_eff])
+    np.testing.assert_array_equal(py.shed, comp.shed[:n_eff])
+    assert int(py.n_crashes) == comp.n_crashes
+    assert int(sum(py.ndrop)) == comp.n_dropped
+    assert int(sum(py.nshed)) == comp.n_shed
     np.testing.assert_allclose(
         py.latencies[py.served], comp.latencies[comp.served], atol=atol
     )
@@ -984,12 +1408,13 @@ def verify_fleet(
         "python": py, "compiled": comp,
         "n_decisions": int(len(py.decisions)),
     }
-    if M == 1:
+    if M == 1 and faults is None and buffer is None:
         single = simulate_compiled(
             tables[0], trace, means=means, zeta=energy_table, draws=draws,
             b_max=b_max, max_epochs=n_epochs, horizon=horizon, drain=drain,
             deadlines=None if slo is None else trace + slo,
-            phases=phases, record=True,
+            phases=phases, phase_mode=phase_mode, beliefs=beliefs,
+            record=True,
         )
         np.testing.assert_array_equal(single.batch_sizes, comp.batch_sizes)
         assert single.n_served == comp.n_served
@@ -1021,10 +1446,11 @@ class FleetStream:
     (P² quantile estimators + the fixed-bin histogram sketch).  `finish`
     runs the b_max-capped tail drain and returns a `FleetResult` whose
     aggregates match a one-shot `simulate_fleet` of the concatenated
-    stream exactly (decision-for-decision — completions that outrun a
-    chunk's last arrival are deferred to the next chunk, and latencies
-    are accounted at serve start; only `n_epochs` differs, by the extra
-    no-op wait re-decisions parked replicas take at chunk starts).
+    stream exactly (decision-for-decision, `n_epochs` included —
+    completions that outrun a chunk's last arrival are deferred to the
+    next chunk, latencies are accounted at serve start, and the pending
+    decision flags carry across chunks so parked replicas are not
+    re-decided at chunk seams).
 
     Memory is O(chunk + carried queues); a billion-event horizon streams
     through a fixed-size window instead of materializing per-request
@@ -1046,6 +1472,10 @@ class FleetStream:
         quantiles: Sequence[float] = (0.5, 0.95, 0.99),
         router_seed: int = 0,
         t0: float = 0.0,
+        phase_mode: str = "oracle",
+        belief_filter=None,
+        faults=None,
+        buffer: Optional[int] = None,
     ):
         self.tables = _norm_tables(tables)
         self.M, self.K, self.L = self.tables.shape
@@ -1071,6 +1501,31 @@ class FleetStream:
             else np.asarray(hist_edges, dtype=np.float64)
         )
         self._rng = np.random.default_rng(router_seed)
+        # belief phase modes run the forward filter per chunk, carrying
+        # the posterior across chunk boundaries (aggregates == one-shot)
+        if phase_mode not in ("oracle", "belief_argmax", "belief_mix"):
+            raise ValueError(f"unknown phase_mode {phase_mode!r}")
+        if (phase_mode != "oracle") != (belief_filter is not None):
+            raise ValueError(
+                'belief phase modes need belief_filter= (an '
+                'arrivals.PhaseBeliefFilter) and vice versa'
+            )
+        if belief_filter is not None and len(belief_filter.rates) != self.K:
+            raise ValueError(
+                f"belief filter K={len(belief_filter.rates)} != table "
+                f"phase axis K={self.K}"
+            )
+        self.phase_mode = phase_mode
+        self._filt = belief_filter
+        self._bel0 = (
+            None
+            if belief_filter is None
+            else np.asarray(belief_filter.belief, dtype=np.float64).copy()
+        )
+        self.fb, self.fmult, self.max_retries = _prep_faults(faults, self.M)
+        if buffer is not None and int(buffer) < 0:
+            raise ValueError("buffer must be >= 0")
+        self.buf_cap = _NO_BUFFER if buffer is None else int(buffer)
         # --- carried state --------------------------------------------
         self.t0 = float(t0)
         self.t = float(t0)
@@ -1081,6 +1536,15 @@ class FleetStream:
         self.queues = [
             (np.zeros(0), np.zeros(0)) for _ in range(self.M)
         ]  # (times, deadlines) per replica, admission order
+        # degraded-mode carry: the first infl[m] entries of queues[m] are
+        # the crashed in-flight batch (front-requeue keeps them there)
+        self.fcur = np.zeros(self.M, dtype=np.int64)
+        self.rty = np.zeros(self.M, dtype=np.int64)
+        self.infl = np.zeros(self.M, dtype=np.int64)
+        # pending-decision flags carry exactly: a parked wait is not
+        # re-decided at the chunk seam (phase-indexed tables would
+        # otherwise re-read a newer fleet phase than the one-shot run)
+        self.needs = np.ones(self.M, dtype=bool)
         self._t_hwm = -np.inf  # high-water mark: chunks must be sorted
         self._finished = False
         # --- streaming aggregates -------------------------------------
@@ -1093,6 +1557,9 @@ class FleetStream:
         self.energy = 0.0
         self.lat_sum = 0.0
         self.slo_miss = 0
+        self.n_crashes = 0
+        self.n_dropped = 0
+        self.n_shed = 0
         self.n_routed = np.zeros(self.M, dtype=np.int64)
         self.n_served_m = np.zeros(self.M, dtype=np.int64)
 
@@ -1139,7 +1606,14 @@ class FleetStream:
             terminated=self._finished,
             hist=self.hist.copy(),
             hist_edges=self.edges,
-            qlen=np.asarray([len(q[0]) for q in self.queues], np.int64),
+            n_crashes=self.n_crashes,
+            n_dropped=self.n_dropped,
+            n_shed=self.n_shed,
+            # queues carry the crashed in-flight batch at the front; the
+            # kernel's qlen convention counts only the waiting part
+            qlen=np.asarray(
+                [len(q[0]) for q in self.queues], np.int64
+            ) - self.infl,
             busy=self.busy.copy(),
             n_routed=self.n_routed.copy(),
             n_served_m=self.n_served_m.copy(),
@@ -1167,6 +1641,19 @@ class FleetStream:
             ),
             "n_served": float(self.n_served),
             "slo_miss": float(self.slo_miss),
+            # degraded-mode counters: goodput is the served-through rate
+            # (NaN on an empty span, like the other rate metrics)
+            "goodput": (
+                self.n_served / span if span > 0 else float("nan")
+            ),
+            "drop_rate": (
+                (self.n_dropped + self.n_shed) / self.n_admitted
+                if self.n_admitted
+                else float("nan")
+            ),
+            "n_dropped": float(self.n_dropped),
+            "n_shed": float(self.n_shed),
+            "n_crashes": float(self.n_crashes),
         }
         for q, est in self.quantiles.items():
             out[f"P{round(q * 100)}"] = est.value
@@ -1180,7 +1667,27 @@ class FleetStream:
             deadlines = np.asarray(deadlines, np.float64)[order]
         elif self.slo is not None:
             deadlines = times + self.slo
-        if phases is not None:
+        bel = None
+        if self.phase_mode != "oracle":
+            if phases is not None:
+                raise ValueError(
+                    "belief phase modes derive phases from the filter; "
+                    "don't pass phases= per chunk"
+                )
+            # forward-filter this chunk from the carried posterior, then
+            # advance the filter state so the next chunk resumes exactly
+            if len(times):
+                rows, (b_f, t_f) = belief_forward_jax(times, self._filt)
+                rows = np.asarray(rows)
+                phases = np.argmax(rows, axis=-1).astype(np.int64)
+                if self.phase_mode == "belief_mix":
+                    bel = rows
+                self._filt.belief = np.asarray(b_f, dtype=np.float64)
+                self._filt._last = float(t_f)
+                self._filt.n_observed += len(times)
+            else:
+                phases = np.zeros(0, dtype=np.int64)
+        elif phases is not None:
             phases = np.asarray(phases, np.int64)[order]
         elif self.K > 1:
             raise ValueError("phase-indexed tables need phases= per chunk")
@@ -1191,6 +1698,16 @@ class FleetStream:
             ph_arr = np.zeros(len(arr), dtype=np.int64)
         else:
             arr, dl, ph_arr = padded
+        mix = self.phase_mode == "belief_mix"
+        if mix:
+            bel_p = np.zeros((len(arr), self.K))
+            if bel is not None:
+                bel_p[:n] = bel
+            bel_j = jnp.asarray(bel_p)
+            bel0_j = jnp.asarray(self._bel0)
+        else:
+            bel_j = jnp.zeros((1, 1))
+            bel0_j = bel_j[0]
         if router_u is None:
             router_u = self._rng.random((len(arr), 2))
         else:
@@ -1206,34 +1723,50 @@ class FleetStream:
             q0_t[m, : len(qt)] = qt
             q0_d[m, : len(qd)] = qd
         q0_total = int(sum(len(q[0]) for q in self.queues))
-        max_eps = 2 * (n + q0_total) + 2 * self.M + 8
-        cap = _bucket(2 * (n + max_eps) + 2 * self.M + 8)
-        n_steps = min(_bucket(max(256, 2 * n + 2 * q0_total + 2 * self.M + 8)), cap)
+        # boundaries not yet replayed can each cost a step (and a crash
+        # re-decision): budget them alongside arrivals and epochs
+        n_bnd = int(np.isfinite(self.fb).sum() - self.fcur.sum())
+        n_bnd = max(n_bnd, 0)
+        max_eps = 2 * (n + q0_total) + 2 * self.M + 8 + 2 * n_bnd
+        cap = _bucket(2 * (n + max_eps + n_bnd) + 2 * self.M + 8)
+        n_steps = min(
+            _bucket(max(256, 2 * n + 2 * q0_total + 2 * self.M + 8)), cap
+        )
         while True:
             out = _fleet_jit(
                 jnp.asarray(self.tables), jnp.asarray(self.thr),
                 jnp.asarray(arr), jnp.asarray(dl), jnp.asarray(ph_arr),
+                bel_j, bel0_j,
                 jnp.asarray(router_u), jnp.asarray(q0_t), jnp.asarray(q0_d),
                 jnp.asarray(self.draws), jnp.asarray(self.means),
                 jnp.asarray(self.zeta), jnp.asarray(self.edges),
+                jnp.asarray(self.fb), jnp.asarray(self.fmult),
                 int(self.rid), float(self.t), np.inf, max_eps,
                 self.drain, self.b_max,
+                int(self.buf_cap), int(self.max_retries),
                 int(self.rr), int(self.ph), jnp.asarray(self.busy),
-                jnp.asarray(self.nbat), bool(more_coming), float(t_last),
-                int(n_steps), True,
+                jnp.asarray(self.nbat), jnp.asarray(self.needs),
+                jnp.asarray(self.fcur),
+                jnp.asarray(self.rty), jnp.asarray(self.infl),
+                bool(more_coming), float(t_last),
+                int(n_steps), True, mix,
             )
             agg, rec = out
             if n_steps >= cap or not bool(agg["incomplete"]):
                 break
             n_steps = min(2 * n_steps, cap)
         agg = {k: np.asarray(v) for k, v in agg.items()}
-        (_, _, arr_lat, arr_served, arr_server, arr_pos,
-         q0_lat, q0_served) = (np.asarray(x) for x in rec)
+        (_, _, arr_lat, arr_served, arr_dropped, arr_shed, arr_server,
+         arr_pos, q0_lat, q0_served, q0_dropped) = (
+            np.asarray(x) for x in rec
+        )
         if int(agg["n_admitted"]) != n:
             raise RuntimeError(
                 f"chunk admitted {int(agg['n_admitted'])}/{n} arrivals "
                 "(epoch budget bound mid-chunk; this is a bug)"
             )
+        if mix and n:
+            self._bel0 = np.asarray(self._filt.belief, dtype=np.float64)
         # --- fold aggregates ------------------------------------------
         self.n_admitted += n
         self.n_served += int(agg["n_served"])
@@ -1242,6 +1775,9 @@ class FleetStream:
         self.energy += float(agg["energy"])
         self.lat_sum += float(agg["lat_sum"])
         self.slo_miss += int(agg["slo_miss"])
+        self.n_crashes += int(agg["n_crashes"])
+        self.n_dropped += int(agg["n_dropped"])
+        self.n_shed += int(agg["n_shed"])
         self.hist += agg["hist"]
         # P2 updates in a fixed order: carried queues (replica-major,
         # position order), then this chunk's arrivals in time order
@@ -1257,21 +1793,31 @@ class FleetStream:
         new_queues = []
         for m in range(self.M):
             qt, qd = self.queues[m]
-            keep = ~q0_served[m][: len(qt)]
-            mask = (arr_server[:len(arr)] == m) & ~arr_served
+            keep = ~(q0_served[m] | q0_dropped[m])[: len(qt)]
+            # shed arrivals record their would-be replica but never queue
+            mask = (
+                (arr_server[:len(arr)] == m)
+                & ~arr_served & ~arr_dropped & ~arr_shed
+            )
             new_queues.append((
                 np.concatenate([qt[keep], arr[mask]]),
                 np.concatenate([qd[keep], dl[mask]]),
             ))
         self.queues = new_queues
+        # a crashed in-flight batch stays in the carried queue (front,
+        # unresolved positions) but outside the kernel's qlen count
         assert int(sum(len(q[0]) for q in self.queues)) == int(
-            agg["qlen"].sum()
+            agg["qlen"].sum() + agg["infl"].sum()
         )
         self.t = float(agg["t_final"])
         self.busy = agg["busy"].copy()
         self.rr = int(agg["rr"])
         self.ph = int(agg["ph"])
         self.nbat = agg["nbat"].copy()
+        self.needs = agg["needs"].copy()
+        self.fcur = agg["fcur"].copy()
+        self.rty = agg["rty"].copy()
+        self.infl = agg["infl"].copy()
         # the kernel's n_route carry starts at the carried-queue count
         # (substream positions offset past q0) — only the excess is new
         self.n_routed += agg["n_route"] - np.sum(
@@ -1324,28 +1870,36 @@ def simulate_fleet_stream(
 # ---------------------------------------------------------------------------
 
 
-def _fleet_grid_core(tables, thrs, rids, arr, dl, ph, ru, draws,
+def _fleet_grid_core(tables, thrs, rids, arr, dl, ph, bel, ru, draws,
                      means, zeta, edges, t0, horizon, max_eps, drain, b_max,
-                     *, n_steps: int):
+                     *, n_steps: int, mix: bool):
     """(S, P, R) fleet grid: vmap lanes x table-stacks x router ids."""
     M = tables.shape[1]
     q0 = jnp.full((M, 1), jnp.inf)
     busy0 = jnp.full(M, jnp.inf)
     nbat0 = jnp.zeros(M, dtype=jnp.int64)
+    zm = jnp.zeros(M, dtype=jnp.int64)
+    # the grid runs fault-free (faults are a per-lane simulate_fleet /
+    # FleetStream concern): all-+inf boundaries, unit multipliers
+    fb = jnp.full((M, 1), jnp.inf)
+    fmult = jnp.ones((M, 1))
 
-    def lane(a_, d_, p_, u_, dr_):
+    def lane(a_, d_, p_, b_, u_, dr_):
         def per_table(tab, thr):
             def per_router(rid):
                 return _fleet_scan_core(
-                    tab, thr, a_, d_, p_, u_, q0, q0, dr_, means, zeta,
-                    edges, rid, t0, horizon, max_eps, drain, b_max,
-                    0, 0, busy0, nbat0, False, jnp.inf,
-                    n_steps=n_steps, record=False,
+                    tab, thr, a_, d_, p_, b_, b_[0], u_, q0, q0, dr_,
+                    means, zeta, edges, fb, fmult,
+                    rid, t0, horizon, max_eps, drain, b_max,
+                    _NO_BUFFER, 0,
+                    0, 0, busy0, nbat0, jnp.ones(M, dtype=bool),
+                    zm, zm, zm, False, jnp.inf,
+                    n_steps=n_steps, record=False, mix=mix,
                 )
             return jax.vmap(per_router)(rids)
         return jax.vmap(per_table)(tables, thrs)
 
-    return jax.vmap(lane)(arr, dl, ph, ru, draws)
+    return jax.vmap(lane)(arr, dl, ph, bel, ru, draws)
 
 
 #: jitted grid dispatchers keyed by (mesh identity, n_steps) — the
@@ -1353,12 +1907,12 @@ def _fleet_grid_core(tables, thrs, rids, arr, dl, ph, ru, draws,
 _FLEET_GRID_CACHE: dict = {}
 
 
-def _fleet_grid_fn(mesh, n_steps: int):
-    key = (None if mesh is None else id(mesh), n_steps)
+def _fleet_grid_fn(mesh, n_steps: int, mix: bool):
+    key = (None if mesh is None else id(mesh), n_steps, mix)
     fn = _FLEET_GRID_CACHE.get(key)
     if fn is not None:
         return fn
-    core = partial(_fleet_grid_core, n_steps=n_steps)
+    core = partial(_fleet_grid_core, n_steps=n_steps, mix=mix)
     if mesh is not None:
         from jax.sharding import PartitionSpec as P
 
@@ -1371,7 +1925,8 @@ def _fleet_grid_fn(mesh, n_steps: int):
             # lanes (S-leading arrays) shard over the mesh's first axis;
             # tables / router ids / service constants replicate
             in_specs=(rep, rep, rep, P(axis), P(axis), P(axis), P(axis),
-                      P(axis), rep, rep, rep, rep, rep, rep, rep, rep),
+                      P(axis), P(axis), rep, rep, rep, rep, rep, rep, rep,
+                      rep),
             out_specs=P(axis),
         )
     fn = jax.jit(core)
@@ -1446,12 +2001,13 @@ def run_fleet_grid(
     arr = np.asarray(arrivals, dtype=np.float64)
     if arr.ndim != 2:
         raise ValueError("run_fleet_grid wants (S, N) arrivals")
+    bel = None
     if phase_mode != "oracle" or beliefs is not None:
         if beliefs is not None and np.asarray(beliefs).shape[:2] != arr.shape:
             raise ValueError(
                 "beliefs must be (S, N, K) aligned with arrivals"
             )
-        phases = _belief_phases(phase_mode, beliefs, phases, K)
+        phases, bel = _belief_phases(phase_mode, beliefs, phases, K)
     if arr.shape[1] < _ADMIT_W or not np.isinf(arr[:, -_ADMIT_W:]).all():
         raise ValueError("pad each trace with pad_arrivals first")
     S, N = arr.shape
@@ -1492,6 +2048,10 @@ def run_fleet_grid(
         else np.asarray(hist_edges, dtype=np.float64)
     )
     thrs = np.stack([threshold_gaps(tables[p]) for p in range(Pn)])
+    mix = bel is not None
+    bel_g = (
+        np.asarray(bel, dtype=np.float64) if mix else np.zeros((S, 1, 1))
+    )
     n_arr_max = int(np.isfinite(arr).sum(axis=1).max())
     max_eps = (
         2 * n_arr_max + M + 4 if max_epochs is None else int(max_epochs)
@@ -1504,18 +2064,20 @@ def run_fleet_grid(
         if pad_s:
             def _pad(x):
                 return np.concatenate([x, np.repeat(x[:1], pad_s, axis=0)])
-            arr, dl, ph, ru, draws = map(_pad, (arr, dl, ph, ru, draws))
+            arr, dl, ph, bel_g, ru, draws = map(
+                _pad, (arr, dl, ph, bel_g, ru, draws)
+            )
     cap = _bucket(2 * (n_arr_max + max_eps) + 2 * M + 8)
     n_steps = min(
         _bucket(max(256, (3 * n_arr_max) // 2 + 2 * M + 8)), cap
     )
     while True:
-        fn = _fleet_grid_fn(mesh, int(n_steps))
+        fn = _fleet_grid_fn(mesh, int(n_steps), mix)
         out = fn(
             jnp.asarray(tables), jnp.asarray(thrs), jnp.asarray(rids),
             jnp.asarray(arr), jnp.asarray(dl), jnp.asarray(ph),
-            jnp.asarray(ru), jnp.asarray(draws), jnp.asarray(means),
-            jnp.asarray(zeta_a), jnp.asarray(edges),
+            jnp.asarray(bel_g), jnp.asarray(ru), jnp.asarray(draws),
+            jnp.asarray(means), jnp.asarray(zeta_a), jnp.asarray(edges),
             float(t0), np.inf if horizon is None else float(horizon),
             max_eps, bool(drain), int(b_max),
         )

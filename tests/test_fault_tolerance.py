@@ -1,4 +1,7 @@
-"""Fault-tolerance behaviours: straggler watchdog, preemption, elastic restore."""
+"""TRAINING-loop fault tolerance: straggler watchdog, preemption, elastic
+restore of the Trainer.  Serving-side fault injection (replica outages,
+crash/requeue/drop, failover routing, overload shedding) lives in
+test_faults_serving.py against serving.faults / serving.fleet."""
 import time
 
 import jax

@@ -1,0 +1,406 @@
+"""Degraded-mode serving: fault injection, failover routing, shedding.
+
+Certification (ISSUE acceptance): verify_faults runs every router on
+Poisson AND MMPP2 traces, PythonFleet vs the compiled kernel
+decision-for-decision under one shared FaultSchedule.  Plus the crash /
+requeue / bounded-retry-drop semantics on handcrafted schedules, finite
+waiting-room shedding (including the starved B = 0 NaN-with-count-zero
+guards), snapshot()/restore() mid-fault, chunked streaming (beliefs and
+faults carried across chunk seams) vs one-shot, and the single-engine
+admission-control knobs (buffer= / shed_expired=).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import GOOGLENET_P4_ENERGY, GOOGLENET_P4_LATENCY, ServiceModel
+from repro.core.policies import q_policy
+from repro.serving import (
+    FaultModel,
+    FaultSchedule,
+    FleetStream,
+    PythonFleet,
+    QPolicyScheduler,
+    ServingEngine,
+    simulate_fleet,
+    verify_faults,
+    verify_fleet,
+)
+from repro.serving.arrivals import MMPP2, PhaseBeliefFilter, belief_forward_jax
+
+SVC = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+BMAX = 16
+LAM = 0.7 * BMAX / float(SVC.mean(BMAX))
+ENERGY = np.array(
+    [0.0] + [float(GOOGLENET_P4_ENERGY(b)) for b in range(1, BMAX + 1)]
+)
+MEANS = np.array([0.0] + [float(SVC.mean(b)) for b in range(1, BMAX + 1)])
+TABLES = np.stack([q_policy(q, 96, BMAX) for q in (4, 6, 8)])
+ROUTER_NAMES = ["rr", "jsq", "pow2", "batch_aware"]
+#: MTBF ~ tens of batches, repairs a few service times long: every router
+#: sees failovers, crashes, and recoveries within a 1200-arrival trace
+FAULTS = FaultModel(mtbf=40.0, mttr=6.0, p_straggle=0.1, straggle_mult=3.0)
+
+
+def _trace(mode: str, n: int = 1200, seed: int = 0, lam: float = 3 * LAM):
+    rng = np.random.default_rng(seed)
+    if mode == "poisson":
+        return np.cumsum(rng.exponential(1.0 / lam, n))
+    assert mode == "mmpp2"
+    m = MMPP2(lam1=0.3 * lam, lam2=1.3 * lam, dwell1=60.0, dwell2=30.0)
+    times, _ = m.sample_arrivals(n / m.mean_rate, rng)
+    return times
+
+
+def _schedule(trace, M=3, seed=1):
+    return FAULTS.materialize(M, float(trace[-1]) + 50.0, seed=seed)
+
+
+class TestFaultSchedule:
+    def test_materialize_layout(self):
+        sch = FAULTS.materialize(3, 200.0, seed=0)
+        assert sch.n_replicas == 3
+        fin = sch.bounds[np.isfinite(sch.bounds)]
+        with np.errstate(invalid="ignore"):  # inf-padded tails
+            d = np.diff(sch.bounds, axis=1)
+        assert (d[np.isfinite(d)] >= 0).all()
+        assert (fin >= 0).all()
+        assert (sch.mult > 0).all()
+
+    def test_down_at_parity(self):
+        sch = FaultSchedule(
+            bounds=np.array([[2.0, 5.0, 9.0, np.inf]]), mult=np.ones((1, 1))
+        )
+        assert not sch.down_at(1.0)[0]
+        assert sch.down_at(2.0)[0]  # start-inclusive
+        assert not sch.down_at(5.0)[0]
+        assert sch.down_at(9.5)[0]  # unrepaired tail
+
+    def test_none_rail_is_always_up(self):
+        sch = FaultSchedule.none(4)
+        assert not sch.down_at(1e9).any()
+        assert sch.attempt_mult(2, 123) == 1.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="non-decreasing"):
+            FaultSchedule(
+                bounds=np.array([[5.0, 2.0]]), mult=np.ones((1, 1))
+            )
+        with pytest.raises(ValueError, match="> 0"):
+            FaultSchedule(
+                bounds=np.zeros((1, 0)), mult=np.zeros((1, 1))
+            )
+        with pytest.raises(ValueError):
+            FaultModel(mtbf=-1.0)
+        with pytest.raises(TypeError, match="FaultSchedule"):
+            verify_faults(
+                TABLES, _trace("poisson", 50), faults=None, service=SVC,
+                b_max=BMAX,
+            )
+
+
+class TestVerifyFaults:
+    """ISSUE acceptance: every router certifies on Poisson and MMPP2."""
+
+    @pytest.mark.parametrize("router", ROUTER_NAMES)
+    @pytest.mark.parametrize("mode", ["poisson", "mmpp2"])
+    def test_certified_per_router_and_family(self, router, mode):
+        tr = _trace(mode)
+        out = verify_faults(
+            TABLES, tr, faults=_schedule(tr), service=SVC, b_max=BMAX,
+            router=router, buffer=24, energy_table=ENERGY, slo=2.0,
+        )
+        # the scenario must actually exercise the degraded paths
+        assert out["n_crashes"] > 0
+        assert out["n_shed"] > 0 or out["n_dropped"] > 0
+
+    def test_m1_certifies(self):
+        tr = _trace("poisson", 600, lam=LAM)
+        sch = FAULTS.materialize(1, float(tr[-1]) + 50.0, seed=3)
+        out = verify_faults(
+            TABLES[:1], tr, faults=sch, service=SVC, b_max=BMAX,
+            energy_table=ENERGY,
+        )
+        assert out["n_crashes"] > 0
+
+    def test_none_schedule_matches_fault_free_run(self):
+        tr = _trace("poisson", 600)
+        base = verify_fleet(
+            TABLES, tr, router="jsq", service=SVC, b_max=BMAX,
+            energy_table=ENERGY,
+        )
+        none = verify_faults(
+            TABLES, tr, faults=FaultSchedule.none(3), service=SVC,
+            b_max=BMAX, router="jsq", energy_table=ENERGY,
+        )
+        assert none["n_crashes"] == 0
+        assert none["n_dropped"] == 0 and none["n_shed"] == 0
+        b, f = base["compiled"], none["compiled"]
+        np.testing.assert_array_equal(b.batch_sizes, f.batch_sizes)
+        np.testing.assert_allclose(b.energy, f.energy)
+
+
+class TestCrashSemantics:
+    """Handcrafted schedules pin the crash / requeue / drop contract."""
+
+    def _run(self, bounds, max_retries, trace=(0.1, 0.2), **kw):
+        sch = FaultSchedule(
+            bounds=np.asarray(bounds, dtype=np.float64),
+            mult=np.ones((1, 1)), max_retries=max_retries,
+        )
+        table = q_policy(2, 96, BMAX)
+        return simulate_fleet(
+            table[None], np.asarray(trace), router="jsq", means=MEANS,
+            zeta=ENERGY, draws=np.ones(1), b_max=BMAX, faults=sch,
+            record=True, **kw,
+        )
+
+    def test_down_interval_crashes_inflight_batch(self):
+        # batch of 2 dispatches at t=0.2, service ~ MEANS[2] >> 0.1; the
+        # replica dies at 0.3 and recovers at 5.0 -> one crash, requeue,
+        # re-serve after repair
+        res = self._run([[0.3, 5.0]], max_retries=2)
+        assert res.n_crashes == 1
+        assert res.n_dropped == 0
+        assert res.n_served == 2
+        # the retry serves at the repair boundary, not before
+        assert res.latencies.min() >= 5.0 - 0.2
+
+    def test_bounded_retries_drop_the_batch(self):
+        res = self._run([[0.3, 5.0]], max_retries=0)
+        assert res.n_crashes == 1
+        assert res.n_dropped == 2
+        assert res.n_served == 0
+        assert res.dropped[:2].all() and not res.served[:2].any()
+
+    def test_crashed_attempt_energy_is_prorated(self):
+        clean = self._run([[np.inf, np.inf]], max_retries=2)
+        crashed = self._run([[0.3, 5.0]], max_retries=0)
+        # partial burn only: strictly positive, strictly below one zeta(2)
+        assert 0.0 < crashed.energy < float(ENERGY[2])
+        assert clean.energy == pytest.approx(float(ENERGY[2]))
+
+    def test_retry_counter_resets_after_success(self):
+        # two separate down windows, each crashing one batch once, with a
+        # successful serve in between: max_retries=1 must never drop
+        res = self._run(
+            [[0.3, 4.0, 10.25, 14.0]], max_retries=1,
+            trace=(0.1, 0.2, 10.05, 10.1),
+        )
+        assert res.n_crashes == 2
+        assert res.n_dropped == 0
+        assert res.n_served == 4
+
+
+class TestShedding:
+    def test_buffer_sheds_only_when_full(self):
+        tr = _trace("poisson", 800)
+        full = simulate_fleet(
+            TABLES, tr, router="jsq", means=MEANS, zeta=ENERGY,
+            b_max=BMAX, record=True,
+        )
+        finite = simulate_fleet(
+            TABLES, tr, router="jsq", means=MEANS, zeta=ENERGY,
+            b_max=BMAX, buffer=4, record=True,
+        )
+        assert full.n_shed == 0
+        assert finite.n_shed > 0
+        assert finite.shed.sum() == finite.n_shed
+        assert finite.n_served + finite.n_shed == len(tr)
+
+    def test_starved_b0_sheds_everything_nan_guards(self):
+        tr = _trace("poisson", 300)
+        st = FleetStream(
+            TABLES, router="jsq", means=MEANS, zeta=ENERGY, b_max=BMAX,
+            buffer=0,
+        )
+        st.push(tr)
+        res = st.finish()
+        assert res.n_served == 0 and res.n_shed == len(tr)
+        assert res.hist.sum() == 0
+        rep = st.report()
+        assert rep["drop_rate"] == 1.0 and rep["goodput"] == 0.0
+        # count-zero convention: empty aggregates report NaN, not 0/0
+        assert np.isnan(rep["W_mean"]) and np.isnan(rep["mean_batch"])
+
+    def test_buffer_certified_python_vs_compiled(self):
+        tr = _trace("poisson", 800)
+        verify_fleet(
+            TABLES, tr, router="pow2", service=SVC, b_max=BMAX,
+            energy_table=ENERGY, buffer=6,
+        )
+
+
+class TestStreamingDegraded:
+    """Chunked FleetStream == one-shot under faults, buffers, beliefs."""
+
+    FIELDS = ("n_served", "n_batches", "n_epochs", "slo_miss",
+              "n_crashes", "n_dropped", "n_shed")
+
+    def _assert_match(self, st, one):
+        for f in self.FIELDS:
+            assert getattr(st, f) == getattr(one, f), f
+        np.testing.assert_allclose(st.energy, one.energy, atol=1e-9)
+        np.testing.assert_allclose(st.lat_sum, one.lat_sum, atol=1e-9)
+        np.testing.assert_allclose(st.t_final, one.t_final, atol=1e-9)
+        np.testing.assert_array_equal(st.hist, one.hist)
+
+    def test_chunked_matches_one_shot_under_faults(self):
+        tr = _trace("poisson", 1000)
+        sch = _schedule(tr)
+        kw = dict(router="jsq", means=MEANS, zeta=ENERGY, b_max=BMAX,
+                  slo=2.0, faults=sch, buffer=24)
+        st = FleetStream(TABLES, **kw)
+        for i in range(0, len(tr), 311):
+            st.push(tr[i:i + 311])
+        self._assert_match(
+            st.finish(), simulate_fleet(TABLES, tr, **kw)
+        )
+
+    @pytest.mark.parametrize("mode", ["belief_argmax", "belief_mix"])
+    def test_chunked_belief_forwarding_matches_one_shot(self, mode):
+        # the stream carries the posterior across chunk seams; aggregates
+        # (n_epochs included: pending-decision flags carry too) must equal
+        # a one-shot run over the pre-forwarded full-trace posterior
+        tr = _trace("mmpp2", 1000)
+        lam = 3 * LAM
+        rates = np.array([0.3 * lam, 1.3 * lam])
+        gen = np.array([[-1 / 60, 1 / 60], [1 / 30, -1 / 30]])
+        lo, hi = q_policy(4, 96, BMAX), q_policy(10, 96, BMAX)
+        stacks = np.stack([np.stack([lo, hi]), np.stack([hi, lo]),
+                           np.stack([lo, lo])])
+        sch = _schedule(tr)
+        kw = dict(router="jsq", means=MEANS, zeta=ENERGY, b_max=BMAX,
+                  slo=2.0, faults=sch, buffer=24)
+        st = FleetStream(
+            stacks, phase_mode=mode,
+            belief_filter=PhaseBeliefFilter(rates=rates, gen=gen), **kw,
+        )
+        for i in range(0, len(tr), 193):
+            st.push(tr[i:i + 193])
+        bel, _ = belief_forward_jax(
+            tr, PhaseBeliefFilter(rates=rates, gen=gen)
+        )
+        self._assert_match(
+            st.finish(),
+            simulate_fleet(stacks, tr, phase_mode=mode,
+                           beliefs=np.asarray(bel), **kw),
+        )
+
+    def test_stream_filter_state_advances(self):
+        tr = _trace("mmpp2", 400)
+        lam = 3 * LAM
+        filt = PhaseBeliefFilter(
+            rates=[0.3 * lam, 1.3 * lam],
+            gen=[[-1 / 60, 1 / 60], [1 / 30, -1 / 30]],
+        )
+        st = FleetStream(
+            np.stack([np.stack([q_policy(4, 96, BMAX)] * 2)] * 2),
+            router="jsq", means=MEANS, b_max=BMAX,
+            phase_mode="belief_argmax", belief_filter=filt,
+        )
+        st.push(tr)
+        assert filt.n_observed == len(tr)
+        ref = PhaseBeliefFilter(rates=filt.rates, gen=filt.gen)
+        for t in tr:
+            ref.observe(t)
+        np.testing.assert_allclose(filt.belief, ref.belief, atol=1e-9)
+
+
+class TestSnapshotRestoreMidFault:
+    """Satellite: crash a replica, snapshot between failure and recovery,
+    restore, and continue to the exact uninterrupted outcome."""
+
+    @pytest.mark.parametrize("mode", ["poisson", "mmpp2"])
+    def test_restore_mid_outage_continues_exactly(self, mode):
+        tr = _trace(mode, 600)
+        sch = _schedule(tr)
+        kw = dict(router="jsq", means=MEANS, zeta=ENERGY, b_max=BMAX,
+                  slo=2.0, faults=sch, buffer=24)
+        base = PythonFleet(TABLES, tr, **kw).run()
+        assert base.n_crashes > 0  # the scenario really faults
+
+        fleet = PythonFleet(TABLES, tr, **kw)
+        snap = None
+        while fleet.step():
+            crashed = fleet.n_crashes > 0 or any(fleet.infl_req)
+            if snap is None and crashed and any(
+                fleet._down(m) for m in range(fleet.M)
+            ):
+                snap = fleet.snapshot()  # mid-outage, retry pending
+        assert snap is not None
+        resumed = PythonFleet(TABLES, tr, **kw)
+        resumed.restore(snap)
+        resumed.run()
+        np.testing.assert_array_equal(
+            np.asarray(resumed.decisions), np.asarray(base.decisions)
+        )
+        np.testing.assert_array_equal(resumed.served, base.served)
+        np.testing.assert_array_equal(resumed.dropped, base.dropped)
+        np.testing.assert_array_equal(resumed.shed, base.shed)
+        np.testing.assert_allclose(
+            resumed.latencies, base.latencies, atol=1e-12
+        )
+        assert resumed.n_crashes == base.n_crashes
+        assert resumed.energy == pytest.approx(base.energy)
+
+
+class TestEngineShedding:
+    """Single-server admission control (Python backend)."""
+
+    def _engine(self, **kw):
+        return ServingEngine(
+            QPolicyScheduler(q=4, b_max=8), b_max=8,
+            lam=1.2 * 8 / float(SVC.mean(8)), service=SVC, slo=0.5,
+            seed=1, **kw,
+        )
+
+    def test_buffer_sheds_under_overload(self):
+        base = self._engine().run(1500)
+        shed = self._engine(buffer=12).run(1500)
+        assert base.n_shed == 0 and shed.n_shed > 0
+        assert shed.n_served < base.n_served
+
+    def test_shed_expired_drops_stale_requests(self):
+        base = self._engine().run(1500)
+        shed = self._engine(shed_expired=True).run(1500)
+        assert base.n_expired == 0 and shed.n_expired > 0
+        # what still gets served missed its SLO less often
+        assert shed.n_slo_miss / max(shed.n_served, 1) <= (
+            base.n_slo_miss / base.n_served
+        )
+
+    def test_b0_starves_with_nan_guards(self):
+        rep = self._engine(buffer=0).run(200)
+        assert rep.n_served == 0 and rep.n_shed > 0
+        assert np.isnan(rep.percentile(50))
+        assert rep.mean_batch == 0.0
+
+    def test_unbounded_buffer_is_a_noop(self):
+        base = self._engine().run(1500)
+        huge = self._engine(buffer=1 << 20).run(1500)
+        np.testing.assert_array_equal(base.latencies, huge.latencies)
+        assert base.n_served == huge.n_served
+
+    def test_compiled_backend_rejects_shedding(self):
+        with pytest.raises(NotImplementedError, match="python"):
+            self._engine(buffer=12).run(100, backend="compiled")
+        with pytest.raises(NotImplementedError, match="python"):
+            self._engine(shed_expired=True).run(100, backend="compiled")
+
+    def test_negative_buffer_rejected(self):
+        with pytest.raises(ValueError, match="buffer"):
+            self._engine(buffer=-1)
+
+    def test_snapshot_restore_with_shedding(self):
+        eng = self._engine(buffer=12, shed_expired=True)
+        eng.run(400)
+        snap = eng.snapshot()
+        cont = eng.run(400)
+        eng2 = self._engine(buffer=12, shed_expired=True)
+        eng2.restore(snap)
+        rerun = eng2.run(400)
+        np.testing.assert_array_equal(cont.latencies, rerun.latencies)
+        assert cont.n_shed == rerun.n_shed
+        assert cont.n_expired == rerun.n_expired

@@ -378,13 +378,56 @@ class TestFleetBeliefLane:
         np.testing.assert_allclose(r_bel.lat_sum, r_ph.lat_sum)
         assert r_bel.n_served == r_ph.n_served
 
-    def test_belief_mix_not_implemented(self):
-        trace, bel, stacks = self._stack_and_beliefs(n=50)
-        with pytest.raises(NotImplementedError, match="mix"):
-            simulate_fleet(
-                stacks, trace, phase_mode="belief_mix", beliefs=bel,
-                means=MEANS, b_max=BMAX,
+    def test_belief_mix_m1_matches_single_server_kernel(self):
+        # an M=1 belief-mix fleet replays simulate_compiled's mix lane
+        from repro.serving.compiled import simulate_compiled
+
+        trace, bel, stacks = self._stack_and_beliefs(n=600)
+        kw = dict(means=MEANS, zeta=ENERGY, b_max=BMAX, record=True)
+        r = simulate_fleet(
+            stacks[:1], trace, phase_mode="belief_mix", beliefs=bel,
+            router="rr", **kw
+        )
+        s = simulate_compiled(
+            stacks[0], trace, phase_mode="belief_mix", beliefs=bel, **kw
+        )
+        np.testing.assert_array_equal(
+            r.actions[r.actions > 0], s.batch_sizes
+        )
+        assert r.n_served == s.n_served
+        np.testing.assert_allclose(
+            r.latencies[r.served], s.latencies
+        )
+        np.testing.assert_allclose(r.energy, s.energy)
+        np.testing.assert_allclose(r.t_final, s.t_final)
+
+    def test_belief_mix_certified_python_vs_compiled(self):
+        trace, bel, stacks = self._stack_and_beliefs(n=500)
+        svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+        for router in ("jsq", "batch_aware"):
+            verify_fleet(
+                stacks, trace, router=router, service=svc,
+                energy_table=ENERGY, b_max=BMAX,
+                phase_mode="belief_mix", beliefs=bel,
             )
+
+    def test_belief_mix_differs_from_argmax_somewhere(self):
+        # a mixed posterior between distant per-phase thresholds must
+        # produce at least one action the MAP row would not
+        trace, bel, stacks = self._stack_and_beliefs(n=900)
+        kw = dict(
+            router="jsq", means=MEANS, zeta=ENERGY, b_max=BMAX, record=True
+        )
+        r_mix = simulate_fleet(
+            stacks, trace, phase_mode="belief_mix", beliefs=bel, **kw
+        )
+        r_map = simulate_fleet(
+            stacks, trace, phase_mode="belief_argmax", beliefs=bel, **kw
+        )
+        assert r_mix.n_served == r_map.n_served == len(trace)
+        assert len(r_mix.actions) != len(r_map.actions) or (
+            (r_mix.actions != r_map.actions).any()
+        )
 
     def test_grid_belief_argmax_equals_explicit_phases(self):
         trace, bel, stacks = self._stack_and_beliefs(n=700)

@@ -179,3 +179,109 @@ class TestPolicies:
         pol[10] = 0  # break the structure
         is_cl, _ = is_control_limit(pol, 64, 32)
         assert not is_cl
+
+
+class TestFiniteBuffer:
+    """Finite waiting room B == s_max: exact fold, no abstract tail."""
+
+    def _finite_spec(self, rho=0.7, b_max=16, B=48, c_drop=0.0, w2=1.0):
+        svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+        lam = rho * b_max / float(svc.mean(b_max))
+        return SMDPSpec(
+            lam=lam, service=svc, energy=GOOGLENET_P4_ENERGY,
+            b_min=1, b_max=b_max, w1=1.0, w2=w2, s_max=B,
+            buffer=B, c_drop=c_drop,
+        )
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="buffer == s_max"):
+            dataclasses.replace(self._finite_spec(), buffer=47)
+        with pytest.raises(ValueError, match="c_drop"):
+            self._finite_spec(c_drop=-1.0)
+        # overload is a valid finite-buffer regime (shedding absorbs it) ...
+        self._finite_spec(rho=1.3)
+        # ... but stays rejected for the tail-abstracted chain
+        with pytest.raises(ValueError, match="instability"):
+            paper_spec(rho=1.3)
+
+    def test_mixed_batch_keeps_tail_specs_byte_identical(self):
+        from repro.core import build_smdp_batched
+
+        tail = paper_spec(rho=0.7, s_max=48, b_max=16)
+        fin = self._finite_spec(c_drop=25.0)
+        alone = build_smdp_batched([tail])
+        mixed = build_smdp_batched([tail, fin])
+        for field in ("c_hat", "c_hold", "c_energy", "c_tilde", "y"):
+            a = getattr(alone, field)[0]
+            b = getattr(mixed, field)[0]
+            assert np.array_equal(a, b, equal_nan=True), field
+        np.testing.assert_array_equal(alone.eta[0], mixed.eta[0])
+
+    def test_s_o_is_exact_alias_of_B(self):
+        mdp = build_smdp(self._finite_spec(c_drop=25.0))
+        B = mdp.spec.s_max
+        np.testing.assert_array_equal(mdp.c_hat[mdp.s_o], mdp.c_hat[B])
+        np.testing.assert_array_equal(mdp.c_hold[mdp.s_o], mdp.c_hold[B])
+        # transition rows of the alias serve from base B as well
+        np.testing.assert_allclose(
+            mdp.m_hat[mdp.s_o, 1:], mdp.m_hat[B, 1:], atol=1e-12
+        )
+
+    def test_capped_holding_never_exceeds_unbounded(self):
+        fin = self._finite_spec(c_drop=0.0)
+        tail = dataclasses.replace(fin, buffer=None, c_drop=0.0)
+        m_f = build_smdp(fin)
+        m_t = build_smdp(tail)
+        B = fin.s_max
+        serve = m_f.feasible[:B + 1, 1:]
+        assert (
+            m_f.c_hold[:B + 1, 1:][serve] <= m_t.c_hold[:B + 1, 1:][serve] + 1e-12
+        ).all()
+        # the cap binds hardest near the full buffer
+        assert m_f.c_hold[B, 1] < m_t.c_hold[B, 1]
+
+    def test_zero_drop_light_load_matches_tail_policy(self):
+        # with c_drop = 0 and light load the buffer is effectively
+        # invisible below the truncation region: the policies agree on
+        # the occupied band
+        fin = solve(self._finite_spec(rho=0.5, B=64, c_drop=0.0))
+        tail = solve(paper_spec(rho=0.5, s_max=64, b_max=16), delta=None,
+                     auto_c_o=False)
+        np.testing.assert_array_equal(
+            fin.action_table(upto=32), tail.action_table(upto=32)
+        )
+
+    def test_drop_cost_serves_earlier_under_overload(self):
+        blind = solve(self._finite_spec(rho=1.2, c_drop=0.0))
+        aware = solve(self._finite_spec(rho=1.2, c_drop=50.0))
+
+        def serve_from(res):
+            tab = res.action_table()
+            hits = np.nonzero(tab > 0)[0]
+            return int(hits[0]) if hits.size else np.inf
+
+        # free drops under overload: shedding absorbs the excess, serving
+        # only burns energy, so the blind policy parks much longer (or
+        # forever); pricing drops pulls the serve threshold down
+        assert serve_from(aware) < serve_from(blind), (
+            serve_from(aware), serve_from(blind),
+        )
+
+    def test_sweep_rejects_mixed_flavours(self):
+        from repro.core import sweep_solve
+
+        with pytest.raises(ValueError, match="mix"):
+            sweep_solve([paper_spec(s_max=48, b_max=16),
+                         self._finite_spec()])
+
+    def test_modulated_build_rejects_finite_buffer(self):
+        from repro.core.smdp import PhaseConfig, build_smdp_modulated
+
+        ph = PhaseConfig(rates=(0.5, 1.5), gen=((-0.1, 0.1), (0.2, -0.2)))
+        sp = self._finite_spec()
+        lam = float(np.dot(
+            [2 / 3, 1 / 3], ph.rates
+        ))
+        sp = dataclasses.replace(sp, lam=sp.lam)
+        with pytest.raises(NotImplementedError, match="Poisson-only"):
+            build_smdp_modulated(sp, ph)
