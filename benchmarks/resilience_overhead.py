@@ -1,0 +1,162 @@
+"""Resilience overhead: what durable checkpointing costs on the hot path.
+
+Crash-safety is only free if nobody pays for it when nothing crashes.
+Two measurements, one gate:
+
+1. **Sweep checkpointing** — `sweep_solve` over a w2 grid with and
+   without ``checkpoint_dir=`` at the *same* chunking (chunk_size is
+   honored either way, so the solve work is identical and the delta is
+   purely the per-chunk atomic save).  The run asserts the checkpointed
+   sweep stays within 5% wall-clock of the uncheckpointed one — the CI
+   resilience gate.
+2. **FleetStream.save()** — per-save cost of persisting the full chunk
+   seam (queues, sketches, RNG), reported as ms/save and as relative
+   overhead at the worst-case save-every-chunk cadence (informational:
+   real deployments save every N chunks and divide this by N).
+
+Usage:  PYTHONPATH=src python -m benchmarks.resilience_overhead [--smoke]
+            [--json BENCH_resilience.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import sweep_solve
+from repro.core.policies import q_policy
+from repro.serving import FleetStream
+
+from .common import emit, emit_json, paper_spec
+
+MAX_SWEEP_OVERHEAD = 0.05  # CI gate: durable sweeps within 5% wall-clock
+
+
+def _grid(n, rho=0.88, s_max=384, b_max=16):
+    # slow-mixing, realistically-sized chunks: the async save overlaps the
+    # next chunk's solve, so the gate measures the steady-state cost, not
+    # an fsync against a toy 20 ms solve
+    base = paper_spec(rho=rho, s_max=s_max, b_max=b_max)
+    return [
+        dataclasses.replace(base, w2=float(w))
+        for w in np.linspace(0.0, 12.0, n)
+    ]
+
+
+def _time_sweep(specs, chunk_size, ckpt_dir, repeat):
+    best = np.inf
+    for r in range(repeat):
+        kw = dict(chunk_size=chunk_size)
+        if ckpt_dir is not None:
+            d = Path(ckpt_dir) / f"rep{r}"  # fresh dir: no resume shortcut
+            kw["checkpoint_dir"] = str(d)
+        t0 = time.perf_counter()
+        sweep_solve(specs, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_sweep(n_specs, chunk_size, repeat):
+    specs = _grid(n_specs)
+    sweep_solve(specs, chunk_size=chunk_size)  # compile warm-up
+    t_plain = _time_sweep(specs, chunk_size, None, repeat)
+    with tempfile.TemporaryDirectory() as td:
+        t_ck = _time_sweep(specs, chunk_size, td, repeat)
+    overhead = t_ck / t_plain - 1.0
+    n_saves = -(-n_specs // chunk_size)
+    emit("sweep_plain", t_plain * 1e6, f"{n_specs} specs")
+    emit("sweep_checkpointed", t_ck * 1e6, f"{n_saves} saves")
+    emit("sweep_overhead", (t_ck - t_plain) * 1e6, f"{overhead:+.2%}")
+    return {
+        "n_specs": n_specs,
+        "chunk_size": chunk_size,
+        "wall_s_plain": t_plain,
+        "wall_s_checkpointed": t_ck,
+        "overhead_frac": overhead,
+        "gate_frac": MAX_SWEEP_OVERHEAD,
+        "within_gate": overhead <= MAX_SWEEP_OVERHEAD,
+    }
+
+
+def bench_stream(n_arrivals, chunk, repeat):
+    b_max = 16
+    from repro.core import GOOGLENET_P4_LATENCY, ServiceModel
+
+    svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="det")
+    means = np.array(
+        [0.0] + [float(svc.mean(b)) for b in range(1, b_max + 1)]
+    )
+    lam = 2 * 0.7 * b_max / float(svc.mean(b_max))
+    tr = np.cumsum(
+        np.random.default_rng(0).exponential(1.0 / lam, n_arrivals)
+    )
+    tabs = np.stack([q_policy(q, 96, b_max) for q in (4, 8)])
+    kw = dict(router="jsq", means=means, b_max=b_max, slo=3.0)
+
+    def run(save_dir):
+        fs = FleetStream(tabs, **kw)
+        for lo in range(0, len(tr), chunk):
+            fs.push(tr[lo:lo + chunk])
+            if save_dir is not None:
+                fs.save(save_dir)
+        return fs.finish()
+
+    run(None)  # compile warm-up
+    t_plain = np.inf
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        run(None)
+        t_plain = min(t_plain, time.perf_counter() - t0)
+    t_saved = np.inf
+    n_saves = -(-len(tr) // chunk)
+    for _ in range(repeat):
+        with tempfile.TemporaryDirectory() as td:
+            t0 = time.perf_counter()
+            run(td)
+            t_saved = min(t_saved, time.perf_counter() - t0)
+    ms_per_save = (t_saved - t_plain) / n_saves * 1e3
+    emit("stream_plain", t_plain * 1e6, f"{n_arrivals} arrivals")
+    emit("stream_save_every_chunk", t_saved * 1e6, f"{n_saves} saves")
+    emit("stream_ms_per_save", ms_per_save * 1e3, f"{ms_per_save:.2f} ms")
+    return {
+        "n_arrivals": n_arrivals,
+        "chunk": chunk,
+        "n_saves": n_saves,
+        "wall_s_plain": t_plain,
+        "wall_s_save_every_chunk": t_saved,
+        "ms_per_save": ms_per_save,
+        "overhead_frac_worst_cadence": t_saved / t_plain - 1.0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        sweep = bench_sweep(n_specs=32, chunk_size=8, repeat=3)
+        stream = bench_stream(n_arrivals=20_000, chunk=2000, repeat=2)
+    else:
+        sweep = bench_sweep(n_specs=64, chunk_size=16, repeat=3)
+        stream = bench_stream(n_arrivals=200_000, chunk=8000, repeat=3)
+    payload = {"sweep": sweep, "stream": stream}
+    if args.json:
+        emit_json(args.json, "resilience_overhead", payload)
+    assert sweep["within_gate"], (
+        f"checkpointed sweep overhead {sweep['overhead_frac']:+.2%} exceeds "
+        f"the {MAX_SWEEP_OVERHEAD:.0%} gate"
+    )
+    print(
+        f"resilience gate: sweep overhead {sweep['overhead_frac']:+.2%} "
+        f"<= {MAX_SWEEP_OVERHEAD:.0%}; stream save "
+        f"{stream['ms_per_save']:.2f} ms/save"
+    )
+
+
+if __name__ == "__main__":
+    main()

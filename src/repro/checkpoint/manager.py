@@ -30,6 +30,20 @@ PyTree = Any
 _SEP = "//"
 
 
+class CheckpointCorruptError(IOError):
+    """A checkpoint failed integrity verification.
+
+    Raised (instead of a bare KeyError / numpy load failure) whenever the
+    on-disk state of a step is unusable: a truncated or unparseable
+    manifest.json, an array named by the restore tree but absent from the
+    manifest or the npz payload, or a CRC32 mismatch.  The message always
+    names the offending array (or file) and the step, so operators of
+    long-horizon runs can tell a bad disk from a version skew at a glance.
+    Subclasses IOError: existing ``except IOError`` recovery paths keep
+    working.
+    """
+
+
 def _flatten(tree: PyTree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
@@ -47,6 +61,12 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep_last_k
         self._thread: Optional[threading.Thread] = None
+        # a crash mid-save leaves step_<n>.tmp/ behind; it never shadows a
+        # finished checkpoint (the rename is the commit point) but it does
+        # leak disk on every restart of a preempted job — sweep it here
+        for p in self.dir.glob("step_*.tmp"):
+            if p.is_dir():
+                shutil.rmtree(p, ignore_errors=True)
 
     # -- save -----------------------------------------------------------
     def save(self, step: int, tree: PyTree, *, async_: bool = False) -> None:
@@ -115,6 +135,74 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _load_step(self, step: int):
+        """Manifest + npz handle for a step, with corruption surfaced."""
+        d = self.dir / f"step_{step:010d}"
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+            arrays_meta = manifest["arrays"]
+        except (OSError, json.JSONDecodeError, KeyError, TypeError) as e:
+            raise CheckpointCorruptError(
+                f"manifest.json at step {step} in {self.dir} is missing or "
+                f"truncated ({type(e).__name__}: {e})"
+            ) from e
+        try:
+            data = np.load(d / "arrays.npz")
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"arrays.npz at step {step} in {self.dir} is unreadable "
+                f"({type(e).__name__}: {e})"
+            ) from e
+        return arrays_meta, data
+
+    def _read_array(self, arrays_meta, data, key: str, step: int, verify: bool):
+        meta = arrays_meta.get(key)
+        if meta is None:
+            raise CheckpointCorruptError(
+                f"array '{key}' missing from manifest at step {step} "
+                f"in {self.dir}"
+            )
+        try:
+            arr = data[key]
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"array '{key}' unreadable in arrays.npz at step {step} "
+                f"in {self.dir} ({type(e).__name__}: {e})"
+            ) from e
+        if verify:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != meta["crc32"]:
+                raise CheckpointCorruptError(
+                    f"checksum mismatch for array '{key}' at step {step} "
+                    f"in {self.dir}"
+                )
+        if meta["dtype"] == "bfloat16":
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        return arr
+
+    def restore_flat(
+        self, *, step: Optional[int] = None, verify: bool = True
+    ) -> dict:
+        """Restore every saved array as a flat {key: np.ndarray} dict.
+
+        For consumers whose tree structure is data-dependent (e.g. a
+        resumable sweep's per-spec result records): the saved keys ARE the
+        structure, so no abstract tree is required.  Keys use the same
+        ``//``-joined paths that save() flattens to; integrity checks match
+        restore().
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        arrays_meta, data = self._load_step(step)
+        return {
+            key: self._read_array(arrays_meta, data, key, step, verify)
+            for key in arrays_meta
+        }
+
     def restore(
         self,
         abstract_tree: PyTree,
@@ -132,23 +220,12 @@ class CheckpointManager:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = self.dir / f"step_{step:010d}"
-        manifest = json.loads((d / "manifest.json").read_text())
-        data = np.load(d / "arrays.npz")
+        arrays_meta, data = self._load_step(step)
         flat_abs, treedef = _flatten(abstract_tree)
         flat_sh, _ = _flatten(shardings) if shardings is not None else ({}, None)
         leaves = []
         for key, leaf in flat_abs.items():
-            meta = manifest["arrays"][key]
-            arr = data[key]
-            if verify:
-                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
-                if crc != meta["crc32"]:
-                    raise IOError(f"checksum mismatch for {key} at step {step}")
-            if meta["dtype"] == "bfloat16":
-                import ml_dtypes
-
-                arr = arr.view(ml_dtypes.bfloat16)
+            arr = self._read_array(arrays_meta, data, key, step, verify)
             if flat_sh:
                 leaves.append(jax.device_put(arr, flat_sh[key]))
             else:

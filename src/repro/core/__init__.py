@@ -34,6 +34,7 @@ from .smdp import (  # noqa: E402,F401
 from .rvi import (  # noqa: E402,F401
     BatchedRVIResult,
     RVIResult,
+    SolveReport,
     relative_value_iteration,
     relative_value_iteration_batched,
     relative_value_iteration_modulated,
@@ -55,6 +56,7 @@ from .solve import (  # noqa: E402,F401
     solve,
 )
 from .sweep import (  # noqa: E402,F401
+    SweepPreempted,
     pad_specs,
     solve_modulated,
     sweep_solve,

@@ -59,7 +59,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -395,6 +395,7 @@ class BatchedRVIResult:
     accel_accepts: Optional[np.ndarray] = None  # (N,) accepted accel steps
     accel_rejects: Optional[np.ndarray] = None  # (N,) span-increasing steps
     #   (taken when safeguard is off, refused when it is on)
+    report: Optional["SolveReport"] = None  # guard=True attaches certificates
 
     def unstack(self, i: int) -> RVIResult:
         return RVIResult(
@@ -406,6 +407,299 @@ class BatchedRVIResult:
             converged=bool(self.converged[i]),
             wall_time_s=self.wall_time_s / len(self.g),
         )
+
+
+# ---------------------------------------------------------------------------
+# Guardrail ladder: per-spec NaN/Inf sentinels + divergence detection, with
+# an automatic fallback ladder so one pathological spec degrades to a slower
+# solve path (or a per-spec quarantine re-solve) instead of poisoning the
+# whole vmapped batch.  Enabled with guard=True on both batched entry points;
+# core.sweep turns it on by default.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SolveReport:
+    """Residual certificates + guardrail record of one batched solve.
+
+    ``span`` against ``eps`` (with the relative floor already folded into
+    ``converged``) is the per-spec convergence certificate.  A spec is
+    ``healthy`` when its g/h are finite AND it converged — a non-finite or
+    still-growing span residual at the iteration cap is how divergence
+    shows up, so the two sentinels together cover NaN/Inf poisoning and
+    span-residual divergence alike.  ``rungs`` maps each fallback rung
+    that fired to the spec rows it was applied to (in the order tried);
+    ``quarantined`` rows were masked out of the batch and re-solved
+    through the scalar float64 oracle path; ``failed`` rows stayed
+    unhealthy after the entire ladder (their outputs carry NaN/Inf — the
+    batch still completes, callers decide what to do with those rows).
+    """
+
+    eps: float
+    span: np.ndarray  # (N,) final span residuals
+    converged: np.ndarray  # (N,) bool
+    healthy: np.ndarray  # (N,) bool — finite g/h and converged
+    rungs: Dict[str, List[int]] = dataclasses.field(default_factory=dict)
+    quarantined: List[int] = dataclasses.field(default_factory=list)
+    failed: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def any_fired(self) -> bool:
+        return bool(self.rungs) or bool(self.quarantined)
+
+    @staticmethod
+    def merged(
+        parts: Sequence[Tuple["SolveReport", Sequence[int]]],
+        n: int,
+        eps: float,
+    ) -> "SolveReport":
+        """Fold per-batch reports into one n-spec report (sweep rounds).
+
+        ``parts`` pairs each report with the caller-level index of every
+        batch row; later parts overwrite earlier ones per spec (a regrown
+        spec's final solve wins), and a spec counts as failed only if its
+        LAST solve left it unhealthy.
+        """
+        span = np.full(n, np.nan)
+        converged = np.zeros(n, dtype=bool)
+        healthy = np.zeros(n, dtype=bool)
+        rungs: Dict[str, List[int]] = {}
+        quarantined: List[int] = []
+        ever_failed: set = set()
+        for rep, rows in parts:
+            rows = list(rows)
+            span[rows] = rep.span
+            converged[rows] = rep.converged
+            healthy[rows] = rep.healthy
+            for name, applied in rep.rungs.items():
+                rungs.setdefault(name, []).extend(rows[i] for i in applied)
+            quarantined.extend(rows[i] for i in rep.quarantined)
+            ever_failed.update(rows[i] for i in rep.failed)
+        return SolveReport(
+            eps=eps,
+            span=span,
+            converged=converged,
+            healthy=healthy,
+            rungs=rungs,
+            quarantined=sorted(set(quarantined)),
+            failed=sorted(i for i in ever_failed if not healthy[i]),
+        )
+
+
+def _spec_health(res: BatchedRVIResult) -> np.ndarray:
+    """(N,) bool NaN/Inf sentinel + divergence check per spec."""
+    g = np.asarray(res.g, dtype=np.float64)
+    h = np.asarray(res.h, dtype=np.float64).reshape(g.shape[0], -1)
+    finite = np.isfinite(g) & np.isfinite(h).all(axis=-1)
+    return finite & np.asarray(res.converged, dtype=bool)
+
+
+def _writable(res: BatchedRVIResult) -> BatchedRVIResult:
+    """Copy the per-spec arrays so ladder rungs can patch rows in place."""
+    return dataclasses.replace(
+        res,
+        policies=np.array(res.policies),
+        g=np.array(res.g, dtype=np.float64),
+        h=np.array(res.h, dtype=np.float64),
+        iterations=np.array(res.iterations),
+        span=np.array(res.span, dtype=np.float64),
+        converged=np.array(res.converged, dtype=bool),
+    )
+
+
+def _patch_rows(
+    res: BatchedRVIResult, sub: BatchedRVIResult, dst: np.ndarray, src: np.ndarray
+) -> None:
+    res.policies[dst] = np.asarray(sub.policies)[src]
+    res.g[dst] = np.asarray(sub.g)[src]
+    res.h[dst] = np.asarray(sub.h)[src]
+    res.iterations[dst] = np.asarray(sub.iterations)[src]
+    res.span[dst] = np.asarray(sub.span)[src]
+    res.converged[dst] = np.asarray(sub.converged)[src]
+
+
+def _guarded_batched(
+    batch,
+    eps: float,
+    max_iter: int,
+    eps_rel: float,
+    h0,
+    mixed_precision: bool,
+    accel: str,
+    backup: str,
+    accel_kw: dict,
+) -> BatchedRVIResult:
+    """Guardrail ladder around the batched RVI (see SolveReport).
+
+    Rung order mirrors likely-culprit order: the Pallas kernel falls back
+    to the jnp banded backup, the accelerant (and any caller-supplied warm
+    start — a poisoned anchor h0 turns every row NaN) falls back to the
+    plain lockstep loop, mixed precision falls back to single-phase
+    float64, and rows that survive all of that are quarantined: masked out
+    and re-solved one by one through the scalar float64 oracle path.  Only
+    the unhealthy rows ride each rung, so a healthy batch pays one numpy
+    health check and nothing else.
+    """
+
+    def run(b, h0_, mp, ac, bk):
+        return relative_value_iteration_batched(
+            b,
+            eps=eps,
+            max_iter=max_iter,
+            eps_rel=eps_rel,
+            h0=h0_,
+            mixed_precision=mp,
+            accel=ac,
+            backup=bk,
+            **accel_kw,
+        )
+
+    res = run(batch, h0, mixed_precision, accel, backup)
+    healthy = _spec_health(res)
+    rungs: Dict[str, List[int]] = {}
+    quarantined: List[int] = []
+    failed: List[int] = []
+    if not healthy.all():
+        res = _writable(res)
+        bad = np.flatnonzero(~healthy)
+        ladder = []
+        bk = backup
+        if bk == "pallas":
+            ladder.append(
+                ("backup_banded", dict(mp=mixed_precision, ac=accel, bk="banded", drop_h0=False))
+            )
+            bk = "banded"
+        if accel != "none" or h0 is not None:
+            ladder.append(
+                ("plain_restart", dict(mp=mixed_precision, ac="none", bk=bk, drop_h0=True))
+            )
+        if mixed_precision:
+            ladder.append(
+                ("float64", dict(mp=False, ac="none", bk=bk, drop_h0=True))
+            )
+        for name, opt in ladder:
+            if bad.size == 0:
+                break
+            sub = batch.take([int(i) for i in bad])
+            sub_h0 = (
+                None
+                if (opt["drop_h0"] or h0 is None)
+                else np.asarray(h0)[bad]
+            )
+            sub_res = run(sub, sub_h0, opt["mp"], opt["ac"], opt["bk"])
+            ok = _spec_health(sub_res)
+            rungs[name] = [int(i) for i in bad]
+            if ok.any():
+                _patch_rows(res, sub_res, bad[ok], np.flatnonzero(ok))
+            bad = bad[~ok]
+        if bad.size:
+            rungs["quarantine"] = [int(i) for i in bad]
+            for i in bad:
+                i = int(i)
+                quarantined.append(i)
+                oracle = relative_value_iteration(
+                    build_smdp(batch.specs[i]),
+                    eps=eps,
+                    max_iter=max_iter,
+                    backup="banded",
+                    eps_rel=eps_rel,
+                    accel="none",
+                )
+                if (
+                    np.isfinite(oracle.g)
+                    and np.isfinite(oracle.h).all()
+                    and oracle.converged
+                ):
+                    res.policies[i] = oracle.policy
+                    res.g[i] = oracle.g
+                    res.h[i] = oracle.h
+                    res.iterations[i] = oracle.iterations
+                    res.span[i] = oracle.span
+                    res.converged[i] = True
+                else:
+                    failed.append(i)
+        healthy = _spec_health(res)
+    return dataclasses.replace(
+        res,
+        report=SolveReport(
+            eps=eps,
+            span=np.asarray(res.span),
+            converged=np.asarray(res.converged),
+            healthy=healthy,
+            rungs=rungs,
+            quarantined=quarantined,
+            failed=failed,
+        ),
+    )
+
+
+def _guarded_modulated(
+    mbatch,
+    eps: float,
+    max_iter: int,
+    eps_rel: float,
+    h0,
+    accel: str,
+    accel_period: int,
+) -> BatchedRVIResult:
+    """Guardrail ladder for the modulated batched RVI.
+
+    Same discipline as _guarded_batched with the rungs that apply to the
+    product chain (always float64, no Pallas backup): the MPI accelerant
+    and any caller h0 fall back to the plain lockstep loop, and rows still
+    unhealthy are quarantined into single-spec plain-f64 re-solves — the
+    oracle path the K = 1 bitwise tests pin the modulated solver against.
+    """
+
+    def run(b, h0_, ac):
+        return relative_value_iteration_modulated(
+            b,
+            eps=eps,
+            max_iter=max_iter,
+            eps_rel=eps_rel,
+            h0=h0_,
+            accel=ac,
+            accel_period=accel_period,
+        )
+
+    res = run(mbatch, h0, accel)
+    healthy = _spec_health(res)
+    rungs: Dict[str, List[int]] = {}
+    quarantined: List[int] = []
+    failed: List[int] = []
+    if not healthy.all():
+        res = _writable(res)
+        bad = np.flatnonzero(~healthy)
+        if accel != "none" or h0 is not None:
+            sub_res = run(mbatch.take([int(i) for i in bad]), None, "none")
+            ok = _spec_health(sub_res)
+            rungs["plain_restart"] = [int(i) for i in bad]
+            if ok.any():
+                _patch_rows(res, sub_res, bad[ok], np.flatnonzero(ok))
+            bad = bad[~ok]
+        if bad.size:
+            rungs["quarantine"] = [int(i) for i in bad]
+            for i in bad:
+                i = int(i)
+                quarantined.append(i)
+                oracle = run(mbatch.take([i]), None, "none")
+                if _spec_health(oracle)[0]:
+                    _patch_rows(res, oracle, np.array([i]), np.array([0]))
+                else:
+                    failed.append(i)
+        healthy = _spec_health(res)
+    return dataclasses.replace(
+        res,
+        report=SolveReport(
+            eps=eps,
+            span=np.asarray(res.span),
+            converged=np.asarray(res.converged),
+            healthy=healthy,
+            rungs=rungs,
+            quarantined=quarantined,
+            failed=failed,
+        ),
+    )
 
 
 @partial(jax.jit, static_argnames=("max_iter", "s_max", "backup_kind"))
@@ -803,6 +1097,7 @@ def relative_value_iteration_batched(
     accel_period: int = 6,
     accel_memory: int = 5,
     accel_safeguard: bool = True,
+    guard: bool = False,
 ) -> BatchedRVIResult:
     """Solve every spec of a BatchedSMDP with one jitted banded-RVI call.
 
@@ -829,7 +1124,29 @@ def relative_value_iteration_batched(
     ``backup`` ("banded" | "pallas") picks the lockstep backup kernel; the
     final policy extraction and the float64 polish phase always use the
     float64 jnp banded path, so policies are bit-stable across backends.
+
+    ``guard=True`` wraps the solve in the guardrail ladder (NaN/Inf
+    sentinels, divergence detection, pallas->banded / accel->plain /
+    f32->f64 fallbacks, per-spec quarantine re-solves) and attaches a
+    SolveReport to the result; healthy batches return results identical
+    to guard=False.
     """
+    if guard:
+        return _guarded_batched(
+            batch,
+            eps=eps,
+            max_iter=max_iter,
+            eps_rel=eps_rel,
+            h0=h0,
+            mixed_precision=mixed_precision,
+            accel=accel,
+            backup=backup,
+            accel_kw=dict(
+                accel_period=accel_period,
+                accel_memory=accel_memory,
+                accel_safeguard=accel_safeguard,
+            ),
+        )
     t0 = time.perf_counter()
     pm = batch.pmfs_banded
     arrs = (
@@ -1202,6 +1519,7 @@ def relative_value_iteration_modulated(
     h0: Optional[np.ndarray] = None,
     accel: str = "auto",
     accel_period: int = 6,
+    guard: bool = False,
 ) -> BatchedRVIResult:
     """Solve every spec of a ModulatedBatchedSMDP (one jitted call, f64).
 
@@ -1215,8 +1533,19 @@ def relative_value_iteration_modulated(
     mixed-precision coarse loop buys nothing at these sizes.  g/h are
     replaced by the exact linear-solve evaluation of the final greedy
     policy wherever that solve is finite, exactly like the accelerated
-    scalar paths.
+    scalar paths.  ``guard=True`` wraps the solve in the guardrail ladder
+    (see relative_value_iteration_batched) and attaches a SolveReport.
     """
+    if guard:
+        return _guarded_modulated(
+            mbatch,
+            eps=eps,
+            max_iter=max_iter,
+            eps_rel=eps_rel,
+            h0=h0,
+            accel=accel,
+            accel_period=accel_period,
+        )
     t0 = time.perf_counter()
     pm = mbatch.pmfs_banded
     band = trimmed_band_modulated(pm)

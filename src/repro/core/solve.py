@@ -12,7 +12,11 @@ from typing import Optional
 import numpy as np
 
 from .evaluate import PolicyEval, evaluate_policy
-from .rvi import RVIResult, relative_value_iteration
+from .rvi import (  # noqa: F401  (SolveReport re-exported: guardrail record)
+    RVIResult,
+    SolveReport,
+    relative_value_iteration,
+)
 from .smdp import PhaseConfig, SMDPSpec, TruncatedSMDP, build_smdp
 
 

@@ -29,15 +29,29 @@ mirrors: the same ordering, c_o-probe reuse, warm-start chaining and
 adaptive-truncation machinery runs on the (phase, queue) product chain
 (smdp.build_smdp_modulated_batched), producing (K, S) phase-indexed
 policies the serving layer consumes as table stacks.
+
+Long-horizon robustness (both sweep entry points):
+
+  * guard=True (default) routes every batched solve through the rvi
+    guardrail ladder — a poisoned or diverging spec degrades to slower
+    solve paths / per-spec quarantine instead of NaN-ing the whole grid,
+    and report_sink=[...] collects the merged SolveReport certificates;
+  * checkpoint_dir=... makes the sweep durable and SIGTERM-preemptible:
+    solved chunks persist through checkpoint.CheckpointManager and an
+    identical re-run resumes bitwise-identically (see the "Durable,
+    resumable sweeps" section below for the invariant).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+import hashlib
+import signal
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .evaluate import (
+    PolicyEval,
     _finish_from_batch,
     evaluate_policy_banded,
     evaluate_policy_batched,
@@ -48,6 +62,8 @@ from .evaluate import (
 from .policies import greedy_policy
 from .rvi import (
     ACCEL_RHO_THRESHOLD as _ACCEL_RHO_THRESHOLD,
+    RVIResult,
+    SolveReport,
     relative_value_iteration_batched,
     relative_value_iteration_modulated,
 )
@@ -214,6 +230,323 @@ def resolve_abstract_cost_batched(
     ]
 
 
+# ---------------------------------------------------------------------------
+# Durable, resumable sweeps.
+#
+# A checkpointed sweep processes each round's level groups in fixed-size
+# chunks of the (rho, w2)-sorted order and persists the full solver state
+# after every chunk through checkpoint.CheckpointManager (atomic rename +
+# per-array CRC).  The resume invariant is *bitwise identity*: a sweep that
+# is killed and re-run with the same arguments and checkpoint_dir produces
+# exactly the arrays a never-killed checkpointed run produces, because
+#   * chunks are consecutive slices of a stably-sorted group, so the
+#     unprocessed remainder of a round is a suffix of the processing plan
+#     and re-chunking a suffix reproduces the original chunk boundaries;
+#   * the current round's remaining queue and the next round's regrow queue
+#     are persisted separately (merging them would reorder level groups);
+#   * calibrated c_o values are persisted, and the c_o probe batch is never
+#     reused as a solve batch under checkpointing, so every chunk batch is
+#     rebuilt from its specs alone on both paths.
+# ---------------------------------------------------------------------------
+
+#: default specs per checkpointed chunk (checkpoint_dir set, chunk_size not)
+_DEFAULT_CHUNK = 16
+
+
+class SweepPreempted(RuntimeError):
+    """A preemption signal (SIGTERM) arrived; progress is durable on disk.
+
+    Raised only after the in-flight chunk's checkpoint finished its atomic
+    rename, so the step named here holds every result solved so far.
+    Re-running the same sweep call with the same checkpoint_dir resumes
+    from it."""
+
+    def __init__(self, checkpoint_dir, step: int):
+        super().__init__(
+            f"sweep preempted; progress saved to {checkpoint_dir} "
+            f"(step {step})"
+        )
+        self.checkpoint_dir = str(checkpoint_dir)
+        self.step = step
+
+
+class _PreemptGuard:
+    """SIGTERM -> save-and-exit flag (same discipline as training preempt).
+
+    The handler only sets a flag; the sweep loop checks it after each
+    chunk's checkpoint commits and raises SweepPreempted.  Installed only
+    from the main thread (signal.signal raises ValueError elsewhere — a
+    sweep running on a worker thread simply cannot be signal-preempted)."""
+
+    def __init__(self, enabled: bool):
+        self.hit = False
+        self._old = None
+        self._installed = False
+        if enabled:
+            try:
+                self._old = signal.signal(signal.SIGTERM, self._handler)
+                self._installed = True
+            except ValueError:
+                pass
+
+    def _handler(self, signum, frame):
+        self.hit = True
+
+    def restore(self) -> None:
+        if self._installed:
+            signal.signal(signal.SIGTERM, self._old)
+
+
+def _canon(obj, h) -> None:
+    """Feed a canonical byte stream of obj into hash h.
+
+    repr() is avoided for arrays (truncation) and bare objects (id()); spec
+    trees bottom out at dataclasses / ndarrays / primitives, with qualified
+    names as the last resort for callables."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        h.update(type(obj).__name__.encode())
+        for f in dataclasses.fields(obj):
+            h.update(f.name.encode())
+            _canon(getattr(obj, f.name), h)
+    elif isinstance(obj, np.ndarray):
+        h.update(str(obj.dtype).encode())
+        h.update(str(obj.shape).encode())
+        h.update(np.ascontiguousarray(obj).tobytes())
+    elif isinstance(obj, (list, tuple)):
+        h.update(b"[")
+        for it in obj:
+            _canon(it, h)
+        h.update(b"]")
+    elif isinstance(obj, dict):
+        h.update(b"{")
+        for k in sorted(obj):
+            h.update(str(k).encode())
+            _canon(obj[k], h)
+        h.update(b"}")
+    elif isinstance(obj, (bool, int, float, str, bytes)) or obj is None:
+        h.update(repr(obj).encode())
+    else:
+        h.update(
+            getattr(obj, "__qualname__", type(obj).__qualname__).encode()
+        )
+
+
+def _fingerprint(*parts) -> bytes:
+    h = hashlib.sha256()
+    for p in parts:
+        _canon(p, h)
+    return h.digest()
+
+
+class _SweepCheckpointer:
+    """Sweep state through CheckpointManager, keyed by an argument hash.
+
+    Flat payload schema (``//``-joined keys, via restore_flat):
+      meta//fingerprint      sha256 of (specs, solver params) as uint8
+      meta//c_o              (N,) calibrated abstract costs, batch order
+      meta//pending_idx/_smax  current round's unprocessed queue
+      meta//next_idx/_smax     next round's regrow queue
+      done//<idx>//{policy,g,h,iterations,span,converged,smax,c_o,ev,mu}
+    """
+
+    def __init__(self, directory, fingerprint: bytes, keep_last_k: int):
+        from repro.checkpoint import CheckpointManager
+
+        self.dir = directory
+        self.mgr = CheckpointManager(directory, keep_last_k=keep_last_k)
+        self.fp = fingerprint
+        self.step = 0
+
+    def load(self) -> Optional[dict]:
+        step = self.mgr.latest_step()
+        if step is None:
+            return None
+        flat = self.mgr.restore_flat()
+        if bytes(bytearray(flat["meta//fingerprint"])) != self.fp:
+            raise ValueError(
+                f"checkpoint in {self.dir} was written by a different sweep "
+                "(the specs or solver parameters changed); pass a fresh "
+                "checkpoint_dir or re-run with the original arguments"
+            )
+        self.step = step + 1
+        return flat
+
+    def save(self, tree: dict) -> None:
+        # async: the fsync+rename overlaps the next chunk's solve (the host
+        # copy is taken synchronously, so later mutation is safe); wait()
+        # is the commit barrier before SweepPreempted / return
+        tree["meta"]["fingerprint"] = np.frombuffer(self.fp, dtype=np.uint8)
+        self.mgr.save(self.step, tree, async_=True)
+        self.step += 1
+
+    def wait(self) -> None:
+        self.mgr.wait()
+
+
+def _round_plan(
+    pending: List[tuple], chunk_size: Optional[int]
+) -> List[List[tuple]]:
+    """Chunked processing plan for one sweep round.
+
+    Items are (idx, spec, ...) tuples.  Groups by truncation level
+    (ascending), stably sorts each group along (rho, w2) — restored queues
+    arrive pre-sorted, so ties keep their saved order — and splits groups
+    into consecutive chunks.  The resume invariant rides on this shape: the
+    unprocessed remainder of a round is a suffix of the flattened plan, and
+    re-planning a suffix reproduces the same chunk boundaries."""
+    plan: List[List[tuple]] = []
+    for s_max in sorted({it[1].s_max for it in pending}):
+        group = [it for it in pending if it[1].s_max == s_max]
+        group.sort(key=lambda it: (it[1].rho, it[1].w2))
+        step = len(group) if chunk_size is None else int(chunk_size)
+        for k in range(0, len(group), step):
+            plan.append(group[k : k + step])
+    return plan
+
+
+def _nan_eval(n_states: int) -> PolicyEval:
+    """Placeholder eval for rows the guard ladder could not heal."""
+    nan = float("nan")
+    return PolicyEval(
+        g=nan,
+        delta=nan,
+        w_bar=nan,
+        p_bar=nan,
+        mu=np.full(n_states, np.nan),
+        mean_batch=nan,
+        throughput=nan,
+    )
+
+
+def _eval_healthy(
+    batch,
+    policies: np.ndarray,
+    healthy: np.ndarray,
+    batched_eval: Callable,
+    n_states: Callable[[SMDPSpec], int],
+) -> List[PolicyEval]:
+    """Evaluate only ladder-healthy rows; failed rows get NaN placeholders.
+
+    evaluate_* rejects the garbage policies a failed row carries, so those
+    rows are masked out of the batched stationary solve entirely and come
+    back as all-NaN PolicyEvals (the sweep accepts them without regrowing)."""
+    if healthy.all():
+        return batched_eval(batch, policies)
+    evs: List[Optional[PolicyEval]] = [None] * len(healthy)
+    ok = [int(i) for i in np.flatnonzero(healthy)]
+    if ok:
+        sub = batched_eval(batch.take(ok), policies[np.asarray(ok)])
+        for j, e in zip(ok, sub):
+            evs[j] = e
+    return [
+        e if e is not None else _nan_eval(n_states(batch.specs[j]))
+        for j, e in enumerate(evs)
+    ]
+
+
+def _pack_result(res) -> dict:
+    """SolveResult / ModulatedSolveResult -> flat-array checkpoint record."""
+    rvi, ev = res.rvi, res.eval
+    return {
+        "policy": np.asarray(rvi.policy),
+        "g": np.asarray(rvi.g, dtype=np.float64),
+        "h": np.asarray(rvi.h, dtype=np.float64),
+        "iterations": np.asarray(rvi.iterations, dtype=np.int64),
+        "span": np.asarray(rvi.span, dtype=np.float64),
+        "converged": np.asarray(rvi.converged),
+        "smax": np.asarray(res.spec.s_max, dtype=np.int64),
+        "c_o": np.asarray(res.spec.c_o, dtype=np.float64),
+        "ev": np.asarray(
+            [ev.g, ev.delta, ev.w_bar, ev.p_bar, ev.mean_batch, ev.throughput],
+            dtype=np.float64,
+        ),
+        "mu": np.asarray(ev.mu, dtype=np.float64),
+    }
+
+
+def _unpack_result(flat: dict, idx: int, base_spec: SMDPSpec):
+    """Checkpoint record -> (spec, RVIResult, PolicyEval) for spec ``idx``.
+
+    float64/int64 arrays round-trip npz losslessly, so restored results are
+    bitwise-identical to the in-memory ones the checkpointed run held
+    (wall_time_s excepted — it is not persisted and restores as 0)."""
+    p = f"done//{idx}//"
+    spec = dataclasses.replace(
+        base_spec, s_max=int(flat[p + "smax"]), c_o=float(flat[p + "c_o"])
+    )
+    rvi = RVIResult(
+        policy=flat[p + "policy"],
+        g=float(flat[p + "g"]),
+        h=flat[p + "h"],
+        iterations=int(flat[p + "iterations"]),
+        span=float(flat[p + "span"]),
+        converged=bool(flat[p + "converged"]),
+        wall_time_s=0.0,
+    )
+    e = flat[p + "ev"]
+    ev = PolicyEval(
+        g=float(e[0]),
+        delta=float(e[1]),
+        w_bar=float(e[2]),
+        p_bar=float(e[3]),
+        mu=flat[p + "mu"],
+        mean_batch=float(e[4]),
+        throughput=float(e[5]),
+    )
+    return spec, rvi, ev
+
+
+def _sweep_state(
+    results: list, remaining: list, next_round: list, c_os
+) -> dict:
+    """Checkpoint tree for the sweep loop's full solver state."""
+    meta = {
+        "pending_idx": np.asarray([it[0] for it in remaining], dtype=np.int64),
+        "pending_smax": np.asarray(
+            [it[1].s_max for it in remaining], dtype=np.int64
+        ),
+        "next_idx": np.asarray([it[0] for it in next_round], dtype=np.int64),
+        "next_smax": np.asarray(
+            [it[1].s_max for it in next_round], dtype=np.int64
+        ),
+    }
+    if c_os is not None:
+        meta["c_o"] = np.asarray(c_os, dtype=np.float64)
+    done = {
+        str(i): _pack_result(r) for i, r in enumerate(results) if r is not None
+    }
+    return {"meta": meta, "done": done}
+
+
+def _restored_report(
+    results: list, idxs: List[int], eps: float
+) -> Tuple[SolveReport, List[int]]:
+    """Synthesize a report part for checkpoint-restored specs.
+
+    Health is recomputed from the restored arrays; the rung history of the
+    previous process is not persisted, so restored specs contribute
+    certificates but no rung attribution to the merged report."""
+    span = np.array([results[i].rvi.span for i in idxs])
+    conv = np.array([results[i].rvi.converged for i in idxs])
+    healthy = np.array(
+        [
+            bool(c)
+            and np.isfinite(results[i].rvi.g)
+            and bool(np.isfinite(results[i].rvi.h).all())
+            for i, c in zip(idxs, conv)
+        ],
+        dtype=bool,
+    )
+    rep = SolveReport(
+        eps=eps,
+        span=span,
+        converged=conv,
+        healthy=healthy,
+        failed=[k for k in range(len(idxs)) if not healthy[k]],
+    )
+    return rep, idxs
+
+
 #: below this batch width the anchor pre-solve costs more than it saves
 _WARM_START_MIN = 6
 
@@ -305,6 +638,11 @@ def sweep_solve(
     auto_c_o: bool = True,
     accel: str = "auto",
     backup: str = "banded",
+    guard: bool = True,
+    report_sink: Optional[list] = None,
+    checkpoint_dir: Optional[str] = None,
+    chunk_size: Optional[int] = None,
+    keep_last_k: int = 3,
 ) -> List[SolveResult]:
     """Batched equivalent of solve.solve() over a list of specs.
 
@@ -321,6 +659,23 @@ def sweep_solve(
     the scalar float64 solve() oracle — and stays on the plain lockstep
     path for fast-mixing sweeps where the polish is pure overhead.  Pass
     accel="none"/"mpi"/"anderson" to force a path.
+
+    ``guard`` (default on) runs every batched solve through the rvi
+    guardrail ladder: a NaN/Inf-poisoned or diverging spec is degraded
+    through slower solve paths (and ultimately a per-spec scalar
+    quarantine) instead of failing the whole grid; rows the full ladder
+    cannot heal come back with NaN evals rather than raising.  Healthy
+    batches return bit-identical results either way.  Pass a list as
+    ``report_sink`` to receive one merged rvi.SolveReport for the sweep
+    (per-spec residual certificates + which fallback rungs fired).
+
+    ``checkpoint_dir`` makes the sweep durable: progress is persisted after
+    every ``chunk_size`` specs (default 16) via checkpoint.CheckpointManager,
+    a SIGTERM saves-and-raises SweepPreempted, and re-running the identical
+    call with the same directory resumes — producing bitwise-identical
+    results to a never-interrupted checkpointed run (wall_time_s excepted).
+    A checkpoint written by different specs/parameters is rejected by
+    fingerprint.
     """
     specs = list(specs)
     flags = {sp.buffer is not None for sp in specs}
@@ -349,61 +704,165 @@ def sweep_solve(
     order = sorted(
         range(len(specs)), key=lambda i: (specs[i].rho, specs[i].w2)
     )
-    prebuilt = None
-    if auto_c_o:
-        probe_batch = build_smdp_batched(
-            [dataclasses.replace(specs[i], c_o=0.0) for i in order]
+    ckpt = state = None
+    if checkpoint_dir is not None:
+        if chunk_size is None:
+            chunk_size = _DEFAULT_CHUNK
+        ckpt = _SweepCheckpointer(
+            checkpoint_dir,
+            _fingerprint(
+                specs,
+                dict(
+                    kind="sweep_solve",
+                    eps=eps,
+                    max_iter=max_iter,
+                    delta=delta,
+                    grow_factor=grow_factor,
+                    max_s_max=max_s_max,
+                    auto_c_o=auto_c_o,
+                    accel=accel,
+                    backup=backup,
+                    guard=guard,
+                    chunk_size=chunk_size,
+                ),
+            ),
+            keep_last_k,
         )
-        prebuilt = probe_batch.with_c_o(_greedy_c_o(probe_batch))
-        pending = list(zip(order, prebuilt.specs))
-    else:
-        pending = [(i, specs[i]) for i in order]
-    rvi_kw = dict(accel=accel, backup=backup)
-    results: List[SolveResult] = [None] * len(specs)  # type: ignore[list-item]
-    while pending:
-        # group by truncation level: re-grown specs share their new s_max
-        levels = sorted({sp.s_max for _, sp in pending})
-        still_pending = []
-        for s_max in levels:
-            group = [(i, sp) for i, sp in pending if sp.s_max == s_max]
-            group.sort(key=lambda t: (t[1].rho, t[1].w2))
-            if (
-                prebuilt is not None
-                and len(group) == prebuilt.n_specs
-                and all(a is b for (_, a), b in zip(group, prebuilt.specs))
-            ):
-                batch = prebuilt
-            else:
-                batch = build_smdp_batched([sp for _, sp in group])
-            rvi = relative_value_iteration_batched(
-                batch,
-                eps=eps,
-                max_iter=max_iter,
-                h0=_anchor_warm_start(batch, eps, max_iter, **rvi_kw),
-                **rvi_kw,
+        state = ckpt.load()
+    prebuilt = c_os = None
+    if auto_c_o:
+        if state is not None:
+            c_os = state["meta//c_o"]
+            base = [
+                dataclasses.replace(specs[i], c_o=float(c))
+                for i, c in zip(order, c_os)
+            ]
+        else:
+            probe_batch = build_smdp_batched(
+                [dataclasses.replace(specs[i], c_o=0.0) for i in order]
             )
-            evs = evaluate_policy_batched(batch, rvi.policies)
-            for row, (idx, sp) in enumerate(group):
-                ev = evs[row]
-                if delta is None or ev.delta < delta or sp.s_max >= max_s_max:
-                    results[idx] = SolveResult(
-                        spec=sp, rvi=rvi.unstack(row), eval=ev
+            c_os = _greedy_c_o(probe_batch)
+            patched = probe_batch.with_c_o(c_os)
+            base = list(patched.specs)
+            if ckpt is None:
+                # resumable runs always rebuild chunk batches from specs,
+                # so a resumed first round matches the one-shot bit-for-bit
+                prebuilt = patched
+    else:
+        base = [specs[i] for i in order]
+    pending = list(zip(order, base))
+    results: List[SolveResult] = [None] * len(specs)  # type: ignore[list-item]
+    report_parts: List[Tuple[SolveReport, List[int]]] = []
+    next_round: List[tuple] = []
+    if state is not None:
+        base_by_idx = dict(pending)
+        done_idxs = sorted(
+            {int(k.split("//")[1]) for k in state if k.startswith("done//")}
+        )
+        for idx in done_idxs:
+            sp, rvi, ev = _unpack_result(state, idx, base_by_idx[idx])
+            results[idx] = SolveResult(spec=sp, rvi=rvi, eval=ev)
+        if guard and done_idxs:
+            report_parts.append(_restored_report(results, done_idxs, eps))
+        pending = [
+            (int(i), dataclasses.replace(base_by_idx[int(i)], s_max=int(s)))
+            for i, s in zip(
+                state["meta//pending_idx"], state["meta//pending_smax"]
+            )
+        ]
+        next_round = [
+            (int(i), dataclasses.replace(base_by_idx[int(i)], s_max=int(s)))
+            for i, s in zip(state["meta//next_idx"], state["meta//next_smax"])
+        ]
+    rvi_kw = dict(accel=accel, backup=backup)
+    preempt = _PreemptGuard(ckpt is not None)
+    try:
+        while pending or next_round:
+            if not pending:
+                pending, next_round = next_round, []
+            plan = _round_plan(pending, chunk_size)
+            for ci, chunk in enumerate(plan):
+                if (
+                    prebuilt is not None
+                    and len(chunk) == prebuilt.n_specs
+                    and all(
+                        a is b for (_, a), b in zip(chunk, prebuilt.specs)
+                    )
+                ):
+                    batch = prebuilt
+                else:
+                    batch = build_smdp_batched([sp for _, sp in chunk])
+                rvi = relative_value_iteration_batched(
+                    batch,
+                    eps=eps,
+                    max_iter=max_iter,
+                    h0=_anchor_warm_start(batch, eps, max_iter, **rvi_kw),
+                    guard=guard,
+                    **rvi_kw,
+                )
+                if rvi.report is not None:
+                    healthy = rvi.report.healthy
+                    report_parts.append(
+                        (rvi.report, [idx for idx, _ in chunk])
                     )
                 else:
-                    still_pending.append(
-                        (
-                            idx,
-                            dataclasses.replace(
-                                sp,
-                                s_max=min(
-                                    int(np.ceil(sp.s_max * grow_factor)),
-                                    max_s_max,
-                                ),
-                            ),
+                    healthy = np.ones(len(chunk), dtype=bool)
+                evs = _eval_healthy(
+                    batch,
+                    rvi.policies,
+                    healthy,
+                    evaluate_policy_batched,
+                    lambda sp: sp.s_max + 1,
+                )
+                for row, (idx, sp) in enumerate(chunk):
+                    ev = evs[row]
+                    if not healthy[row]:
+                        # ladder-exhausted row: keep the NaN-flagged result
+                        # (growing the truncation cannot heal divergence)
+                        results[idx] = SolveResult(
+                            spec=sp, rvi=rvi.unstack(row), eval=ev
                         )
+                    elif (
+                        delta is None
+                        or ev.delta < delta
+                        or sp.s_max >= max_s_max
+                    ):
+                        results[idx] = SolveResult(
+                            spec=sp, rvi=rvi.unstack(row), eval=ev
+                        )
+                    else:
+                        next_round.append(
+                            (
+                                idx,
+                                dataclasses.replace(
+                                    sp,
+                                    s_max=min(
+                                        int(np.ceil(sp.s_max * grow_factor)),
+                                        max_s_max,
+                                    ),
+                                ),
+                            )
+                        )
+                if ckpt is not None:
+                    remaining = [it for ch in plan[ci + 1 :] for it in ch]
+                    ckpt.save(
+                        _sweep_state(results, remaining, next_round, c_os)
                     )
-        prebuilt = None
-        pending = still_pending
+                    if preempt.hit and (remaining or next_round):
+                        ckpt.wait()  # the named step must be durable
+                        raise SweepPreempted(checkpoint_dir, ckpt.step - 1)
+            prebuilt = None
+            pending, next_round = next_round, []
+    finally:
+        preempt.restore()
+        if ckpt is not None:
+            ckpt.wait()
+    if report_sink is not None:
+        report_sink.append(
+            SolveReport.merged(report_parts, len(specs), eps)
+            if report_parts
+            else _restored_report(results, list(range(len(specs))), eps)[0]
+        )
     return results
 
 
@@ -452,6 +911,11 @@ def sweep_solve_modulated(
     max_s_max: int = 1024,
     auto_c_o: bool = True,
     accel: str = "auto",
+    guard: bool = True,
+    report_sink: Optional[list] = None,
+    checkpoint_dir: Optional[str] = None,
+    chunk_size: Optional[int] = None,
+    keep_last_k: int = 3,
 ) -> List[ModulatedSolveResult]:
     """Batched exact MMPP-aware solves over aligned (spec, phases) pairs.
 
@@ -468,6 +932,11 @@ def sweep_solve_modulated(
     ``specs``.  ``max_s_max`` defaults lower than the scalar sweep: the
     product chain is K x larger per state and the exact solves are meant
     for policy tables, not tail asymptotics.
+
+    ``guard`` / ``report_sink`` / ``checkpoint_dir`` / ``chunk_size`` /
+    ``keep_last_k`` behave exactly as in sweep_solve: guardrail-laddered
+    solves by default, and with a checkpoint_dir the sweep is durable,
+    SIGTERM-preemptible, and resumes bitwise-identically.
     """
     specs = list(specs)
     if not specs:
@@ -485,68 +954,178 @@ def sweep_solve_modulated(
     order = sorted(
         range(len(specs)), key=lambda i: (specs[i].rho, specs[i].w2)
     )
-    prebuilt = None
-    if auto_c_o:
-        probe = build_smdp_modulated_batched(
-            [dataclasses.replace(specs[i], c_o=0.0) for i in order],
-            [phases[i] for i in order],
-        )
-        prebuilt = probe.with_c_o(_greedy_c_o_modulated(probe))
-        pending = [
-            (i, sp, phases[i]) for i, sp in zip(order, prebuilt.specs)
-        ]
-    else:
-        pending = [(i, specs[i], phases[i]) for i in order]
-    rvi_kw = dict(accel=accel)
-    results: List[ModulatedSolveResult] = [None] * len(specs)  # type: ignore[list-item]
-    while pending:
-        levels = sorted({sp.s_max for _, sp, _ in pending})
-        still_pending = []
-        for s_max in levels:
-            group = [(i, sp, ph) for i, sp, ph in pending if sp.s_max == s_max]
-            group.sort(key=lambda t: (t[1].rho, t[1].w2))
-            if (
-                prebuilt is not None
-                and len(group) == prebuilt.n_specs
-                and all(a is b for (_, a, _), b in zip(group, prebuilt.specs))
-            ):
-                mbatch = prebuilt
-            else:
-                mbatch = build_smdp_modulated_batched(
-                    [sp for _, sp, _ in group], [ph for _, _, ph in group]
-                )
-            rvi = relative_value_iteration_modulated(
-                mbatch,
-                eps=eps,
-                max_iter=max_iter,
-                h0=_anchor_warm_start_modulated(
-                    mbatch, eps, max_iter, **rvi_kw
+    ckpt = state = None
+    if checkpoint_dir is not None:
+        if chunk_size is None:
+            chunk_size = _DEFAULT_CHUNK
+        ckpt = _SweepCheckpointer(
+            checkpoint_dir,
+            _fingerprint(
+                specs,
+                phases,
+                dict(
+                    kind="sweep_solve_modulated",
+                    eps=eps,
+                    max_iter=max_iter,
+                    delta=delta,
+                    grow_factor=grow_factor,
+                    max_s_max=max_s_max,
+                    auto_c_o=auto_c_o,
+                    accel=accel,
+                    guard=guard,
+                    chunk_size=chunk_size,
                 ),
-                **rvi_kw,
+            ),
+            keep_last_k,
+        )
+        state = ckpt.load()
+    prebuilt = c_os = None
+    if auto_c_o:
+        if state is not None:
+            c_os = state["meta//c_o"]
+            base = [
+                dataclasses.replace(specs[i], c_o=float(c))
+                for i, c in zip(order, c_os)
+            ]
+        else:
+            probe = build_smdp_modulated_batched(
+                [dataclasses.replace(specs[i], c_o=0.0) for i in order],
+                [phases[i] for i in order],
             )
-            evs = evaluate_policy_modulated_batched(mbatch, rvi.policies)
-            for row, (idx, sp, ph) in enumerate(group):
-                ev = evs[row]
-                if delta is None or ev.delta < delta or sp.s_max >= max_s_max:
-                    results[idx] = ModulatedSolveResult(
-                        spec=sp, phases=ph, rvi=rvi.unstack(row), eval=ev
+            c_os = _greedy_c_o_modulated(probe)
+            patched = probe.with_c_o(c_os)
+            base = list(patched.specs)
+            if ckpt is None:
+                prebuilt = patched
+    else:
+        base = [specs[i] for i in order]
+    pending = [(i, sp, phases[i]) for i, sp in zip(order, base)]
+    results: List[ModulatedSolveResult] = [None] * len(specs)  # type: ignore[list-item]
+    report_parts: List[Tuple[SolveReport, List[int]]] = []
+    next_round: List[tuple] = []
+    if state is not None:
+        base_by_idx = {i: sp for i, sp, _ in pending}
+        done_idxs = sorted(
+            {int(k.split("//")[1]) for k in state if k.startswith("done//")}
+        )
+        for idx in done_idxs:
+            sp, rvi, ev = _unpack_result(state, idx, base_by_idx[idx])
+            results[idx] = ModulatedSolveResult(
+                spec=sp, phases=phases[idx], rvi=rvi, eval=ev
+            )
+        if guard and done_idxs:
+            report_parts.append(_restored_report(results, done_idxs, eps))
+        pending = [
+            (
+                int(i),
+                dataclasses.replace(base_by_idx[int(i)], s_max=int(s)),
+                phases[int(i)],
+            )
+            for i, s in zip(
+                state["meta//pending_idx"], state["meta//pending_smax"]
+            )
+        ]
+        next_round = [
+            (
+                int(i),
+                dataclasses.replace(base_by_idx[int(i)], s_max=int(s)),
+                phases[int(i)],
+            )
+            for i, s in zip(state["meta//next_idx"], state["meta//next_smax"])
+        ]
+    rvi_kw = dict(accel=accel)
+    preempt = _PreemptGuard(ckpt is not None)
+    try:
+        while pending or next_round:
+            if not pending:
+                pending, next_round = next_round, []
+            plan = _round_plan(pending, chunk_size)
+            for ci, chunk in enumerate(plan):
+                if (
+                    prebuilt is not None
+                    and len(chunk) == prebuilt.n_specs
+                    and all(
+                        a is b for (_, a, _), b in zip(chunk, prebuilt.specs)
+                    )
+                ):
+                    mbatch = prebuilt
+                else:
+                    mbatch = build_smdp_modulated_batched(
+                        [sp for _, sp, _ in chunk],
+                        [ph for _, _, ph in chunk],
+                    )
+                rvi = relative_value_iteration_modulated(
+                    mbatch,
+                    eps=eps,
+                    max_iter=max_iter,
+                    h0=_anchor_warm_start_modulated(
+                        mbatch, eps, max_iter, **rvi_kw
+                    ),
+                    guard=guard,
+                    **rvi_kw,
+                )
+                if rvi.report is not None:
+                    healthy = rvi.report.healthy
+                    report_parts.append(
+                        (rvi.report, [idx for idx, _, _ in chunk])
                     )
                 else:
-                    still_pending.append(
-                        (
-                            idx,
-                            dataclasses.replace(
-                                sp,
-                                s_max=min(
-                                    int(np.ceil(sp.s_max * grow_factor)),
-                                    max_s_max,
-                                ),
-                            ),
-                            ph,
+                    healthy = np.ones(len(chunk), dtype=bool)
+                evs = _eval_healthy(
+                    mbatch,
+                    rvi.policies,
+                    healthy,
+                    evaluate_policy_modulated_batched,
+                    lambda sp: mbatch.n_phases * (sp.s_max + 1),
+                )
+                for row, (idx, sp, ph) in enumerate(chunk):
+                    ev = evs[row]
+                    if not healthy[row]:
+                        results[idx] = ModulatedSolveResult(
+                            spec=sp, phases=ph, rvi=rvi.unstack(row), eval=ev
                         )
+                    elif (
+                        delta is None
+                        or ev.delta < delta
+                        or sp.s_max >= max_s_max
+                    ):
+                        results[idx] = ModulatedSolveResult(
+                            spec=sp, phases=ph, rvi=rvi.unstack(row), eval=ev
+                        )
+                    else:
+                        next_round.append(
+                            (
+                                idx,
+                                dataclasses.replace(
+                                    sp,
+                                    s_max=min(
+                                        int(np.ceil(sp.s_max * grow_factor)),
+                                        max_s_max,
+                                    ),
+                                ),
+                                ph,
+                            )
+                        )
+                if ckpt is not None:
+                    remaining = [it for ch in plan[ci + 1 :] for it in ch]
+                    ckpt.save(
+                        _sweep_state(results, remaining, next_round, c_os)
                     )
-        prebuilt = None
-        pending = still_pending
+                    if preempt.hit and (remaining or next_round):
+                        ckpt.wait()  # the named step must be durable
+                        raise SweepPreempted(checkpoint_dir, ckpt.step - 1)
+            prebuilt = None
+            pending, next_round = next_round, []
+    finally:
+        preempt.restore()
+        if ckpt is not None:
+            ckpt.wait()
+    if report_sink is not None:
+        report_sink.append(
+            SolveReport.merged(report_parts, len(specs), eps)
+            if report_parts
+            else _restored_report(results, list(range(len(specs))), eps)[0]
+        )
     return results
 
 

@@ -210,6 +210,10 @@ class CompiledResult:
     latencies: Optional[np.ndarray] = None  # (n_served,) in service order
     # adaptive lane only: final controller carry (engine state sync)
     adaptive_state: Optional[dict] = None
+    # managed-queue lane (buffer= / shed_expired=) only:
+    n_shed: int = 0  # arrivals refused by the finite waiting room
+    n_expired: int = 0  # queued requests shed past their deadline
+    queue_slots: Optional[np.ndarray] = None  # surviving queue, slot idxs
 
     @property
     def batch_sizes(self) -> np.ndarray:
@@ -323,8 +327,10 @@ class AdaptiveLane:
 
 def _scan_core(
     table, arrivals, deadlines, phases, beliefs, draws, means, zeta, edges,
-    t0, horizon, max_eps, drain, b_max, adap=None,
+    t0, horizon, max_eps, drain, b_max, adap=None, buffer_cap=None,
+    shed=None,
     *, n_steps: int, record: bool, mix: bool = False, adaptive: bool = False,
+    qman: bool = False,
 ):
     """The event kernel: one scan step == one admission OR one epoch.
 
@@ -352,6 +358,20 @@ def _scan_core(
         `scheduler.AdaptiveController._maybe_retune` — so the bank
         retunes live inside the scan.  ``adap`` packs the lowered
         constants + initial state (`AdaptiveLane.carry()`).
+      * ``qman=True`` — managed-queue lane for admission shedding: the
+        carry gains an explicit admitted-slot queue (an index array plus
+        head/tail pointers) because refusals and expiry breaks the plain
+        ``arrivals[n_served:n_admitted]`` window contiguity.  Arrivals
+        beyond ``buffer_cap`` queued requests are refused at the door
+        (never observed by the adaptive estimator — the Python engine's
+        offered-vs-admitted discipline), and with ``shed`` set every
+        decision is preceded by dropping the expired *prefix* of the
+        queue (deadlines must be nondecreasing in arrival order, which
+        ``deadline = arrival + slo`` guarantees; the wrapper checks).  A
+        step sheds at most ``_ADMIT_W`` expired requests; if more remain
+        the step is a pure shed step — no decision epoch, clock
+        unchanged — and the next step continues, so the eventual decide
+        sees the fully swept queue exactly as the Python loop does.
 
     Two throughput-critical choices:
 
@@ -383,7 +403,7 @@ def _scan_core(
          ad_min_gap, ad_init_est, ad_state0) = adap
 
     def step(carry, _):
-        (t, n_srv, n_adm, n_bat, n_eps, n_used, done), ad = carry
+        (t, n_srv, n_adm, n_bat, n_eps, n_used, done), ad, qm = carry
         active = jnp.logical_not(done) & (n_eps < max_eps)
         # arrivals due by `now` are admitted before any decision is taken,
         # up to _ADMIT_W per step (they are a prefix of the sorted window;
@@ -393,7 +413,26 @@ def _scan_core(
         n_due = jnp.sum(window <= t).astype(i64)
         admit = active & (n_due > 0)
         dec = active & ~admit
-        q = n_adm - n_srv
+        if qman:
+            adm_idx, head, tail, last_adm, n_shd, n_exp = qm
+            # door admission, one arrival at a time in time order: a
+            # refusal checks the *running* queue length, exactly the
+            # Python loop's per-arrival `len(queue) >= buffer`
+            takes = []
+            for j in range(_ADMIT_W):
+                m = admit & (j < n_due)
+                refuse = m & (tail - head >= buffer_cap)
+                take = m & ~refuse
+                adm_idx = adm_idx.at[jnp.where(take, tail, size)].set(
+                    (n_adm + j).astype(jnp.int32), mode="drop"
+                )
+                tail = tail + take.astype(i64)
+                n_shd = n_shd + refuse.astype(i64)
+                last_adm = jnp.where(take, n_adm + j, last_adm)
+                takes.append(take)
+            q = tail - head
+        else:
+            q = n_adm - n_srv
         if adaptive:
             # fold each admitted arrival of this step into the controller
             # state, in time order — an unrolled masked pass over the
@@ -402,7 +441,9 @@ def _scan_core(
             gap_bar, have_gb, last_obs, have_last, sel, last_sw, n_sw = ad
             for j in range(_ADMIT_W):
                 t_j = window[j]
-                m = admit & (j < n_due)
+                # refused arrivals are never observed (observe_arrival
+                # runs on admission only in the Python engine)
+                m = takes[j] if qman else admit & (j < n_due)
                 gap = jnp.maximum(t_j - last_obs, ad_min_gap)
                 upd = m & have_last
                 gb_new = jnp.where(
@@ -433,10 +474,27 @@ def _scan_core(
             tab_kl = table[sel]  # the live bank entry, (K, L)
         else:
             tab_kl = table
+        if qman:
+            # expired-prefix sweep before the decision (deadlines are
+            # nondecreasing in admission order, so expired requests are a
+            # queue prefix); any shedding makes this a pure shed step —
+            # the decision waits for the next step, clock unchanged
+            e = jnp.asarray(0, dtype=i64)
+            chain = dec & shed
+            for j in range(_ADMIT_W):
+                idx = adm_idx[jnp.clip(head + j, 0, size - 1)]
+                chain = chain & (j < q) & (deadlines[idx] <= t)
+                e = e + chain.astype(i64)
+            dec_eff = dec & (e == 0)
+        else:
+            dec_eff = dec
         # phase of the last admitted arrival (before any admission this
         # reads the first arrival's phase; the queue is empty there, so
         # the decision is a forced wait whatever the row)
-        last_i = jnp.clip(n_adm - 1, 0, size - 1)
+        if qman:
+            last_i = jnp.clip(last_adm, 0, size - 1)
+        else:
+            last_i = jnp.clip(n_adm - 1, 0, size - 1)
         if mix:
             # belief-mixture action: posterior-weighted blend of the
             # per-phase actions, rounded — BeliefPhaseScheduler(mode="mix")
@@ -447,40 +505,64 @@ def _scan_core(
             a = tab_kl[phases[last_i], jnp.minimum(q, L - 1)]
         a = jnp.clip(a, 0, jnp.minimum(q, b_max))
         live = jnp.isfinite(nxt)
-        wait = dec & (a == 0) & live
-        term = dec & (a == 0) & ~live & ((q == 0) | ~drain)
+        wait = dec_eff & (a == 0) & live
+        term = dec_eff & (a == 0) & ~live & ((q == 0) | ~drain)
         a = jnp.where(
-            dec & (a == 0) & ~live & ~term, jnp.minimum(q, b_max), a
+            dec_eff & (a == 0) & ~live & ~term, jnp.minimum(q, b_max), a
         )
-        serve = dec & ~wait & ~term
+        serve = dec_eff & ~wait & ~term
         a = a * serve
         svc = means[a] * draws[jnp.minimum(n_bat, n_draws - 1)]
         t_done = t + svc
         t_next = jnp.where(wait, nxt, jnp.where(serve, t_done, t))
+        if qman:
+            qm = (adm_idx, head + e + a, tail, last_adm, n_shd, n_exp + e)
         carry = ((
             t_next,
             n_srv + a,
             n_adm + jnp.where(admit, n_due, 0),
             n_bat + serve.astype(i64),
-            n_eps + dec.astype(i64),
+            n_eps + dec_eff.astype(i64),
             n_used + active.astype(i64),
             done | term,
-        ), ad)
+        ), ad, qm)
         # (a > 0) <=> serve, so the aggregate path only needs (a, t_done) —
         # energy is summed from a_seq after the scan; the decision flag is
         # recorded only for the equivalence harness
         a32 = a.astype(jnp.int32)
-        return carry, ((a32, dec, t_done) if record else (a32, t_done))
+        if qman:
+            e32 = e.astype(jnp.int32)
+            return carry, (
+                (a32, e32, dec_eff, t_done) if record else (a32, e32, t_done)
+            )
+        return carry, ((a32, dec_eff, t_done) if record else (a32, t_done))
 
     zero = jnp.asarray(0, dtype=i64)
+    qm0 = (
+        (
+            jnp.zeros(size, dtype=jnp.int32),  # admitted-slot queue
+            zero,  # head: served + expired
+            zero,  # tail: admitted
+            jnp.asarray(-1, dtype=i64),  # last admitted arrival slot
+            zero,  # door refusals
+            zero,  # expired sheds
+        )
+        if qman
+        else None
+    )
     carry0 = ((
         jnp.asarray(t0, dtype=jnp.float64),
         zero, zero, zero, zero, zero,
         jnp.asarray(False),
-    ), ad_state0 if adaptive else None)
+    ), ad_state0 if adaptive else None, qm0)
     carry, outs = jax.lax.scan(step, carry0, None, length=n_steps, unroll=4)
-    a_seq, tdone_seq = (outs[0], outs[2]) if record else outs
-    (t, n_srv, n_adm, n_bat, n_eps, n_used, done), ad_final = carry
+    if qman:
+        a_seq, e_seq, tdone_seq = (
+            (outs[0], outs[1], outs[3]) if record else outs
+        )
+    else:
+        a_seq, tdone_seq = (outs[0], outs[2]) if record else outs
+    (t, n_srv, n_adm, n_bat, n_eps, n_used, done), ad_final, qm_final = carry
 
     # --- vectorized per-request reconstruction (one pass, no scan) -------
     # request slot j was completed by the serve step whose request interval
@@ -489,18 +571,40 @@ def _scan_core(
     # its interval start and taking a running max assigns every slot its
     # completing step — O(size) instead of a per-slot binary search.
     energy = jnp.sum(zeta[a_seq])  # zeta[0] forced to 0 by the wrappers
-    cum_a = jnp.cumsum(a_seq.astype(i64))
-    start = jnp.where(a_seq > 0, cum_a - a_seq, size)  # non-serves dropped
-    mark = jnp.zeros(size, dtype=jnp.int32).at[start].max(
-        jnp.arange(n_steps, dtype=jnp.int32), mode="drop"
-    )
-    epoch_of = jax.lax.cummax(mark)
-    completion = tdone_seq[epoch_of]
-    slots = jnp.arange(size)
-    valid = slots < n_srv
-    lat = jnp.where(valid, completion - arrivals, 0.0)
-    lat_sum = jnp.sum(lat)
-    miss = jnp.sum(valid & (completion > deadlines))
+    if qman:
+        # managed-queue lane: the slot space is *admission order* (the
+        # adm_idx queue), and steps consume a (served) + e (expired)
+        # items from its head — a step does one or the other, so a done
+        # slot's covering step tells served from expired apart
+        adm_idx, head, tail, last_adm, n_shd, n_exp = qm_final
+        tot = (a_seq + e_seq).astype(i64)
+        cum = jnp.cumsum(tot)
+        start = jnp.where(tot > 0, cum - tot, size)
+        mark = jnp.zeros(size, dtype=jnp.int32).at[start].max(
+            jnp.arange(n_steps, dtype=jnp.int32), mode="drop"
+        )
+        step_of = jax.lax.cummax(mark)
+        completion = tdone_seq[step_of]
+        slots = jnp.arange(size)
+        arr_o = arrivals[adm_idx]
+        dl_o = deadlines[adm_idx]
+        valid = (slots < head) & (a_seq[step_of] > 0)  # done AND served
+        lat = jnp.where(valid, completion - arr_o, 0.0)
+        lat_sum = jnp.sum(lat)
+        miss = jnp.sum(valid & (completion > dl_o))
+    else:
+        cum_a = jnp.cumsum(a_seq.astype(i64))
+        start = jnp.where(a_seq > 0, cum_a - a_seq, size)  # non-serves drop
+        mark = jnp.zeros(size, dtype=jnp.int32).at[start].max(
+            jnp.arange(n_steps, dtype=jnp.int32), mode="drop"
+        )
+        epoch_of = jax.lax.cummax(mark)
+        completion = tdone_seq[epoch_of]
+        slots = jnp.arange(size)
+        valid = slots < n_srv
+        lat = jnp.where(valid, completion - arrivals, 0.0)
+        lat_sum = jnp.sum(lat)
+        miss = jnp.sum(valid & (completion > deadlines))
     bins = jnp.clip(jnp.searchsorted(edges, lat, side="right"), 0, n_bins + 1)
     hist = jnp.zeros(n_bins + 2, dtype=i64).at[
         jnp.where(valid, bins, 0)
@@ -513,6 +617,13 @@ def _scan_core(
         "incomplete": jnp.logical_not(done) & (n_eps < max_eps),
         "energy": energy, "lat_sum": lat_sum, "slo_miss": miss, "hist": hist,
     }
+    if qman:
+        # shed counters + final queue pointers (engine state sync: the
+        # surviving queue is adm_idx[head:tail], in admission order)
+        agg.update(
+            n_shed=n_shd, n_expired=n_exp,
+            qm_idx=adm_idx, qm_head=head, qm_tail=tail,
+        )
     if adaptive:
         # final controller state (for the engine's post-run state sync)
         gap_bar, have_gb, last_obs, have_last, sel, last_sw, n_sw = ad_final
@@ -521,7 +632,8 @@ def _scan_core(
             ad_have_last=have_last, ad_sel=sel, ad_last_switch=last_sw,
             ad_n_switches=n_sw,
         )
-    return (agg, (a_seq, outs[1], lat, valid)) if record else agg
+    dec_seq = (outs[2] if qman else outs[1]) if record else None
+    return (agg, (a_seq, dec_seq, lat, valid)) if record else agg
 
 
 #: the phase_mode knob shared by simulate_compiled / run_grid / fleet:
@@ -554,14 +666,18 @@ def _coerce_adaptive(adaptive) -> Optional[AdaptiveLane]:
     return AdaptiveLane.from_controller(adaptive)
 
 
-@partial(jax.jit, static_argnames=("n_steps", "record", "mix", "adaptive"))
+@partial(
+    jax.jit,
+    static_argnames=("n_steps", "record", "mix", "adaptive", "qman"),
+)
 def _simulate_jit(table, arrivals, deadlines, phases, beliefs, draws, means,
                   zeta, edges, t0, horizon, max_eps, drain, b_max, adap,
-                  n_steps, record, mix, adaptive):
+                  buffer_cap, shed, n_steps, record, mix, adaptive, qman):
     return _scan_core(
         table, arrivals, deadlines, phases, beliefs, draws, means, zeta,
-        edges, t0, horizon, max_eps, drain, b_max, adap,
+        edges, t0, horizon, max_eps, drain, b_max, adap, buffer_cap, shed,
         n_steps=n_steps, record=record, mix=mix, adaptive=adaptive,
+        qman=qman,
     )
 
 
@@ -582,6 +698,8 @@ def simulate_compiled(
     phase_mode: str = "oracle",
     beliefs=None,
     adaptive=None,
+    buffer: Optional[int] = None,
+    shed_expired: bool = False,
     hist_edges=None,
     record: bool = False,
     max_record_slots: Optional[int] = None,
@@ -614,6 +732,18 @@ def simulate_compiled(
     exact engine state sync.  Composes with any phase_mode (the phase axis
     rows each bank entry).
 
+    ``buffer=B`` bounds the waiting room: arrivals finding B requests
+    queued are refused at the door (counted in ``n_shed``, never observed
+    by the adaptive estimator).  ``shed_expired=True`` drops queued
+    requests whose deadline has passed before every decision epoch
+    (``n_expired``); it requires deadlines nondecreasing in arrival order
+    (``deadline = arrival + slo`` always is).  Either knob switches the
+    kernel to the managed-queue lane (an explicit admitted-slot index
+    queue in the carry) and the result gains ``queue_slots`` — the
+    surviving queue as arrival-slot indices.  Belief lanes compose with
+    ``shed_expired`` but not with ``buffer`` (the posterior folds admitted
+    arrivals only, which a finite room makes decision-dependent).
+
     ``record=True`` materializes per-step trace buffers (actions,
     latencies) sized to the scan length.  That escalation is capped at
     ``max_record_slots`` (default `MAX_RECORD_SLOTS`): beyond it the call
@@ -622,6 +752,19 @@ def simulate_compiled(
     `serving.fleet.FleetStream` / `simulate_fleet_stream` instead.
     """
     lane = _coerce_adaptive(adaptive)
+    if buffer is not None:
+        if buffer < 0:
+            raise ValueError(
+                "buffer must be >= 0 (B = 0 sheds everything)"
+            )
+        if phase_mode != "oracle":
+            raise ValueError(
+                'buffer= composes with phase_mode="oracle" only: belief '
+                "posteriors fold admitted arrivals, and admission under a "
+                "finite waiting room is decision-dependent; run the "
+                "Python backend"
+            )
+    qman = buffer is not None or bool(shed_expired)
     if lane is not None:
         table = lane.tables if table is None else np.asarray(
             table, dtype=np.int64
@@ -692,6 +835,18 @@ def simulate_compiled(
             f"phases outside the table stack [0, {n_phases})"
         )
     n_arr = int(np.sum(np.isfinite(arr)))
+    if shed_expired:
+        # expired requests must form a queue *prefix* (the kernel sheds
+        # from the head): deadlines nondecreasing in arrival order, which
+        # deadline = arrival + slo satisfies by construction.  inf - inf
+        # is NaN and NaN < 0 is False, so all-inf (no-deadline) runs pass.
+        with np.errstate(invalid="ignore"):
+            if np.any(np.diff(dl[:n_arr]) < 0):
+                raise ValueError(
+                    "shed_expired needs deadlines nondecreasing in arrival "
+                    "order (deadline = arrival + slo always is); arbitrary "
+                    "deadline orders run on the Python backend"
+                )
     if max_epochs is None:
         max_eps = 2 * n_arr + 2
     else:
@@ -714,9 +869,13 @@ def simulate_compiled(
     # one scan step per event: admissions + epochs.  Start from the typical
     # count and re-dispatch doubled if the lane ran out of steps (the cap
     # n_arr + max_eps + 1 is a hard upper bound: every step admits one of
-    # n_arr arrivals or consumes one of max_eps epochs).
-    cap = _bucket(n_arr + max_eps + 1)
-    ck = ("single", len(arr), table.shape, cap, mix, lane is not None)
+    # n_arr arrivals or consumes one of max_eps epochs; the managed-queue
+    # lane adds shed steps, each dropping >= 1 of at most n_arr requests).
+    cap = _bucket((2 if qman else 1) * n_arr + max_eps + 1)
+    ck = (
+        "single", len(arr), table.shape, cap, mix, lane is not None,
+        None if buffer is None else int(buffer), bool(shed_expired),
+    )
     n_steps = _initial_steps(ck, n_arr, max_eps, cap)
     bel_j = (
         jnp.zeros((1, 1)) if bel is None else jnp.asarray(bel)
@@ -735,14 +894,17 @@ def simulate_compiled(
                 "O(chunk) memory with serving.fleet.FleetStream / "
                 "simulate_fleet_stream"
             )
+    # no buffer -> a cap the queue can never reach (the door never refuses)
+    buf_cap = len(arr) + 1 if buffer is None else int(buffer)
     while True:
         out = _simulate_jit(
             jnp.asarray(table), jnp.asarray(arr), jnp.asarray(dl),
             jnp.asarray(ph), bel_j, jnp.asarray(draws), jnp.asarray(means),
             jnp.asarray(zeta_a), jnp.asarray(edges),
             float(t0), np.inf if horizon is None else float(horizon),
-            max_eps, bool(drain), int(b_max), adap_j, int(n_steps),
-            bool(record), mix, lane is not None,
+            max_eps, bool(drain), int(b_max), adap_j, buf_cap,
+            bool(shed_expired), int(n_steps), bool(record), mix,
+            lane is not None, qman,
         )
         agg = out[0] if record else out
         if n_steps >= cap or not bool(agg["incomplete"]):
@@ -772,6 +934,12 @@ def simulate_compiled(
         hist=agg["hist"],
         hist_edges=edges,
     )
+    if qman:
+        res.n_shed = int(agg["n_shed"])
+        res.n_expired = int(agg["n_expired"])
+        res.queue_slots = np.asarray(agg["qm_idx"])[
+            int(agg["qm_head"]): int(agg["qm_tail"])
+        ].astype(np.int64)
     if lane is not None:
         res.adaptive_state = {
             "sel": int(agg["ad_sel"]),

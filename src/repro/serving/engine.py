@@ -35,12 +35,16 @@ uninterrupted run exactly, in every arrival mode.  Energy is accounted
 whenever a source is available: a zeta(a) `energy_table` or a per-batch
 `energy_model(a, service_time)` callback (the executor-mode option).
 
-Degraded-mode admission control (Python backend): ``buffer=B`` bounds the
-waiting room — arrivals beyond B are refused at the door and counted in
+Degraded-mode admission control: ``buffer=B`` bounds the waiting room —
+arrivals beyond B are refused at the door and counted in
 ``EngineReport.n_shed``; ``shed_expired=True`` drops queued requests whose
-deadline has already passed at a decision epoch (``n_expired``).  The
-compiled single-server lane rejects both (the fleet lanes own compiled
-finite buffers: `simulate_fleet(buffer=...)`).
+deadline has already passed at a decision epoch (``n_expired``).  Both run
+on either backend: the compiled kernel switches to a managed-queue lane
+(an explicit admitted-slot queue in the scan carry) when shedding is on,
+decision-for-decision identical to the Python loop via `verify_backends`.
+The one exception is ``buffer=`` with a belief-filtered scheduler, which
+stays on the Python backend — the posterior folds admitted arrivals only,
+and admission under a finite room is decision-dependent.
 """
 from __future__ import annotations
 
@@ -433,12 +437,6 @@ class ServingEngine:
                 "compiled backend accounts energy via energy_table=; "
                 "per-batch energy_model callbacks need backend='python'"
             )
-        if self.buffer is not None or self.shed_expired:
-            raise NotImplementedError(
-                "admission shedding (buffer= / shed_expired=) runs on "
-                "backend='python'; the compiled fleet lanes cover finite "
-                "waiting rooms (simulate_fleet(buffer=...))"
-            )
         # online-adaptive schedulers lower to the compiled belief/adaptive
         # lanes: the bank-retuning controller runs inside the scan carry
         # (AdaptiveLane), the phase posterior is precomputed per trace
@@ -472,6 +470,14 @@ class ServingEngine:
                         f"{type(sched).__name__} has a phase-indexed "
                         "table but no phase_at(times); run backend='python'"
                     )
+        if self.buffer is not None and belief_filter is not None:
+            raise NotImplementedError(
+                "buffer= with a belief-filtered scheduler needs "
+                "backend='python': the posterior folds admitted arrivals "
+                "only, and admission under a finite waiting room is "
+                "decision-dependent (the compiled lane precomputes the "
+                "posterior per arrival)"
+            )
         means = np.asarray(
             [0.0]
             + [float(self.service.mean(b)) for b in range(1, self.b_max + 1)]
@@ -528,6 +534,7 @@ class ServingEngine:
                 b_max=self.b_max, max_epochs=budget, t0=t0,
                 horizon=horizon, drain=drain, deadlines=deadlines,
                 phases=ph, phase_mode=pm, beliefs=bel, adaptive=lane,
+                buffer=self.buffer, shed_expired=self.shed_expired,
                 record=True,
             )
             if not (infinite and res.n_admitted >= n_arr):
@@ -547,17 +554,26 @@ class ServingEngine:
         # --- sync engine state so later runs continue the same stream ----
         self.t = res.t_final
         admitted, future = events[: res.n_admitted], events[res.n_admitted:]
+        # surviving queue: without shedding it is exactly the un-served
+        # suffix; the managed-queue lane reports the survivors' slots
+        # (door-refused and expired requests are gone).  rids count every
+        # door-seen arrival either way — the Python loop assigns the rid
+        # at peek, before the buffer check.
+        if res.queue_slots is not None:
+            surv = [int(i) for i in res.queue_slots]
+        else:
+            surv = list(range(res.n_served, len(admitted)))
         if any(ev.rid is not None for ev in admitted):
             reqs = [self._to_request(ev) for ev in admitted]
-            self.queue = reqs[res.n_served:]
+            self.queue = [reqs[i] for i in surv]
         else:
             base = self.next_rid
             self.next_rid = base + len(admitted)
             self.queue = [
                 self._to_request(
-                    dataclasses.replace(ev, rid=base + res.n_served + i)
+                    dataclasses.replace(admitted[i], rid=base + i)
                 )
-                for i, ev in enumerate(admitted[res.n_served:])
+                for i in surv
             ]
         if not isinstance(self.arrivals, TraceProcess):
             self._future = collections.deque(future)
@@ -584,7 +600,8 @@ class ServingEngine:
             est = sched.estimator
             est._gap_bar = st["gap_bar"] if st["have_gap_bar"] else None
             est._last = st["last"] if st["have_last"] else None
-            est.n_observed += res.n_admitted
+            # door-refused arrivals were never observed by the estimator
+            est.n_observed += res.n_admitted - res.n_shed
             sched._last_switch = st["last_switch"]
             sched.n_switches = st["n_switches"]
 
@@ -627,6 +644,8 @@ class ServingEngine:
             mean_batch=mean_batch,
             batch_sizes=res.batch_sizes,
             metrics=metrics,
+            n_shed=res.n_shed,
+            n_expired=res.n_expired,
         )
 
     def run_executor(
@@ -697,6 +716,8 @@ def verify_backends(
     horizon: Optional[float] = None,
     drain: Optional[bool] = None,
     slo: Optional[float] = None,
+    buffer: Optional[int] = None,
+    shed_expired: bool = False,
     phases=None,
     scheduler=None,
     seed: int = 0,
@@ -716,6 +737,11 @@ def verify_backends(
     (OraclePhaseScheduler on the switch log the phase stream implies), the
     compiled side the phase-indexed table lookup — the acceptance gate for
     exact-modulated / oracle policies on the compiled backend.
+
+    ``buffer=`` / ``shed_expired=`` arm the degraded-mode admission path
+    on both backends and additionally assert the refusal and expiry
+    counters match — the acceptance gate for the compiled managed-queue
+    lane.
 
     ``scheduler`` — a zero-argument factory returning a fresh scheduler
     instance per backend — replaces ``table``/``phases`` and certifies
@@ -774,7 +800,7 @@ def verify_backends(
             mk_sched(),
             arrivals=TraceProcess(trace),
             b_max=b_max, service=svc, energy_table=energy_table,
-            slo=slo, seed=seed,
+            slo=slo, buffer=buffer, shed_expired=shed_expired, seed=seed,
         )
 
     rep_py = engine(_ScriptedService(service, draws)).run(
@@ -787,6 +813,8 @@ def verify_backends(
     assert rep_py.n_served == rep_c.n_served
     np.testing.assert_allclose(rep_py.latencies, rep_c.latencies, atol=atol)
     assert rep_py.n_slo_miss == rep_c.n_slo_miss
+    assert rep_py.n_shed == rep_c.n_shed
+    assert rep_py.n_expired == rep_c.n_expired
     if energy_table is not None:
         np.testing.assert_allclose(rep_py.energy, rep_c.energy, atol=atol)
     np.testing.assert_allclose(rep_py.span, rep_c.span, atol=atol)

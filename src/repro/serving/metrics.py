@@ -81,6 +81,26 @@ class P2Quantile:
             return float(np.percentile(self._init, self.q * 100)) if self._init else float("nan")
         return self.heights[2]
 
+    def snapshot(self) -> dict:
+        """Full marker state as arrays (FleetStream's durable carry).
+
+        restore() of a snapshot reproduces the estimator exactly: every
+        subsequent update() computes from bit-identical marker values."""
+        return {
+            "q": np.float64(self.q),
+            "init": np.asarray(self._init, dtype=np.float64),
+            "n": np.asarray(self.n, dtype=np.int64),
+            "ns": np.asarray(self.ns, dtype=np.float64),
+            "heights": np.asarray(self.heights, dtype=np.float64),
+        }
+
+    def restore(self, state: dict) -> None:
+        self.q = float(state["q"])
+        self._init = [float(x) for x in state["init"]]
+        self.n = [int(x) for x in state["n"]]
+        self.ns = [float(x) for x in state["ns"]]
+        self.heights = [float(x) for x in state["heights"]]
+
 
 def histogram_quantiles(counts, edges, qs) -> np.ndarray:
     """Quantiles from a fixed-bin histogram sketch (compiled-kernel side).

@@ -264,6 +264,117 @@ class TestQuantileSketch:
         assert histogram_quantiles(counts, edges, [0.5])[0] == edges[-1]
 
 
+class TestSheddingBackendEquivalence:
+    """Managed-queue lane certification: buffer= / shed_expired= on the
+    compiled backend reproduce the Python loop's refusals, expiry sweeps,
+    decisions and latencies exactly, per arrival mode."""
+
+    @staticmethod
+    def _otrace(mode: str, n: int = 1500) -> np.ndarray:
+        # the plain fixture runs at 0.7x capacity; compress gaps so the
+        # waiting room actually fills and deadlines actually lapse
+        return _trace(mode, n) * 0.55
+
+    @pytest.mark.parametrize("mode", ["poisson", "mmpp2", "trace"])
+    def test_buffer_refusals_identical(self, mode):
+        # the deterministic trace arrives in 3-bursts: only a shallow
+        # room ever refuses there
+        out = verify_backends(
+            TABLE, self._otrace(mode), service=SVC, energy_table=ENERGY,
+            b_max=BMAX, buffer=2 if mode == "trace" else 10,
+        )
+        assert out["python"].n_shed > 0
+        assert out["python"].n_shed == out["compiled"].n_shed
+
+    @pytest.mark.parametrize("mode", ["poisson", "mmpp2", "trace"])
+    def test_expiry_sweeps_identical(self, mode):
+        out = verify_backends(
+            TABLE, self._otrace(mode), service=SVC, energy_table=ENERGY,
+            b_max=BMAX, slo=4.0, shed_expired=True,
+        )
+        assert out["python"].n_expired > 0
+        assert out["python"].n_expired == out["compiled"].n_expired
+
+    @pytest.mark.parametrize("mode", ["poisson", "mmpp2", "trace"])
+    def test_buffer_and_expiry_together(self, mode):
+        verify_backends(
+            TABLE, self._otrace(mode), service=SVC, energy_table=ENERGY,
+            b_max=BMAX, buffer=14, slo=5.0, shed_expired=True,
+        )
+
+    def test_stochastic_service_with_shedding(self):
+        svc = ServiceModel(latency=GOOGLENET_P4_LATENCY, family="expo")
+        verify_backends(
+            TABLE, self._otrace("poisson"), service=svc,
+            energy_table=ENERGY, b_max=BMAX, buffer=12, slo=5.0,
+            shed_expired=True,
+        )
+
+    def test_epoch_budget_and_horizon_with_shedding(self):
+        tr = self._otrace("poisson")
+        verify_backends(
+            TABLE, tr, service=SVC, b_max=BMAX, n_epochs=250, buffer=10,
+            slo=4.0, shed_expired=True,
+        )
+        verify_backends(
+            TABLE, tr, service=SVC, b_max=BMAX,
+            horizon=float(tr[len(tr) // 2]), buffer=10, slo=4.0,
+            shed_expired=True,
+        )
+
+    def test_phase_stack_with_shedding(self):
+        tr = self._otrace("poisson")
+        tabs = np.stack([q_policy(4, 128, BMAX), q_policy(12, 128, BMAX)])
+        ph = (np.arange(len(tr)) // 150) % 2
+        verify_backends(
+            tabs, tr, service=SVC, b_max=BMAX, phases=ph, buffer=16,
+            slo=5.0, shed_expired=True,
+        )
+
+    def test_buffer_zero_starves_both_backends(self):
+        out = verify_backends(
+            TABLE, self._otrace("poisson", 400), service=SVC, b_max=BMAX,
+            buffer=0,
+        )
+        assert out["python"].n_served == out["compiled"].n_served == 0
+        assert out["compiled"].n_shed == 400
+
+    def test_surviving_queue_accounting(self):
+        """queue_slots + counters partition every door-seen arrival."""
+        tr = self._otrace("poisson", 600)
+        res = simulate_compiled(
+            q_policy(20, 128, BMAX), tr,
+            means=np.array(
+                [0.0] + [float(SVC.mean(b)) for b in range(1, BMAX + 1)]
+            ),
+            b_max=BMAX, buffer=40, deadlines=tr + 25.0, shed_expired=True,
+            drain=False, record=True,
+        )
+        assert res.queue_slots is not None
+        assert (
+            res.n_served + res.n_expired + len(res.queue_slots)
+            == res.n_admitted - res.n_shed
+        )
+
+    def test_non_monotone_deadlines_rejected(self):
+        tr = np.arange(1.0, 9.0)
+        dl = tr + np.array([20.0, 16.0, 12.0, 8.0, 4.0, 2.0, 1.0, 0.5])
+        with pytest.raises(ValueError, match="nondecreasing"):
+            simulate_compiled(
+                TABLE, tr, means=np.array([0.0, 1.0]), b_max=1,
+                deadlines=dl, shed_expired=True,
+            )
+
+    def test_belief_mode_with_buffer_rejected(self):
+        with pytest.raises(ValueError, match="belief"):
+            simulate_compiled(
+                np.stack([TABLE, TABLE]), np.arange(1.0, 5.0),
+                means=np.array([0.0, 1.0]), b_max=1, buffer=4,
+                phase_mode="belief_mix",
+                beliefs=np.full((4, 2), 0.5),
+            )
+
+
 class TestGridRunner:
     def test_grid_matches_python_engines(self):
         """One vmapped dispatch == the seeds x tables python loop."""

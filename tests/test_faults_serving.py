@@ -383,11 +383,23 @@ class TestEngineShedding:
         np.testing.assert_array_equal(base.latencies, huge.latencies)
         assert base.n_served == huge.n_served
 
-    def test_compiled_backend_rejects_shedding(self):
-        with pytest.raises(NotImplementedError, match="python"):
-            self._engine(buffer=12).run(100, backend="compiled")
-        with pytest.raises(NotImplementedError, match="python"):
-            self._engine(shed_expired=True).run(100, backend="compiled")
+    def test_compiled_backend_matches_python_shedding(self):
+        """The compiled managed-queue lane reproduces the Python loop's
+        door refusals and expiry sweeps decision-for-decision (this
+        combination used to raise NotImplementedError)."""
+        for kw in (
+            dict(buffer=12),
+            dict(shed_expired=True),
+            dict(buffer=12, shed_expired=True),
+        ):
+            r_py = self._engine(**kw).run(400)
+            r_c = self._engine(**kw).run(400, backend="compiled")
+            np.testing.assert_array_equal(r_py.batch_sizes, r_c.batch_sizes)
+            np.testing.assert_allclose(
+                r_py.latencies, r_c.latencies, atol=1e-9
+            )
+            assert r_py.n_shed == r_c.n_shed
+            assert r_py.n_expired == r_c.n_expired
 
     def test_negative_buffer_rejected(self):
         with pytest.raises(ValueError, match="buffer"):
